@@ -1,0 +1,49 @@
+"""Kernel microbenchmarks: Pallas (interpret on CPU / compiled on TPU) vs the
+XLA-fused jnp reference. On CPU the interesting number is the REF column
+(XLA) — interpret-mode Pallas timing measures the Python interpreter, so we
+report both and flag the backend."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.core import lr_head
+from repro.core.influence import infl_scores as infl_scores_jnp
+from repro.kernels import ops
+from repro.utils.timing import time_fn
+
+
+def run(N: int = 8192, d: int = 2048, C: int = 2) -> list:
+    ks = jax.random.split(jax.random.key(0), 5)
+    Xa = jax.random.normal(ks[0], (N, d + 1))
+    Y = jax.nn.softmax(jax.random.normal(ks[1], (N, C)))
+    w = jax.random.normal(ks[2], (C, d + 1)) * 0.1
+    v = jax.random.normal(ks[3], (C, d + 1)) * 0.1
+    w8 = jnp.ones((N,))
+    P = lr_head.probs(w, Xa)
+    backend = jax.default_backend()
+    rows = []
+
+    pairs = [
+        ("infl_scores", lambda: ops.infl_scores(v, Xa, P, Y, 0.8),
+         jax.jit(lambda: infl_scores_jnp(v, Xa, P, Y, 0.8))),
+        ("lr_grad", lambda: ops.lr_grad(w, Xa, Y, w8, 0.05),
+         jax.jit(lambda: lr_head.grad(w, Xa, Y, w8, 0.05))),
+        ("lr_hvp", lambda: ops.lr_hvp(w, v, Xa, w8, 0.05),
+         jax.jit(lambda: lr_head.hvp(w, v, Xa, w8, 0.05))),
+    ]
+    for name, kfn, rfn in pairs:
+        t_ref = time_fn(rfn, iters=5)
+        flops = 2 * N * (d + 1) * C * (1 if name == "infl_scores" else 2)
+        emit(f"kernel_{name}_ref_xla", t_ref,
+             f"gflops={flops / t_ref / 1e9:.1f};backend={backend}")
+        if backend == "tpu":  # interpret-mode wall time is meaningless
+            t_k = time_fn(kfn, iters=5)
+            emit(f"kernel_{name}_pallas", t_k, f"speedup={t_ref / t_k:.2f}x")
+        rows.append((name, t_ref))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,55 @@
+"""Shared benchmark plumbing: paper-shaped datasets + CSV emission."""
+from __future__ import annotations
+
+import os
+import time
+import zlib
+
+import jax
+
+from repro.configs.chef_lr import ChefConfig
+from repro.data import make_dataset
+
+# 0.1 => ~10% of the paper's dataset sizes (CPU-friendly); set
+# REPRO_BENCH_SCALE=1.0 to run at full Table-3 scale.
+SCALE = float(os.environ.get("REPRO_BENCH_SCALE", "0.1"))
+DATASETS = os.environ.get("REPRO_BENCH_DATASETS", "mimic,fact,twitter").split(",")
+
+_SIZES = {  # Table 3 (train, val, test, feat_dim)
+    "mimic": (78_487, 579, 1_628, 2048),
+    "retina": (31_615, 3_512, 3_000, 2048),
+    "chexpert": (37_882, 234, 234, 2048),
+    "fashion": (29_031, 146, 146, 2048),
+    "fact": (38_176, 255, 259, 768),
+    "twitter": (11_606, 300, 300, 768),
+}
+
+
+def bench_dataset(name: str, scale: float = None):
+    """Paper-shaped synthetic dataset in the 'hard' regime (systematic LF
+    bias, ~15-20% weak-label noise) where cleaning matters."""
+    scale = SCALE if scale is None else scale
+    n, nv, nt, d = _SIZES[name]
+    return make_dataset(
+        jax.random.key(zlib.crc32(name.encode()) % (2**31)),  # stable across processes
+        name=name,
+        n_train=max(1000, int(n * scale)),
+        n_val=max(150, int(nv * max(scale, 0.5))),
+        n_test=max(300, int(nt * max(scale, 0.5))),
+        feature_dim=d,
+        class_sep=1.0 if name != "twitter" else 0.85,
+        noise=1.0,
+        n_lfs=3,
+        lf_acc=(0.45, 0.58) if name != "twitter" else (0.42, 0.52),
+    )
+
+
+def bench_config(**kw) -> ChefConfig:
+    base = dict(budget=100, round_size=10, n_epochs=20, batch_size=2000,
+                lr=0.02, l2=0.05, gamma=0.8)
+    base.update(kw)
+    return ChefConfig(**base)
+
+
+def emit(name: str, seconds: float, derived: str = ""):
+    print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)

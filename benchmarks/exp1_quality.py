@@ -1,0 +1,48 @@
+"""Exp1 (paper Tables 1/5/6): model F1 after cleaning B=100 samples, across
+selector methods, INFL label strategies, and round sizes b in {100, 10}."""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from benchmarks.common import DATASETS, bench_config, bench_dataset, emit
+from repro.core import run_chef, train_head
+from repro.core.pipeline import _evaluate
+
+METHODS = [
+    ("infl_one", "infl", "one"),
+    ("infl_two", "infl", "two"),
+    ("infl_three", "infl", "three"),
+    ("infl_d", "infl_d", "one"),
+    ("infl_y", "infl_y", "three"),
+    ("active_one", "active_one", "one"),
+    ("active_two", "active_two", "one"),
+    ("o2u", "o2u", "one"),
+    ("tars", "tars", "one"),
+    ("random", "random", "one"),
+]
+
+
+def run(datasets=None, round_sizes=(100, 10), gamma: float = 0.8) -> list:
+    rows = []
+    for ds_name in datasets or DATASETS:
+        ds = bench_dataset(ds_name)
+        cfg0 = bench_config(gamma=gamma)
+        w0, _, _ = train_head(ds, cfg0, cache=False)
+        _, f1_unclean = _evaluate(w0, ds)
+        emit(f"exp1_{ds_name}_uncleaned", 0.0, f"f1={f1_unclean:.4f}")
+        rows.append((ds_name, "uncleaned", 0, f1_unclean))
+        for b in round_sizes:
+            for label, method, strategy in METHODS:
+                cfg = dataclasses.replace(cfg0, round_size=b, strategy=strategy)
+                t0 = time.perf_counter()
+                res = run_chef(ds, cfg, method=method, selector="full",
+                               constructor="retrain")
+                dt = time.perf_counter() - t0
+                emit(f"exp1_{ds_name}_{label}_b{b}", dt, f"f1={res.f1_test_final:.4f}")
+                rows.append((ds_name, label, b, res.f1_test_final))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

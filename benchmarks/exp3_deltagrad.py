@@ -1,0 +1,63 @@
+"""Exp3 (paper Figure 2): model-constructor wall time — DeltaGrad-L vs
+Retrain — plus the prediction-equivalence check (Table 1, 'INFL (two) +
+DeltaGrad' column)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import DATASETS, bench_config, bench_dataset, emit
+from repro.core import lr_head, metrics, train_head
+from repro.core.deltagrad import DGConfig, build_correction_schedule, deltagrad_replay
+
+
+def run(datasets=None, b: int = 10, iters: int = 3) -> list:
+    rows = []
+    for ds_name in datasets or DATASETS:
+        ds = bench_dataset(ds_name)
+        cfg = bench_config()
+        w0, traj, sched = train_head(ds, cfg, cache=True)
+        jax.block_until_ready(w0)
+        idx = jnp.arange(b)
+        ds2 = ds.clean(idx, ds.y_true[idx])
+        Xa = lr_head.augment(ds.X)
+        ci, cm = build_correction_schedule(np.asarray(sched), np.asarray(idx))
+        dgc = DGConfig(cfg.dg_burn_in, cfg.dg_period, cfg.dg_history, cfg.lr, cfg.l2)
+
+        # warm both jits
+        w_dg, _ = deltagrad_replay(traj[0], traj[1], sched, Xa, ds.y_prob, ds2.y_prob,
+                                   ds.y_weight, ds2.y_weight, ci, cm, dgc,
+                                   int(sched.shape[1]))
+        jax.block_until_ready(w_dg)
+        w_rt, _, _ = train_head(ds2, cfg, cache=True)
+        jax.block_until_ready(w_rt)
+
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            w_dg, _ = deltagrad_replay(traj[0], traj[1], sched, Xa, ds.y_prob,
+                                       ds2.y_prob, ds.y_weight, ds2.y_weight, ci, cm,
+                                       dgc, int(sched.shape[1]))
+            jax.block_until_ready(w_dg)
+        t_dg = (time.perf_counter() - t0) / iters
+
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            w_rt, _, _ = train_head(ds2, cfg, cache=True)
+            jax.block_until_ready(w_rt)
+        t_rt = (time.perf_counter() - t0) / iters
+
+        Xa_t = lr_head.augment(ds.X_test)
+        f1_dg = float(metrics.f1(jnp.argmax(lr_head.probs(w_dg, Xa_t), -1), ds.y_test, 2))
+        f1_rt = float(metrics.f1(jnp.argmax(lr_head.probs(w_rt, Xa_t), -1), ds.y_test, 2))
+        emit(f"exp3_{ds_name}_deltagrad", t_dg,
+             f"speedup={t_rt / t_dg:.1f}x;f1={f1_dg:.4f};f1_retrain={f1_rt:.4f}")
+        emit(f"exp3_{ds_name}_retrain", t_rt, f"f1={f1_rt:.4f}")
+        rows.append((ds_name, t_dg, t_rt, t_rt / t_dg, f1_dg, f1_rt))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

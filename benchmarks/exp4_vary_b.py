@@ -1,0 +1,28 @@
+"""Exp G.5 (paper Table 14): F1 vs the per-round batch size b at a fixed
+total cleaning budget (paper recommendation: b ~ 10% of the budget)."""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from benchmarks.common import bench_config, bench_dataset, emit
+from repro.core import run_chef
+
+
+def run(dataset: str = "mimic", budget: int = 100,
+        bs=(100, 50, 20, 10)) -> list:
+    ds = bench_dataset(dataset)
+    rows = []
+    for b in bs:
+        cfg = dataclasses.replace(bench_config(), budget=budget, round_size=b,
+                                  strategy="two")
+        t0 = time.perf_counter()
+        res = run_chef(ds, cfg, method="infl", selector="full", constructor="retrain")
+        dt = time.perf_counter() - t0
+        emit(f"exp4_{dataset}_b{b}", dt, f"f1={res.f1_test_final:.4f}")
+        rows.append((b, res.f1_test_final, dt))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

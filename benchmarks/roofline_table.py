@@ -1,0 +1,52 @@
+"""Roofline table assembled from the dry-run artifacts (assignment §Roofline):
+per (arch x shape x mesh): the three terms in seconds, dominant bottleneck,
+MODEL_FLOPS/HLO_FLOPS utilization, peak HBM."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import emit
+
+ART = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def load_cells(mesh: str = "single", tag: str = "") -> list[dict]:
+    cells = []
+    for f in sorted(ART.glob("*.json")):
+        rec = json.loads(f.read_text())
+        if rec.get("mesh") != mesh or rec.get("tag", "") != tag:
+            continue
+        cells.append(rec)
+    return cells
+
+
+def run(mesh: str = "single") -> list:
+    rows = []
+    if not ART.exists():
+        emit("roofline_missing", 0.0, "run python -m repro.launch.dryrun --all first")
+        return rows
+    for rec in load_cells(mesh):
+        name = f"roofline_{rec['arch']}_{rec['shape']}_{mesh}"
+        if rec["status"] == "skipped":
+            emit(name, 0.0, f"skipped:{rec['reason'][:60]}")
+            continue
+        if rec["status"] != "ok":
+            emit(name, 0.0, f"ERROR:{rec.get('error', '?')[:80]}")
+            continue
+        rl = rec["roofline"]
+        dom = max(rl["t_compute"], rl["t_memory"], rl["t_collective"])
+        emit(
+            name,
+            dom,  # seconds of the dominant term = modeled step time
+            f"bottleneck={rl['bottleneck']};tc={rl['t_compute']:.4f};"
+            f"tm={rl['t_memory']:.4f};tx={rl['t_collective']:.4f};"
+            f"useful={rl['useful_flops_frac']:.3f};"
+            f"peakGiB={rec['memory']['peak_hbm_bytes'] / 2**30:.2f}",
+        )
+        rows.append(rec)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,61 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines.
+
+  exp1  Tables 1/5/6 — F1 after cleaning (methods x strategies x b)
+  exp2  Table 2      — Increm-INFL vs Full selection time + exactness
+  exp3  Figure 2     — DeltaGrad-L vs Retrain constructor time
+  exp4  Table 14     — vary per-round batch b
+  kern  (framework)  — kernel microbench
+  roof  (assignment) — roofline table from the dry-run artifacts
+
+Env knobs: REPRO_BENCH_SCALE (default 0.1 of Table-3 sizes),
+REPRO_BENCH_DATASETS (default mimic,fact,twitter).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="", help="comma list: exp1,exp2,exp3,exp4,kern,roof")
+    args = ap.parse_args()
+    want = set(args.only.split(",")) if args.only else None
+
+    from benchmarks import (
+        bench_kernels,
+        exp1_quality,
+        exp2_increm,
+        exp3_deltagrad,
+        exp4_vary_b,
+        roofline_table,
+    )
+
+    suites = [
+        ("exp2", exp2_increm.run),
+        ("exp3", exp3_deltagrad.run),
+        ("exp4", exp4_vary_b.run),
+        ("exp1", exp1_quality.run),
+        ("kern", bench_kernels.run),
+        ("roof", roofline_table.run),
+    ]
+    print("name,us_per_call,derived")
+    failed = []
+    for name, fn in suites:
+        if want and name not in want:
+            continue
+        try:
+            fn()
+        except Exception:  # noqa: BLE001 — report, keep the harness alive
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED suites: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

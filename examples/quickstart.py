@@ -1,0 +1,29 @@
+"""Quickstart: clean weak labels with CHEF in ~20 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.configs.chef_lr import ChefConfig
+from repro.core import run_chef
+from repro.data import make_dataset
+
+# 1. A weakly-labeled dataset: features from a "frozen backbone", probabilistic
+#    labels from simulated labeling functions (~15% systematically wrong).
+ds = make_dataset(
+    jax.random.key(0),
+    n_train=2000, n_val=300, n_test=500, feature_dim=64,
+    class_sep=1.0, lf_acc=(0.5, 0.6),
+)
+
+# 2. CHEF: iteratively select the most influential samples (INFL), let INFL
+#    vote alongside simulated annotators (strategy "three"), update the model
+#    incrementally (DeltaGrad-L), prune candidates with tight Increm-INFL.
+cfg = ChefConfig(budget=60, round_size=10, n_epochs=25, batch_size=500,
+                 lr=0.02, l2=0.02, strategy="three")
+result = run_chef(ds, cfg, method="infl", selector="increm_tight",
+                  constructor="deltagrad", verbose=True)
+
+print(f"\nfinal test F1: {result.f1_test_final:.4f}")
+print(f"cleaned {int(result.dataset.cleaned.sum())} / {ds.n} samples")
+print(f"per-round candidate counts: {[r.n_candidates for r in result.history]}")

@@ -1,0 +1,25 @@
+"""Batched serving example: continuous-batching greedy decode through the
+ServeEngine for any assigned architecture.
+
+    PYTHONPATH=src python examples/serve_model.py --arch recurrentgemma-9b
+"""
+import argparse
+
+from repro.launch import serve as serve_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b")
+    ap.add_argument("--requests", type=int, default=12)
+    args = ap.parse_args()
+    out = serve_mod.main([
+        "--arch", args.arch, "--requests", str(args.requests),
+        "--batch", "4", "--prompt_len", "24", "--max_new", "8",
+    ])
+    print(f"served {out['requests']} requests / {out['tokens']} tokens "
+          f"in {out['wall_s']:.2f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""repro — a production-grade JAX reproduction of CHEF (Wu, Weimer, Davidson,
+PVLDB 2021): cheap and fast iterative label cleaning, integrated as a
+first-class feature of a multi-pod training/serving framework.
+
+Public API:
+    repro.configs    — 10 assigned architectures + the paper's LR-head config
+    repro.models     — Model facade (train_loss / prefill / decode / features)
+    repro.core       — INFL / Increm-INFL / DeltaGrad-L / pipeline
+    repro.kernels    — Pallas TPU kernels (+ refs)
+    repro.data       — weak-supervision data generation + sharded loading
+    repro.optim      — SGD/AdamW, schedules, early stop, grad compression
+    repro.training   — TrainState + jitted steps (accumulation, compression)
+    repro.serving    — prefill/decode steps + batched engine
+    repro.ckpt       — atomic sharded checkpointing
+    repro.dist       — sharding rules, elastic restore, fault tolerance
+    repro.launch     — mesh, dryrun, train, serve drivers
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,56 @@
+"""Config registry: one module per assigned architecture (+ the paper's own
+CHEF logistic-regression head config)."""
+from repro.configs.base import (
+    SHAPES,
+    ModelConfig,
+    MoEConfig,
+    RGLRUConfig,
+    SSMConfig,
+    ShapeSpec,
+    get_config,
+    list_archs,
+    reduced,
+)
+
+# populate the registry
+from repro.configs import (  # noqa: F401
+    granite_8b,
+    mamba2_370m,
+    mixtral_8x22b,
+    olmo_1b,
+    qwen2_72b,
+    qwen2_vl_72b,
+    qwen3_moe_30b_a3b,
+    recurrentgemma_9b,
+    starcoder2_3b,
+    whisper_tiny,
+)
+from repro.configs.chef_lr import ChefConfig, paper_dataset_specs
+
+ASSIGNED_ARCHS = (
+    "mixtral-8x22b",
+    "qwen3-moe-30b-a3b",
+    "recurrentgemma-9b",
+    "qwen2-72b",
+    "olmo-1b",
+    "starcoder2-3b",
+    "granite-8b",
+    "mamba2-370m",
+    "whisper-tiny",
+    "qwen2-vl-72b",
+)
+
+__all__ = [
+    "SHAPES",
+    "ModelConfig",
+    "MoEConfig",
+    "RGLRUConfig",
+    "SSMConfig",
+    "ShapeSpec",
+    "ChefConfig",
+    "paper_dataset_specs",
+    "get_config",
+    "list_archs",
+    "reduced",
+    "ASSIGNED_ARCHS",
+]

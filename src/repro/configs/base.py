@@ -1,0 +1,289 @@
+"""Architecture / shape configuration system.
+
+Every assigned architecture is a `ModelConfig`; every assigned input shape is a
+`ShapeSpec`. The cross product (arch x shape) defines the dry-run grid. Reduced
+("smoke") variants of each config run a real forward/train step on CPU.
+
+Conventions
+-----------
+* `vocab_size` is the paper/spec vocabulary; parameters use
+  `padded_vocab` (next multiple of 256) so the vocab dim shards over the
+  16-wide model axis (standard Megatron-style padding).
+* `block_pattern` is the repeating unit of layer kinds, e.g. ``("attn",)`` for
+  a uniform decoder, ``("rglru", "rglru", "local")`` for RecurrentGemma,
+  ``("ssd",)`` for Mamba-2, ``("attn_moe",)`` for MoE stacks.
+* Shapes: ``train_*`` lower `train_step`; ``prefill_*`` lower the prefill
+  `serve_step`; ``decode_*`` / ``long_*`` lower the single-token decode
+  `serve_step` with a KV cache of `seq_len` (bounded by the sliding window /
+  recurrent state for sub-quadratic archs).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field, replace
+from typing import Callable, Optional
+
+# ----------------------------------------------------------------------------
+# Shapes
+# ----------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+# The four assigned LM shapes (seq_len x global_batch).
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+# ----------------------------------------------------------------------------
+# Model config
+# ----------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff: int  # per-expert hidden dim
+    capacity_factor: float = 1.25
+    router_jitter: float = 0.0
+    # "tp": experts replicated over data, d_ff sharded over model.
+    # "ep": expert dim sharded over model axis (requires n_experts % model == 0).
+    parallelism: str = "tp"
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    state_dim: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    conv_width: int = 4
+    chunk_size: int = 256
+    # A is per-head scalar (Mamba-2 / SSD parameterization)
+    n_groups: int = 1
+
+
+@dataclass(frozen=True)
+class RGLRUConfig:
+    lru_width: int = 0  # 0 => d_model
+    conv_width: int = 4
+    block_width_divisor: int = 1
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | hybrid | ssm | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 => d_model // n_heads
+    # attention
+    attn_kind: str = "full"  # full | sliding
+    sliding_window: int = 0
+    qkv_bias: bool = False
+    rope_kind: str = "rope"  # rope | mrope | none | sinusoidal
+    rope_theta: float = 10_000.0
+    attn_logit_softcap: float = 0.0
+    # norms
+    norm_kind: str = "rmsnorm"  # rmsnorm | layernorm | nonparam_ln
+    mlp_kind: str = "swiglu"  # swiglu | gelu
+    # layer pattern
+    block_pattern: tuple = ("attn",)
+    # mixtures / recurrences
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    rglru: Optional[RGLRUConfig] = None
+    # encoder-decoder (whisper)
+    is_encoder_decoder: bool = False
+    n_encoder_layers: int = 0
+    encoder_seq: int = 0  # e.g. 1500 audio frames
+    # modality frontend stub: "none" | "audio" | "vision"
+    frontend: str = "none"
+    tie_embeddings: bool = False
+    # training-time knobs
+    remat: bool = True
+    # source provenance
+    source: str = ""
+
+    # ---------------------------------------------------------------- helpers
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // self.n_heads if self.n_heads else 0
+
+    @property
+    def padded_vocab(self) -> int:
+        return int(math.ceil(self.vocab_size / 256) * 256)
+
+    @property
+    def attention_free(self) -> bool:
+        return all(k in ("ssd",) for k in self.block_pattern)
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True iff no block attends over unbounded full context."""
+        for k in self.block_pattern:
+            if k in ("attn", "attn_moe") and self.attn_kind == "full":
+                return False
+        return True
+
+    def supports_shape(self, shape: ShapeSpec) -> tuple[bool, str]:
+        """(supported, reason-if-not). long_* decode needs sub-quadratic attn."""
+        if shape.seq_len > 100_000 and shape.kind == "decode":
+            if not self.sub_quadratic:
+                return False, (
+                    "pure full-attention arch: O(S^2) attention with a "
+                    f"{shape.seq_len}-token KV cache; skipped per assignment"
+                )
+        return True, ""
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding + blocks + head)."""
+        d, hd = self.d_model, self.resolved_head_dim
+        nq, nkv = self.n_heads, self.n_kv_heads
+        total = self.padded_vocab * d  # embed
+        if not self.tie_embeddings:
+            total += self.padded_vocab * d  # lm head
+
+        def attn_params() -> int:
+            p = d * (nq * hd) + 2 * d * (nkv * hd) + (nq * hd) * d
+            if self.qkv_bias:
+                p += nq * hd + 2 * (nkv * hd)
+            return p
+
+        def mlp_params(ff: int) -> int:
+            if self.mlp_kind == "swiglu":
+                return 3 * d * ff
+            return 2 * d * ff
+
+        def norm_params() -> int:
+            if self.norm_kind == "nonparam_ln":
+                return 0
+            return d
+
+        per_kind = {}
+        per_kind["attn"] = attn_params() + mlp_params(self.d_ff) + 2 * norm_params()
+        per_kind["local"] = per_kind["attn"]
+        if self.moe is not None:
+            router = d * self.moe.n_experts
+            experts = self.moe.n_experts * mlp_params(self.moe.d_ff)
+            per_kind["attn_moe"] = attn_params() + router + experts + 2 * norm_params()
+        if self.ssm is not None:
+            di = self.ssm.expand * d
+            nh = di // self.ssm.head_dim
+            conv_dim = di + 2 * self.ssm.n_groups * self.ssm.state_dim
+            in_proj = d * (2 * di + 2 * self.ssm.n_groups * self.ssm.state_dim + nh)
+            per_kind["ssd"] = (
+                in_proj
+                + conv_dim * self.ssm.conv_width
+                + nh  # A_log
+                + nh  # D
+                + di  # gate norm
+                + di * d  # out proj
+                + norm_params()
+            )
+        if self.rglru is not None:
+            w = self.rglru.lru_width or d
+            per_kind["rglru"] = (
+                2 * d * w  # in projections (x and gate branch)
+                + w * self.rglru.conv_width  # temporal conv
+                + 2 * (w * (w // 8) + w)  # block-diag gates (a, input gate), 8 blocks
+                + 2 * w  # Lambda param + gate bias
+                + w * d  # out proj
+                + 2 * norm_params()
+            )
+
+        for i in range(self.n_layers):
+            kind = self.block_pattern[i % len(self.block_pattern)]
+            total += per_kind[kind]
+
+        if self.is_encoder_decoder:
+            # encoder blocks: self-attn + mlp; decoder adds cross-attn (already
+            # counted once per layer above) -> add cross-attn per decoder layer
+            total += self.n_encoder_layers * (attn_params() + mlp_params(self.d_ff) + 2 * norm_params())
+            total += self.n_layers * (attn_params() + norm_params())  # cross attn
+        return total
+
+    def active_param_count(self) -> int:
+        """Parameters active per token (MoE: only top_k experts count)."""
+        if self.moe is None:
+            return self.param_count()
+        d = self.d_model
+        mlp = 3 * d * self.moe.d_ff if self.mlp_kind == "swiglu" else 2 * d * self.moe.d_ff
+        inactive = (self.moe.n_experts - self.moe.top_k) * mlp
+        n_moe_layers = sum(
+            1
+            for i in range(self.n_layers)
+            if self.block_pattern[i % len(self.block_pattern)] == "attn_moe"
+        )
+        return self.param_count() - n_moe_layers * inactive
+
+
+def reduced(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """A tiny same-family variant for CPU smoke tests."""
+    updates: dict = dict(
+        n_layers=max(2, len(cfg.block_pattern)),
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=min(cfg.n_kv_heads, 2) if cfg.n_kv_heads < cfg.n_heads else 4,
+        head_dim=16,
+        d_ff=128,
+        vocab_size=256,
+        sliding_window=min(cfg.sliding_window, 32) if cfg.sliding_window else 0,
+        n_encoder_layers=2 if cfg.is_encoder_decoder else 0,
+        encoder_seq=16 if cfg.is_encoder_decoder else 0,
+        remat=False,
+    )
+    if cfg.moe is not None:
+        updates["moe"] = replace(cfg.moe, n_experts=4, top_k=2, d_ff=32)
+    if cfg.ssm is not None:
+        updates["ssm"] = replace(cfg.ssm, state_dim=16, head_dim=16, chunk_size=8)
+    if cfg.rglru is not None:
+        updates["rglru"] = replace(cfg.rglru, lru_width=64)
+    updates.update(overrides)
+    return replace(cfg, name=cfg.name + "-smoke", **updates)
+
+
+# ----------------------------------------------------------------------------
+# Registry
+# ----------------------------------------------------------------------------
+
+_REGISTRY: dict[str, Callable[[], ModelConfig]] = {}
+
+
+def register(name: str):
+    def deco(fn: Callable[[], ModelConfig]):
+        _REGISTRY[name] = fn
+        return fn
+
+    return deco
+
+
+def get_config(name: str) -> ModelConfig:
+    import repro.configs  # noqa: F401  (populates registry)
+
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]()
+
+
+def list_archs() -> list[str]:
+    import repro.configs  # noqa: F401
+
+    return sorted(_REGISTRY)

@@ -1,0 +1,23 @@
+"""Mamba-2 370M — 48L, d_model 1024, attention-free SSD blocks
+(state 128, head_dim 64, expand 2), vocab 50280. [arXiv:2405.21060]
+"""
+from repro.configs.base import ModelConfig, SSMConfig, register
+
+
+@register("mamba2-370m")
+def mamba2_370m() -> ModelConfig:
+    return ModelConfig(
+        name="mamba2-370m",
+        family="ssm",
+        n_layers=48,
+        d_model=1024,
+        n_heads=0,
+        n_kv_heads=0,
+        d_ff=0,
+        vocab_size=50_280,
+        rope_kind="none",
+        block_pattern=("ssd",),
+        ssm=SSMConfig(state_dim=128, head_dim=64, expand=2, conv_width=4, chunk_size=256),
+        tie_embeddings=True,
+        source="arXiv:2405.21060 (state-space duality)",
+    )

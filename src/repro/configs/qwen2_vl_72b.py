@@ -1,0 +1,29 @@
+"""Qwen2-VL 72B — LM backbone of the VLM: 80L, d_model 8192, 64H (GQA kv=8,
+head_dim 128), d_ff 29568, vocab 152064; M-RoPE (multimodal rotary split over
+temporal/height/width). Vision patch frontend is a STUB per assignment
+(input_specs provides precomputed patch embeddings + 3D position ids).
+[arXiv:2409.12191; hf]
+"""
+from repro.configs.base import ModelConfig, register
+
+
+@register("qwen2-vl-72b")
+def qwen2_vl_72b() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-vl-72b",
+        family="vlm",
+        n_layers=80,
+        d_model=8192,
+        n_heads=64,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=29568,
+        vocab_size=152_064,
+        attn_kind="full",
+        qkv_bias=True,
+        rope_kind="mrope",
+        rope_theta=1_000_000.0,
+        frontend="vision",
+        block_pattern=("attn",),
+        source="arXiv:2409.12191; hf:Qwen/Qwen2-VL-72B",
+    )

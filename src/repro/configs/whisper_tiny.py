@@ -1,0 +1,32 @@
+"""Whisper tiny — enc-dec, 4 encoder + 4 decoder layers, d_model 384,
+6H (MHA kv=6, head_dim 64), d_ff 1536, vocab 51865; conv audio frontend is a
+STUB per assignment (input_specs provides precomputed 1500-frame embeddings).
+[arXiv:2212.04356]
+"""
+from repro.configs.base import ModelConfig, register
+
+
+@register("whisper-tiny")
+def whisper_tiny() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-tiny",
+        family="audio",
+        n_layers=4,  # decoder layers
+        d_model=384,
+        n_heads=6,
+        n_kv_heads=6,
+        head_dim=64,
+        d_ff=1536,
+        vocab_size=51_865,
+        attn_kind="full",
+        rope_kind="none",  # whisper uses learned/sinusoidal absolute positions
+        norm_kind="layernorm",
+        mlp_kind="gelu",
+        qkv_bias=True,
+        is_encoder_decoder=True,
+        n_encoder_layers=4,
+        encoder_seq=1500,
+        frontend="audio",
+        block_pattern=("attn",),
+        source="arXiv:2212.04356; hf:openai/whisper-tiny",
+    )

@@ -1,0 +1,33 @@
+"""CHEF core: the paper's contribution as composable JAX modules.
+
+  lr_head    — the strongly-convex LR head (closed-form grad/HVP/loss)
+  influence  — INFL (Eq. 6) + INFL-D (Eq. 2) + INFL-Y (Eq. 7)
+  cg         — conjugate-gradient H⁻¹g
+  increm     — Increm-INFL (Theorem 1 bounds + Algorithm 1 pruning)
+  deltagrad  — DeltaGrad-L (Algorithm 2 adapted to label cleaning)
+  annotation — simulated annotators, majority vote, INFL-as-annotator
+  baselines  — Active x2, O2U-lite, TARS-lite, DUTI-lite, loss, random
+  pipeline   — loop (2): select -> annotate -> update, early termination
+"""
+from repro.core.pipeline import ChefResult, RoundRecord, run_chef, train_head
+from repro.core.influence import infl, infl_scores, influence_vector, InflResult
+from repro.core.increm import build_provenance, increm_infl, theorem1_bounds, algorithm1
+from repro.core.deltagrad import DGConfig, deltagrad_replay, build_correction_schedule
+
+__all__ = [
+    "ChefResult",
+    "RoundRecord",
+    "run_chef",
+    "train_head",
+    "infl",
+    "infl_scores",
+    "influence_vector",
+    "InflResult",
+    "build_provenance",
+    "increm_infl",
+    "theorem1_bounds",
+    "algorithm1",
+    "DGConfig",
+    "deltagrad_replay",
+    "build_correction_schedule",
+]

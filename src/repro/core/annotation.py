@@ -1,0 +1,55 @@
+"""The human-annotation phase (paper Section 4.3): simulated annotators,
+majority vote, and INFL-as-an-annotator.
+
+Paper Section 5.1 setup: 3 independent annotators whose labels flip the
+ground truth with 5% probability; INFL's suggested labels can (a) replace
+annotators entirely — INFL (two) — or (b) join the vote — INFL (three).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def simulate_annotators(
+    key, y_true: jax.Array, n_classes: int, n_annotators: int, error_rate: float
+) -> jax.Array:
+    """[N] int ground truth -> [N, A] int annotator labels (5%-flip model)."""
+    N = y_true.shape[0]
+    kf, kl = jax.random.split(key)
+    flips = jax.random.bernoulli(kf, error_rate, (N, n_annotators))
+    # wrong label: uniform over the other C-1 classes
+    offs = jax.random.randint(kl, (N, n_annotators), 1, n_classes)
+    wrong = (y_true[:, None] + offs) % n_classes
+    return jnp.where(flips, wrong, y_true[:, None]).astype(jnp.int32)
+
+
+def majority_vote(labels: jax.Array, n_classes: int, key=None) -> jax.Array:
+    """[N, A] -> [N]; ties broken by smallest class id (deterministic), or
+    randomly when a key is given."""
+    counts = jax.nn.one_hot(labels, n_classes, dtype=jnp.float32).sum(axis=1)  # [N, C]
+    if key is not None:
+        counts = counts + 1e-3 * jax.random.uniform(key, counts.shape)
+    return jnp.argmax(counts, axis=-1).astype(jnp.int32)
+
+
+def cleaned_labels(
+    strategy: str,
+    human_labels: jax.Array,  # [N, A]
+    infl_labels: jax.Array,  # [N]
+    n_classes: int,
+    key=None,
+):
+    """Strategies from Section 5.1:
+    'one'   — majority vote of the human annotators only (INFL (one))
+    'two'   — INFL's suggested labels alone, no humans   (INFL (two))
+    'three' — INFL joins the vote as one more annotator  (INFL (three))
+    """
+    if strategy == "one":
+        return majority_vote(human_labels, n_classes, key)
+    if strategy == "two":
+        return infl_labels.astype(jnp.int32)
+    if strategy == "three":
+        stacked = jnp.concatenate([human_labels, infl_labels[:, None]], axis=1)
+        return majority_vote(stacked, n_classes, key)
+    raise ValueError(strategy)

@@ -1,0 +1,131 @@
+"""Sample-selector baselines from the paper's Exp1 (Section 5.1).
+
+Every selector returns a `priority` array — ASCENDING order = clean first —
+plus optional suggested labels (None when the method cannot suggest any,
+in which case only human annotators clean).
+
+  INFL-D       Eq. (2), Koh & Liang [20]
+  INFL-Y       Eq. (7), Zhang et al. [41]'s label-perturbation influence
+  Active (one) least-confidence sampling [34]
+  Active (two) entropy sampling [34]
+  O2U-lite     cyclic-LR loss ranking (O2U-Net [16]'s core signal: noisy
+               samples keep high loss through an over/underfit LR cycle)
+  TARS-lite    annotator-disagreement x loss (TARS [9] needs 0/1 labels +
+               full annotator-combination enumeration; this keeps its
+               flip-probability-times-impact structure)
+  DUTI-lite    truncated bi-level debugging [41]: a few unrolled inner SGD
+               steps on relaxed labels, outer gradient on validation loss
+               (the paper itself could run full DUTI only once, Section 5.1)
+  loss / random
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lr_head
+from repro.core.influence import infl_d, infl_y
+
+
+class Selection(NamedTuple):
+    priority: jax.Array  # [N] ascending = clean first
+    suggested: Optional[jax.Array]  # [N] int labels or None
+
+
+def select_infl_d(w, v, Xa, Y) -> Selection:
+    return Selection(infl_d(w, v, Xa, Y), None)
+
+
+def select_infl_y(w, v, Xa, Y) -> Selection:
+    r = infl_y(w, v, Xa, Y)
+    return Selection(r.priority, r.suggested)
+
+
+def select_active_one(w, Xa) -> Selection:
+    P = lr_head.probs(w, Xa)
+    return Selection(jnp.max(P, axis=-1), None)  # low confidence first
+
+
+def select_active_two(w, Xa) -> Selection:
+    P = lr_head.probs(w, Xa)
+    ent = -jnp.sum(P * jnp.log(jnp.maximum(P, 1e-12)), axis=-1)
+    return Selection(-ent, None)  # high entropy first
+
+
+def select_loss(w, Xa, Y) -> Selection:
+    return Selection(-lr_head.per_sample_loss(w, Xa, Y), None)
+
+
+def select_random(key, n: int) -> Selection:
+    return Selection(jax.random.uniform(key, (n,)), None)
+
+
+def select_o2u(
+    w0, Xa, Y, weights, idx_schedule, *, l2: float, lr_max: float,
+    cycle_len: int = 50, n_cycles: int = 2,
+) -> Selection:
+    """O2U-lite: train with a cyclical LR and rank by the per-sample loss
+    averaged over the cycle (noisily-labeled samples are re-forgotten when
+    the LR swings the model back toward underfitting)."""
+    T = idx_schedule.shape[0]
+    steps = min(T, cycle_len * n_cycles)
+
+    def step(carry, xs):
+        w, loss_sum = carry
+        idx, t = xs
+        lr_t = lr_max * (1.0 + jnp.cos(2 * jnp.pi * (t % cycle_len) / cycle_len)) / 2
+        xb, yb, wb = Xa[idx], Y[idx], weights[idx]
+        P = lr_head.probs(w, xb)
+        g = jnp.einsum("nc,nd->cd", (P - yb) * wb[:, None], xb) / idx.shape[0] + l2 * w
+        w = w - lr_t * g
+        loss_sum = loss_sum + lr_head.per_sample_loss(w, Xa, Y)
+        return (w, loss_sum), None
+
+    (w_fin, loss_sum), _ = jax.lax.scan(
+        step, (w0, jnp.zeros(Xa.shape[0], jnp.float32)),
+        (idx_schedule[:steps], jnp.arange(steps)),
+    )
+    return Selection(-loss_sum / steps, None)
+
+
+def select_tars_lite(w, Xa, Y, human_labels: jax.Array, n_classes: int) -> Selection:
+    """flip-probability (annotator disagreement with the current label) times
+    loss impact."""
+    onehot = jax.nn.one_hot(human_labels, n_classes, dtype=jnp.float32)  # [N, A, C]
+    agree = jnp.einsum("nac,nc->na", onehot, Y.astype(jnp.float32))
+    p_flip = 1.0 - jnp.mean(agree, axis=-1)  # [N]
+    impact = lr_head.per_sample_loss(w, Xa, Y)
+    return Selection(-(p_flip * impact), None)
+
+
+def select_duti_lite(
+    w, Xa, Y, weights, Xa_val, Y_val, *, l2: float, lr: float,
+    inner_steps: int = 8, outer_steps: int = 20, outer_lr: float = 1.0,
+) -> Selection:
+    """Truncated bi-level debugging (DUTI [41], probabilistic-label variant of
+    Appendix F.3): optimize relaxed labels Y' to minimize validation loss of
+    the inner-trained model; rank by how far Y' moved, suggest argmax Y'."""
+
+    def inner(Yp):
+        def body(wi, _):
+            P = lr_head.probs(wi, Xa)
+            g = jnp.einsum("nc,nd->cd", (P - Yp) * weights[:, None], Xa) / Xa.shape[0] + l2 * wi
+            return wi - lr * g, None
+
+        w_fin, _ = jax.lax.scan(body, w, None, length=inner_steps)
+        return lr_head.loss(w_fin, Xa_val, Y_val, jnp.ones(Xa_val.shape[0]), 0.0)
+
+    logits = jnp.log(jnp.maximum(Y, 1e-6))
+
+    def outer(logits, _):
+        Yp = jax.nn.softmax(logits, axis=-1)
+        g = jax.grad(inner)(Yp)
+        return logits - outer_lr * g, None
+
+    logits_fin, _ = jax.lax.scan(outer, logits, None, length=outer_steps)
+    Yp = jax.nn.softmax(logits_fin, axis=-1)
+    moved = jnp.sum(jnp.abs(Yp - Y), axis=-1)
+    return Selection(-moved, jnp.argmax(Yp, axis=-1).astype(jnp.int32))

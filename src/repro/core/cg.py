@@ -1,0 +1,50 @@
+"""Conjugate-gradient solve of H x = b for the CHEF head Hessian
+(paper Section 4.1.1: 'we leverage the conjugate gradient method [26] to
+approximately compute ∇F_valᵀ H⁻¹').
+
+H is strongly convex (λ-regularized), symmetric positive definite, so plain
+CG converges; we run a fixed number of jit-friendly iterations with early
+exit via lax.while_loop on the residual norm.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def cg_solve(hvp_fn: Callable, b: jax.Array, *, iters: int = 64, tol: float = 1e-6):
+    """Solve H x = b. hvp_fn(v) -> H v (same pytree/array shape as b)."""
+
+    def body(state):
+        x, r, p, rs, it = state
+        Hp = hvp_fn(p)
+        alpha = rs / jnp.maximum(jnp.sum(p * Hp), 1e-30)
+        x = x + alpha * p
+        r = r - alpha * Hp
+        rs_new = jnp.sum(r * r)
+        beta = rs_new / jnp.maximum(rs, 1e-30)
+        p = r + beta * p
+        return x, r, p, rs_new, it + 1
+
+    def cond(state):
+        _, _, _, rs, it = state
+        return jnp.logical_and(it < iters, rs > tol * tol)
+
+    x0 = jnp.zeros_like(b)
+    r0 = b
+    rs0 = jnp.sum(r0 * r0)
+    x, r, _, rs, it = jax.lax.while_loop(cond, body, (x0, r0, b, rs0, jnp.zeros((), jnp.int32)))
+    return x, {"residual": jnp.sqrt(rs), "iters": it}
+
+
+def inverse_hvp(w, grad_val, Xa, weights, l2, *, iters=64, tol=1e-6,
+                use_kernels: bool = False):
+    """v = H(w)⁻¹ grad_val for the LR head (precomputes P once)."""
+    from repro.core import lr_head
+
+    P = lr_head.probs(w, Xa)
+    hvp_fn = lambda v: lr_head.hvp(w, v, Xa, weights, l2, P=P, use_kernels=use_kernels)
+    return cg_solve(hvp_fn, grad_val, iters=iters, tol=tol)

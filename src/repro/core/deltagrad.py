@@ -1,0 +1,189 @@
+"""DeltaGrad-L (paper Section 4.2, Algorithm 2): incremental model update
+after cleaning a small set of labels, by replaying the cached SGD trajectory.
+
+Label cleaning = delete the b samples with (old probabilistic labels, weight
+γ) + add the same samples with (cleaned one-hot labels, weight 1). Per
+Eq. (4) the updated mini-batch gradient is the cached/approximated old-batch
+gradient plus a correction over ONLY the changed samples in the batch —
+O(b) work instead of O(|B_t|).
+
+The old-batch gradient at the *new* iterate w^I_t is:
+  * computed explicitly in the first j0 iterations and every T0 afterwards
+    (these iterations also update the L-BFGS (ΔW, ΔG) history), and
+  * approximated elsewhere via Eq. (5):  B_t (w^I_t − w_t) + cached g_t,
+    with B_t the compact limited-memory BFGS Hessian estimate
+    (Byrd–Nocedal–Schnabel representation; history size m0).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lr_head
+
+
+@dataclass(frozen=True)
+class DGConfig:
+    burn_in: int = 10  # j0
+    period: int = 10  # T0
+    history: int = 2  # m0
+    lr: float = 0.05
+    l2: float = 0.05
+
+
+# ----------------------------------------------------------------------------
+# Compact L-BFGS Hessian product: B v
+# ----------------------------------------------------------------------------
+
+
+def lbfgs_Bv(S, Yh, n_pairs, v):
+    """Compact-form BFGS Hessian estimate applied to v.
+
+    S, Yh: [m0, P] ring buffers of parameter / gradient differences (most
+    recent last); n_pairs: how many entries are valid. Falls back to B = I
+    scaling when no pairs exist.
+    """
+    m0, Pdim = S.shape
+    valid = (jnp.arange(m0) >= (m0 - n_pairs)).astype(jnp.float32)  # recent last
+    Sv = S * valid[:, None]
+    Yv = Yh * valid[:, None]
+    sy_last = jnp.sum(S[-1] * Yh[-1])
+    ss_last = jnp.sum(S[-1] * S[-1])
+    sigma = jnp.where(ss_last > 1e-30, sy_last / jnp.maximum(ss_last, 1e-30), 1.0)
+    sigma = jnp.maximum(sigma, 1e-8)
+
+    STS = Sv @ Sv.T  # [m0, m0]
+    STY = Sv @ Yv.T
+    Ltri = jnp.tril(STY, k=-1)
+    D = jnp.diag(jnp.diag(STY))
+    # M = [[sigma S^T S, L], [L^T, -D]]
+    top = jnp.concatenate([sigma * STS, Ltri], axis=1)
+    bot = jnp.concatenate([Ltri.T, -D], axis=1)
+    M = jnp.concatenate([top, bot], axis=0)
+    # regularize invalid rows/cols to identity so solve stays well-posed
+    mask2 = jnp.concatenate([valid, valid])
+    M = M * mask2[:, None] * mask2[None, :] + jnp.diag(1.0 - mask2)
+    rhs = jnp.concatenate([sigma * (Sv @ v), Yv @ v]) * mask2
+    z = jnp.linalg.solve(M, rhs)
+    z = z * mask2
+    Bv = sigma * v - (sigma * (Sv.T @ z[:m0]) + Yv.T @ z[m0:])
+    return jnp.where(n_pairs > 0, Bv, v)
+
+
+# ----------------------------------------------------------------------------
+# Correction schedule (host-side, numpy): where do cleaned samples appear?
+# ----------------------------------------------------------------------------
+
+
+def build_correction_schedule(idx_schedule: np.ndarray, changed_idx: np.ndarray):
+    """For each iteration t, the changed-sample slots inside B_t.
+
+    Returns (corr_idx [T, r_max] int32 — global sample ids, padded with 0;
+             corr_mask [T, r_max] f32 — 1 for real entries)."""
+    idx_np = np.asarray(idx_schedule)
+    changed = set(int(c) for c in np.asarray(changed_idx).tolist())
+    T = idx_np.shape[0]
+    hits = [[int(s) for s in row if int(s) in changed] for row in idx_np]
+    r_max = max(1, max((len(h) for h in hits), default=1))
+    corr_idx = np.zeros((T, r_max), np.int32)
+    corr_mask = np.zeros((T, r_max), np.float32)
+    for t, h in enumerate(hits):
+        for j, s in enumerate(h):
+            corr_idx[t, j] = s
+            corr_mask[t, j] = 1.0
+    return jnp.asarray(corr_idx), jnp.asarray(corr_mask)
+
+
+# ----------------------------------------------------------------------------
+# Replay
+# ----------------------------------------------------------------------------
+
+
+@partial(
+    jax.jit,
+    static_argnames=("cfg", "batch_size"),
+)
+def deltagrad_replay(
+    cache_ws,  # [T, C, d+1] cached parameters
+    cache_gs,  # [T, C, d+1] cached mini-batch gradients
+    idx_schedule,  # [T, bs]
+    Xa,
+    Y_old,
+    Y_new,
+    w_old,  # [N] old per-sample weights (gamma for uncleaned)
+    w_new,  # [N] new per-sample weights (1 for cleaned)
+    corr_idx,  # [T, r_max]
+    corr_mask,  # [T, r_max]
+    cfg: DGConfig,
+    batch_size: int,
+):
+    """Algorithm 2 adapted for label cleaning (Section 4.2). Returns w^I_T."""
+    T, C, D = cache_ws.shape
+    Pdim = C * D
+    m0 = cfg.history
+
+    t_arr = jnp.arange(T)
+    explicit = (t_arr < cfg.burn_in) | (((t_arr - cfg.burn_in) % cfg.period) == 0)
+
+    def batch_grad(w, idx):
+        xb, yb, wb = Xa[idx], Y_old[idx], w_old[idx]
+        P = lr_head.probs(w, xb)
+        return (
+            jnp.einsum("nc,nd->cd", (P - yb) * wb[:, None], xb) / idx.shape[0]
+            + cfg.l2 * w
+        )
+
+    def correction(w, ci, cm):
+        """(1/|B|) Σ_changed [ 1·∇F(w, z_new) − γ·∇F(w, z_old) ]."""
+        xb = Xa[ci]  # [r, d+1]
+        P = lr_head.probs(w, xb)
+        g_new = (P - Y_new[ci]) * (w_new[ci] * cm)[:, None]
+        g_old = (P - Y_old[ci]) * (w_old[ci] * cm)[:, None]
+        return jnp.einsum("nc,nd->cd", g_new - g_old, xb) / batch_size
+
+    def step(carry, xs):
+        wI, Sbuf, Ybuf, n_pairs = carry
+        idx, w_t, g_t, is_exp, ci, cm = xs
+
+        def explicit_fn(args):
+            wI, Sbuf, Ybuf, n_pairs = args
+            g_exp = batch_grad(wI, idx)
+            s = (wI - w_t).reshape(-1)
+            y = (g_exp - g_t).reshape(-1)
+            good = jnp.sum(s * y) > 1e-12  # curvature guard
+            Sb = jnp.where(good, jnp.roll(Sbuf, -1, axis=0).at[-1].set(s), Sbuf)
+            Yb = jnp.where(good, jnp.roll(Ybuf, -1, axis=0).at[-1].set(y), Ybuf)
+            np_ = jnp.where(good, jnp.minimum(n_pairs + 1, m0), n_pairs)
+            return g_exp, Sb, Yb, np_
+
+        def approx_fn(args):
+            wI, Sbuf, Ybuf, n_pairs = args
+            dv = (wI - w_t).reshape(-1)
+            Bv = lbfgs_Bv(Sbuf, Ybuf, n_pairs, dv)
+            g_apx = Bv.reshape(C, D) + g_t
+            return g_apx, Sbuf, Ybuf, n_pairs
+
+        g_old_batch, Sbuf, Ybuf, n_pairs = jax.lax.cond(
+            is_exp, explicit_fn, approx_fn, (wI, Sbuf, Ybuf, n_pairs)
+        )
+        g = g_old_batch + correction(wI, ci, cm)
+        w_next = wI - cfg.lr * g
+        # emit the refreshed provenance (Section 4.2 item (2)): the replayed
+        # trajectory + its corrected gradients become the cache that the NEXT
+        # cleaning round replays against.
+        return (w_next, Sbuf, Ybuf, n_pairs), (wI, g)
+
+    w0 = cache_ws[0]
+    Sbuf = jnp.zeros((m0, Pdim), jnp.float32)
+    Ybuf = jnp.zeros((m0, Pdim), jnp.float32)
+    (w_fin, *_), new_traj = jax.lax.scan(
+        step,
+        (w0, Sbuf, Ybuf, jnp.zeros((), jnp.int32)),
+        (idx_schedule, cache_ws, cache_gs, explicit, corr_idx, corr_mask),
+    )
+    return w_fin, new_traj

@@ -1,0 +1,124 @@
+"""Increm-INFL: Theorem 1 bounds + Algorithm 1 candidate pruning.
+
+Provenance (computed once in the Initialization step, paper Section 4.1.2):
+  * w⁰ — the round-0 model
+  * p⁰_i = softmax(w⁰ x̃_i) — round-0 probabilities (gives ∇F(w⁰,z̃) and
+    ∇_y∇_wF(w⁰,z̃) in closed form, so neither gradient is materialized)
+  * hnorm_i = ||H(w⁰, z̃_i)|| = ||diag(p⁰)−p⁰p⁰ᵀ|| · ||x̃_i||² — per-sample
+    Hessian norm via the power method on the CxC Kronecker factor
+    (Appendix D adapted; also used for the H^{(j)} norms, which for
+    cross-entropy are j-independent: ∇²(−log p_j) = (diag(p)−ppᵀ) ⊗ x̃x̃ᵀ).
+
+At round k (Theorem 1, with e1 = vᵀ(w^k−w⁰), e2 = ||v||·||w^k−w⁰||):
+
+  I_0(i,c)   = (ỹ_i − e_c + (1−γ)(p⁰_i − ỹ_i)) · u_i,   u_i = v x̃_i
+  Diff₁ ∈ ± hnorm_i · e2 · (1−ỹ_ic)          (Σ_j δ_j = 0 kills the e1 term;
+                                              Σ_j|δ_j| = 2(1−ỹ_ic))
+  Diff₂ ∈ (1−γ)/2 · [e1−e2, e1+e2] · hnorm_i
+
+  lower(i,c) = I_0 − hnorm·e2·(1−ỹ_c) + (1−γ)/2·(e1−e2)·hnorm
+  upper(i,c) = I_0 + hnorm·e2·(1−ỹ_c) + (1−γ)/2·(e1+e2)·hnorm
+
+Algorithm 1: keep the top-b smallest I_0 (their largest upper bound = L) plus
+every sample whose lower bound < L for some class. Exact Eq. 6 evaluation then
+runs only on the survivors — and provably returns the same top-b as Full.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lr_head
+from repro.core.influence import infl_scores
+
+
+class Provenance(NamedTuple):
+    w0: jax.Array  # [C, d+1]
+    p0: jax.Array  # [N, C]
+    hnorm: jax.Array  # [N]
+
+
+def build_provenance(w0, Xa, power_iters: int = 12, key=None) -> Provenance:
+    p0 = lr_head.probs(w0, Xa)
+    hnorm = lr_head.per_sample_hessian_norm(w0, Xa, P=p0, iters=power_iters, key=key)
+    return Provenance(w0, p0, hnorm)
+
+
+class Bounds(NamedTuple):
+    center: jax.Array  # [N, C] I_0
+    lower: jax.Array  # [N, C]
+    upper: jax.Array  # [N, C]
+
+
+def theorem1_bounds(
+    prov: Provenance, w_k, v, Xa, Y, gamma: float, tight: bool = False
+) -> Bounds:
+    """`tight=False` is the paper's Theorem 1 verbatim. `tight=True` is our
+    beyond-paper refinement: for cross entropy, ∇_y∇_wF(w,z̃)δ_y = −δ_y ⊗ x̃
+    EXACTLY (Σ_j δ_j = 0 cancels the softmax term), so Diff₁ ≡ 0 and its
+    bound width — the dominant slack — can be dropped with no approximation.
+    """
+    dw = (w_k - prov.w0).astype(jnp.float32)
+    e1 = jnp.sum(v * dw)
+    e2 = jnp.linalg.norm(v) * jnp.linalg.norm(dw)
+    I0 = infl_scores(v, Xa, prov.p0, Y, gamma)  # [N, C] (center at p0)
+    h = prov.hnorm[:, None]
+    width1 = jnp.zeros_like(I0) if tight else h * e2 * (1.0 - Y)  # [N, C]
+    lo2 = 0.5 * (1.0 - gamma) * (e1 - e2) * h
+    hi2 = 0.5 * (1.0 - gamma) * (e1 + e2) * h
+    return Bounds(I0, I0 - width1 + lo2, I0 + width1 + hi2)
+
+
+class PruneResult(NamedTuple):
+    candidates: jax.Array  # [N] bool — survivors needing exact evaluation
+    n_candidates: jax.Array  # scalar
+    L: jax.Array  # the top-b upper-bound threshold
+
+
+def algorithm1(bounds: Bounds, eligible: jax.Array, b: int) -> PruneResult:
+    """Paper Algorithm 1 over per-sample min-class values."""
+    big = jnp.inf
+    center_min = jnp.where(eligible, jnp.min(bounds.center, axis=-1), big)
+    # class achieving the per-sample min center
+    cmin = jnp.argmin(bounds.center, axis=-1)
+    upper_at_cmin = jnp.take_along_axis(bounds.upper, cmin[:, None], axis=-1)[:, 0]
+    # top-b smallest centers
+    _, top_idx = jax.lax.top_k(-center_min, b)
+    in_top = jnp.zeros(center_min.shape[0], bool).at[top_idx].set(True) & eligible
+    L = jnp.max(jnp.where(in_top, upper_at_cmin, -big))
+    lower_min = jnp.where(eligible, jnp.min(bounds.lower, axis=-1), big)
+    cand = in_top | (eligible & (lower_min < L))
+    return PruneResult(cand, jnp.sum(cand), L)
+
+
+def increm_infl(
+    prov: Provenance,
+    w_k,
+    v,
+    Xa,
+    Y,
+    gamma: float,
+    eligible,
+    b: int,
+    tight: bool = False,
+):
+    """Full Increm-INFL round: prune via Theorem 1, then exact Eq. 6 on the
+    survivors only. Returns (priority [N], suggested [N], prune_info).
+
+    Non-candidates get +inf priority — Algorithm 1 guarantees the true top-b
+    are all candidates, so downstream top-b selection matches Full exactly.
+    """
+    bounds = theorem1_bounds(prov, w_k, v, Xa, Y, gamma, tight=tight)
+    pruned = algorithm1(bounds, eligible, b)
+    # exact evaluation on survivors: needs current-probs p^k only for them.
+    # (jit-static shapes: evaluate everywhere, mask; the BENCHMARKED wall-time
+    # path gathers candidates into a dense buffer first — see
+    # benchmarks/exp2_increm.py — matching the paper's Time_grad accounting.)
+    P = lr_head.probs(w_k, Xa)
+    S = infl_scores(v, Xa, P, Y, gamma)
+    S = jnp.where(pruned.candidates[:, None], S, jnp.inf)
+    priority = jnp.min(S, axis=-1)
+    suggested = jnp.argmin(S, axis=-1)
+    return priority, suggested, pruned

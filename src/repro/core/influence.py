@@ -1,0 +1,85 @@
+"""INFL — the paper's modified influence function (Eq. 6) — plus the
+influence-function baselines INFL-D (Eq. 2) and INFL-Y (Eq. 7).
+
+Closed forms for the cross-entropy LR head (see core/lr_head.py):
+
+    v        = -H(w)⁻¹ ∇F(w, Z_val)                    (CG solve)
+    u_i      = v x̃_i                                   [C]   (one matmul!)
+    Eq. 6:   I(i, c) = (ỹ_i - e_c + (1-γ)(p_i - ỹ_i)) · u_i
+    Eq. 2:   I_del(i) = (p_i - ỹ_i) · u_i
+    Eq. 7:   I_Y(i, c) = (ỹ_i - e_c) · u_i
+
+Sample priority = min_c I(i,c) (most negative = most harmful = clean first,
+paper Section 4.1.1); the argmin class is the suggested cleaned label.
+The u_i matmul + score epilogue is the `infl_scores` Pallas kernel.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lr_head
+from repro.core.cg import inverse_hvp
+
+
+class InflResult(NamedTuple):
+    priority: jax.Array  # [N] min-over-class score (ascending = clean first)
+    suggested: jax.Array  # [N] argmin class (INFL's proposed cleaned label)
+    scores: jax.Array  # [N, C] full score matrix
+
+
+def influence_vector(w, Xa_val, Y_val, Xa, weights, l2, *, cg_iters=64,
+                     cg_tol=1e-6, use_kernels=False):
+    """v = -H⁻¹ ∇F_val (shared by INFL / INFL-D / INFL-Y / Increm-INFL)."""
+    g_val = lr_head.grad(
+        w, Xa_val, Y_val, jnp.ones(Xa_val.shape[0], jnp.float32), 0.0,
+        use_kernels=use_kernels,
+    )
+    v, stats = inverse_hvp(w, g_val, Xa, weights, l2, iters=cg_iters, tol=cg_tol,
+                           use_kernels=use_kernels)
+    return -v, stats
+
+
+def infl_scores(v, Xa, P, Y, gamma: float, use_kernels: bool = False) -> jax.Array:
+    """Eq. 6 score matrix [N, C]. P = probs at the current w; Y = current
+    probabilistic labels."""
+    if use_kernels:
+        from repro.kernels import ops
+
+        return ops.infl_scores(v, Xa, P, Y, gamma)
+    U = (Xa @ v.T).astype(jnp.float32)  # [N, C]
+    base = jnp.sum((Y + (1.0 - gamma) * (P - Y)) * U, axis=-1)  # [N]
+    return base[:, None] - U  # subtract e_c · u = U[:, c]
+
+
+def infl(w, v, Xa, Y, gamma: float, P: Optional[jax.Array] = None,
+         use_kernels: bool = False) -> InflResult:
+    if P is None:
+        P = lr_head.probs(w, Xa)
+    S = infl_scores(v, Xa, P, Y, gamma, use_kernels=use_kernels)
+    return InflResult(jnp.min(S, axis=-1), jnp.argmin(S, axis=-1), S)
+
+
+def infl_d(w, v, Xa, Y, P: Optional[jax.Array] = None) -> jax.Array:
+    """Eq. 2 (Koh & Liang deletion influence) — priority only, no labels."""
+    if P is None:
+        P = lr_head.probs(w, Xa)
+    U = (Xa @ v.T).astype(jnp.float32)
+    return jnp.sum((P - Y) * U, axis=-1)
+
+
+def infl_y(w, v, Xa, Y) -> InflResult:
+    """Eq. 7 ([41]'s label-perturbation influence; no δ_y magnitude, no
+    re-weighting term)."""
+    U = (Xa @ v.T).astype(jnp.float32)
+    S = jnp.sum(Y * U, axis=-1, keepdims=True) - U
+    return InflResult(jnp.min(S, axis=-1), jnp.argmin(S, axis=-1), S)
+
+
+def top_b(priority: jax.Array, eligible: jax.Array, b: int):
+    """Indices of the b smallest priorities among eligible samples."""
+    masked = jnp.where(eligible, priority, jnp.inf)
+    _, idx = jax.lax.top_k(-masked, b)
+    return idx

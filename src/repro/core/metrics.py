@@ -1,0 +1,30 @@
+"""Evaluation metrics (the paper reports F1)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def f1_binary(pred: jax.Array, true: jax.Array, positive: int = 1) -> jax.Array:
+    p = pred == positive
+    t = true == positive
+    tp = jnp.sum(p & t).astype(jnp.float32)
+    fp = jnp.sum(p & ~t).astype(jnp.float32)
+    fn = jnp.sum(~p & t).astype(jnp.float32)
+    return 2 * tp / jnp.maximum(2 * tp + fp + fn, 1e-9)
+
+
+def f1_macro(pred: jax.Array, true: jax.Array, n_classes: int) -> jax.Array:
+    return jnp.mean(
+        jnp.stack([f1_binary(pred, true, c) for c in range(n_classes)])
+    )
+
+
+def f1(pred, true, n_classes: int) -> jax.Array:
+    if n_classes == 2:
+        return f1_binary(pred, true)
+    return f1_macro(pred, true, n_classes)
+
+
+def accuracy(pred, true) -> jax.Array:
+    return jnp.mean((pred == true).astype(jnp.float32))

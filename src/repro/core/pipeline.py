@@ -1,0 +1,211 @@
+"""The CHEF pipeline — Figure 1 loop (2), redesigned per Section 1:
+
+  Initialization: train the head from scratch on the weak labels, cache the
+  SGD trajectory (DeltaGrad provenance) and the Theorem-1 provenance
+  (Increm-INFL).
+
+  Each round (budget b << B):
+    1. sample selector  — INFL (or a baseline), optionally pruned by
+                          Increm-INFL
+    2. annotation       — simulated human annotators + INFL-as-annotator,
+                          majority vote (strategy one/two/three)
+    3. model constructor — DeltaGrad-L incremental replay or full Retrain
+
+  until the budget B is exhausted or the target validation F1 is reached
+  (early termination).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.chef_lr import ChefConfig
+from repro.core import annotation, baselines, increm, lr_head, metrics
+from repro.core.deltagrad import DGConfig, build_correction_schedule, deltagrad_replay
+from repro.core.influence import influence_vector, infl, top_b
+
+if False:  # import cycle guard (data.synth imports core.annotation)
+    from repro.data.synth import ChefDataset  # noqa: F401
+
+
+@dataclass
+class RoundRecord:
+    round: int
+    n_cleaned_total: int
+    f1_val: float
+    f1_test: float
+    n_candidates: int  # Increm-INFL survivors (n == N when Full)
+    t_select: float
+    t_update: float
+    suggested_match_truth: float  # fraction of INFL labels == ground truth
+
+
+@dataclass
+class ChefResult:
+    w: jax.Array
+    dataset: object
+    history: list
+    f1_test_final: float
+    f1_val_final: float
+    terminated_early: bool
+
+
+def _evaluate(w, ds: "ChefDataset"):
+    Xa_val = lr_head.augment(ds.X_val)
+    Xa_test = lr_head.augment(ds.X_test)
+    pred_val = jnp.argmax(lr_head.probs(w, Xa_val), axis=-1)
+    pred_test = jnp.argmax(lr_head.probs(w, Xa_test), axis=-1)
+    f1v = metrics.f1(pred_val, jnp.argmax(ds.y_val, -1), ds.n_classes)
+    f1t = metrics.f1(pred_test, ds.y_test, ds.n_classes)
+    return float(f1v), float(f1t)
+
+
+def train_head(ds: "ChefDataset", cfg: ChefConfig, w0=None, cache: bool = True):
+    """Initialization-step training (plain SGD, paper Section 5.1)."""
+    Xa = lr_head.augment(ds.X)
+    if w0 is None:
+        w0 = lr_head.init_head(jax.random.key(cfg.seed), ds.n_classes, ds.X.shape[1])
+    sched = lr_head.batch_schedule(cfg.seed, ds.n, min(cfg.batch_size, ds.n), cfg.n_epochs)
+    w, traj = lr_head.sgd_train(
+        w0, Xa, ds.y_prob, ds.y_weight, sched,
+        l2=cfg.l2, lr=cfg.lr, momentum=cfg.momentum, cache_trajectory=cache,
+    )
+    return w, traj, sched
+
+
+def run_chef(
+    ds: "ChefDataset",
+    cfg: ChefConfig,
+    *,
+    method: str = "infl",  # infl|infl_d|infl_y|active_one|active_two|o2u|tars|duti|loss|random
+    selector: str = "increm",  # increm | increm_tight | full (increm* only for infl)
+    constructor: str = "deltagrad",  # deltagrad | retrain
+    use_kernels: bool = False,
+    verbose: bool = False,
+) -> ChefResult:
+    assert selector == "full" or method == "infl", "Increm-INFL prunes INFL scores"
+    tight = selector == "increm_tight"
+    key = jax.random.key(cfg.seed + 1)
+    Xa = lr_head.augment(ds.X)
+    Xa_val = lr_head.augment(ds.X_val)
+
+    # ---- Initialization step
+    w, traj, sched = train_head(ds, cfg, cache=(constructor == "deltagrad"))
+    prov = increm.build_provenance(w, Xa, power_iters=cfg.power_iters) if selector.startswith("increm") else None
+    dgc = DGConfig(cfg.dg_burn_in, cfg.dg_period, cfg.dg_history, cfg.lr, cfg.l2)
+
+    history: list = []
+    f1v, f1t = _evaluate(w, ds)
+    n_rounds = cfg.budget // cfg.round_size
+    terminated = False
+
+    for k in range(n_rounds):
+        key, k_sel, k_vote = jax.random.split(key, 3)
+        eligible = ~ds.cleaned
+        t0 = time.perf_counter()
+
+        suggested = None
+        n_cand = ds.n
+        if method == "infl":
+            v, _ = influence_vector(
+                w, Xa_val, ds.y_val, Xa, ds.y_weight, cfg.l2,
+                cg_iters=cfg.cg_iters, cg_tol=cfg.cg_tol, use_kernels=use_kernels,
+            )
+            if selector.startswith("increm"):
+                priority, suggested, pruned = increm.increm_infl(
+                    prov, w, v, Xa, ds.y_prob, cfg.gamma, eligible, cfg.round_size,
+                    tight=tight,
+                )
+                n_cand = int(pruned.n_candidates)
+            else:
+                r = infl(w, v, Xa, ds.y_prob, cfg.gamma, use_kernels=use_kernels)
+                priority, suggested = r.priority, r.suggested
+        else:
+            sel = _run_baseline(method, w, Xa, ds, cfg, k_sel, Xa_val)
+            priority, suggested = sel.priority, sel.suggested
+
+        idx = top_b(priority, eligible, cfg.round_size)
+        t_select = time.perf_counter() - t0
+
+        # ---- annotation phase
+        humans = ds.human_labels[idx]
+        if suggested is not None:
+            infl_lbl = suggested[idx]
+            strategy = cfg.strategy
+        else:
+            infl_lbl = jnp.zeros(idx.shape, jnp.int32)
+            strategy = "one"  # no label suggestions -> humans only
+        new_labels = annotation.cleaned_labels(
+            strategy, humans, infl_lbl, ds.n_classes, key=k_vote
+        )
+        match = float(jnp.mean((suggested[idx] == ds.y_true[idx]).astype(jnp.float32))) if suggested is not None else float("nan")
+
+        # ---- model constructor phase
+        t1 = time.perf_counter()
+        old_prob, old_w8 = ds.y_prob, ds.y_weight
+        ds = ds.clean(idx, new_labels)
+        if constructor == "deltagrad":
+            ci, cm = build_correction_schedule(np.asarray(sched), np.asarray(idx))
+            # replay against the round-(k-1) cache (Section 4.2 item (2)):
+            # cached gradients were computed on the round-(k-1) labels
+            # (old_prob/old_w8), corrections cover only this round's b samples
+            w, traj = deltagrad_replay(
+                traj[0], traj[1], sched, Xa,
+                old_prob, ds.y_prob, old_w8, ds.y_weight, ci, cm,
+                dgc, int(sched.shape[1]),
+            )
+        else:
+            w, traj, sched = train_head(ds, cfg, cache=(constructor == "deltagrad"))
+        t_update = time.perf_counter() - t1
+
+        f1v, f1t = _evaluate(w, ds)
+        history.append(
+            RoundRecord(k, int(jnp.sum(ds.cleaned)), f1v, f1t, n_cand, t_select, t_update, match)
+        )
+        if verbose:
+            print(
+                f"round {k}: cleaned={int(jnp.sum(ds.cleaned))} f1_val={f1v:.4f} "
+                f"f1_test={f1t:.4f} cand={n_cand} sel={t_select:.3f}s upd={t_update:.3f}s"
+            )
+        if cfg.target_f1 and f1v >= cfg.target_f1:
+            terminated = True
+            break
+
+    return ChefResult(w, ds, history, f1t, f1v, terminated)
+
+
+def _run_baseline(method, w, Xa, ds: "ChefDataset", cfg: ChefConfig, key, Xa_val):
+    if method in ("infl_d", "infl_y"):
+        v, _ = influence_vector(
+            w, Xa_val, ds.y_val, Xa, ds.y_weight, cfg.l2,
+            cg_iters=cfg.cg_iters, cg_tol=cfg.cg_tol,
+        )
+        if method == "infl_d":
+            return baselines.select_infl_d(w, v, Xa, ds.y_prob)
+        return baselines.select_infl_y(w, v, Xa, ds.y_prob)
+    if method == "active_one":
+        return baselines.select_active_one(w, Xa)
+    if method == "active_two":
+        return baselines.select_active_two(w, Xa)
+    if method == "loss":
+        return baselines.select_loss(w, Xa, ds.y_prob)
+    if method == "random":
+        return baselines.select_random(key, ds.n)
+    if method == "o2u":
+        sched = lr_head.batch_schedule(cfg.seed + 7, ds.n, min(cfg.batch_size, ds.n), 4)
+        w0 = lr_head.init_head(key, ds.n_classes, ds.X.shape[1])
+        return baselines.select_o2u(
+            w0, Xa, ds.y_prob, ds.y_weight, sched, l2=cfg.l2, lr_max=cfg.lr * 4
+        )
+    if method == "tars":
+        return baselines.select_tars_lite(w, Xa, ds.y_prob, ds.human_labels, ds.n_classes)
+    if method == "duti":
+        return baselines.select_duti_lite(
+            w, Xa, ds.y_prob, ds.y_weight, Xa_val, ds.y_val, l2=cfg.l2, lr=cfg.lr
+        )
+    raise ValueError(method)

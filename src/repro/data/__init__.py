@@ -1,0 +1,4 @@
+from repro.data.synth import ChefDataset, make_dataset, make_paper_dataset
+from repro.data.loader import ShardedLoader
+
+__all__ = ["ChefDataset", "make_dataset", "make_paper_dataset", "ShardedLoader"]

@@ -1,0 +1,72 @@
+"""Deterministic sharded data loader with host-side prefetch.
+
+At 1000+-node scale every host must independently derive ITS shard of every
+global batch from (seed, step, host_id) alone — no coordinator, no state to
+lose on restart. That is exactly what this loader does; after a failure the
+restored step counter reproduces the identical stream (tests assert this).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class ShardedLoader:
+    def __init__(
+        self,
+        n: int,
+        global_batch: int,
+        *,
+        seed: int = 0,
+        host_id: int = 0,
+        n_hosts: int = 1,
+        prefetch: int = 2,
+        make_batch: Optional[Callable] = None,
+    ):
+        assert global_batch % n_hosts == 0
+        self.n = n
+        self.global_batch = global_batch
+        self.local_batch = global_batch // n_hosts
+        self.seed = seed
+        self.host_id = host_id
+        self.n_hosts = n_hosts
+        self.prefetch = prefetch
+        self.make_batch = make_batch or (lambda idx: idx)
+
+    def indices_for_step(self, step: int) -> np.ndarray:
+        """Global determinism: batch = permutation(seed, epoch)[step-slice];
+        this host's slice is contiguous within the global batch."""
+        steps_per_epoch = max(self.n // self.global_batch, 1)
+        epoch, pos = divmod(step, steps_per_epoch)
+        rng = np.random.default_rng((self.seed, epoch))
+        perm = rng.permutation(self.n)
+        start = pos * self.global_batch + self.host_id * self.local_batch
+        return perm[start : start + self.local_batch]
+
+    def __iter__(self) -> Iterator:
+        return self.iterate(0)
+
+    def iterate(self, start_step: int) -> Iterator:
+        """Prefetching iterator resumable at any step (restart path)."""
+        q: queue.Queue = queue.Queue(maxsize=self.prefetch)
+        stop = threading.Event()
+
+        def producer():
+            step = start_step
+            while not stop.is_set():
+                batch = self.make_batch(self.indices_for_step(step))
+                q.put((step, batch))
+                step += 1
+
+        t = threading.Thread(target=producer, daemon=True)
+        t.start()
+        try:
+            while True:
+                yield q.get()
+        finally:
+            stop.set()

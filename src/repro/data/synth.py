@@ -1,0 +1,180 @@
+"""Synthetic weak-supervision datasets with the statistical shape of the
+paper's six benchmarks (Table 3): frozen-backbone features + probabilistic
+labels from simulated labeling functions + noisy human annotators.
+
+Generation model
+----------------
+1. Ground truth: C class prototypes in R^d; sample i draws its feature from
+   a Gaussian around its class prototype with within-class spread sigma and a
+   shared "nuisance" subspace (mimics ResNet50/BERT features: informative
+   low-dim structure inside a high-dim embedding).
+2. Labeling functions (Snorkel-style weak supervision [32]): each LF is a
+   noisy linear voter with per-LF accuracy in [acc_lo, acc_hi] and coverage
+   in [cov_lo, cov_hi] (abstains elsewhere). A one-parameter-per-LF
+   generative label model (accuracy-weighted vote — the Snorkel MV-with-
+   learned-weights special case) combines votes into probabilistic labels.
+3. Human annotators: flip ground truth with probability `annotator_error`
+   (Section 5.1: 5%).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.annotation import simulate_annotators
+
+
+@dataclass
+class ChefDataset:
+    name: str
+    X: jax.Array  # [N, d] frozen-backbone features
+    y_prob: jax.Array  # [N, C] current (probabilistic or cleaned) labels
+    y_weight: jax.Array  # [N] gamma for uncleaned, 1 for cleaned
+    cleaned: jax.Array  # [N] bool
+    y_true: jax.Array  # [N] int — hidden ground truth (simulation only)
+    human_labels: jax.Array  # [N, A] simulated annotator labels
+    X_val: jax.Array
+    y_val: jax.Array  # [Nv, C] one-hot
+    X_test: jax.Array
+    y_test: jax.Array  # [Nt] int
+    n_classes: int
+
+    @property
+    def n(self) -> int:
+        return self.X.shape[0]
+
+    def clean(self, idx: jax.Array, labels: jax.Array) -> "ChefDataset":
+        """Apply cleaned (deterministic) labels at `idx`."""
+        onehot = jax.nn.one_hot(labels, self.n_classes, dtype=self.y_prob.dtype)
+        return replace(
+            self,
+            y_prob=self.y_prob.at[idx].set(onehot),
+            y_weight=self.y_weight.at[idx].set(1.0),
+            cleaned=self.cleaned.at[idx].set(True),
+        )
+
+
+def _labeling_functions(key, X, protos, y_true, n_lfs, acc_range, cov_range, n_classes):
+    """Simulated LF votes [N, L] in {-1 (abstain), 0..C-1}.
+
+    Each LF is a *noisy-prototype voter*: it classifies by nearest
+    perturbed prototype and abstains when its margin is small. Errors are
+    therefore SYSTEMATIC (clustered in feature regions the LF is blind to),
+    like real Snorkel heuristics — uniform random flips would average out
+    over N and make cleaning pointless."""
+    del y_true
+    N, d = X.shape
+    ks = jax.random.split(key, n_lfs * 3).reshape(n_lfs, 3)
+    proto_scale = jnp.sqrt(jnp.mean(protos**2) + 1e-9)
+    votes = []
+    for l in range(n_lfs):
+        ka, kc, kw = ks[l, 0], ks[l, 1], ks[l, 2]
+        # accuracy knob -> prototype perturbation magnitude. The sqrt(d/48)
+        # factor keeps the perturbation's component along the true class
+        # direction dimension-independent (a random vector's projection onto
+        # any fixed direction shrinks as 1/sqrt(d)).
+        acc = jax.random.uniform(ka, (), minval=acc_range[0], maxval=acc_range[1])
+        err_scale = 6.0 * (1.0 - acc) * (d / 48.0) ** 0.25
+        protos_l = protos + err_scale * proto_scale * jax.random.normal(kc, protos.shape)
+        scores = X @ protos_l.T - 0.5 * jnp.sum(protos_l**2, axis=-1)  # lin. discr.
+        vote = jnp.argmax(scores, axis=-1)
+        top2 = jax.lax.top_k(scores, 2)[0]
+        margin = top2[:, 0] - top2[:, 1]
+        cov = jax.random.uniform(kw, (), minval=cov_range[0], maxval=cov_range[1])
+        thresh = jnp.quantile(margin, 1.0 - cov)
+        votes.append(jnp.where(margin >= thresh, vote, -1))
+    return jnp.stack(votes, axis=1), None
+
+
+def _label_model(votes: jax.Array, y_true: jax.Array, n_classes: int) -> jax.Array:
+    """Accuracy-weighted vote -> probabilistic labels [N, C]. LF accuracies
+    are estimated from agreement-with-majority (no ground-truth peeking),
+    which is the 1-parameter-per-LF generative label model under class
+    balance (Snorkel [32] Eq. 2 special case)."""
+    N, L = votes.shape
+    onehot = jnp.where(
+        votes[..., None] >= 0,
+        jax.nn.one_hot(jnp.maximum(votes, 0), n_classes),
+        0.0,
+    )  # [N, L, C]
+    mv = jnp.argmax(onehot.sum(axis=1) + 1e-6, axis=-1)  # majority vote
+    agree = jnp.where(votes >= 0, (votes == mv[:, None]).astype(jnp.float32), jnp.nan)
+    acc_hat = jnp.clip(jnp.nanmean(agree, axis=0), 0.55, 0.95)  # [L]
+    logit_w = jnp.log(acc_hat / (1 - acc_hat)) / max(n_classes - 1, 1)
+    scores = jnp.einsum("nlc,l->nc", onehot, logit_w)
+    return jax.nn.softmax(scores, axis=-1)
+
+
+def make_dataset(
+    key,
+    *,
+    name: str = "synth",
+    n_train: int = 4000,
+    n_val: int = 200,
+    n_test: int = 400,
+    feature_dim: int = 128,
+    n_classes: int = 2,
+    class_sep: float = 1.0,
+    noise: float = 1.0,
+    n_lfs: int = 4,
+    lf_acc: tuple = (0.5, 0.68),
+    lf_cov: tuple = (0.3, 0.8),
+    gamma: float = 0.8,
+    n_annotators: int = 3,
+    annotator_error: float = 0.05,
+) -> ChefDataset:
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    # class_sep is defined at the d=48 reference scale; normalizing by
+    # sqrt(d/48) keeps the inter-prototype distance (in noise units)
+    # dimension-independent, so 'hard' stays hard at BERT/ResNet widths.
+    protos = jax.random.normal(k1, (n_classes, feature_dim)) * class_sep * (
+        48.0 / feature_dim
+    ) ** 0.5
+    n_all = n_train + n_val + n_test
+    y_all = jax.random.randint(k2, (n_all,), 0, n_classes)
+    X_all = protos[y_all] + jax.random.normal(k3, (n_all, feature_dim)) * noise
+    X, X_val, X_test = jnp.split(X_all, [n_train, n_train + n_val])
+    y_tr, y_v, y_te = jnp.split(y_all, [n_train, n_train + n_val])
+
+    votes, _ = _labeling_functions(k4, X, protos, y_tr, n_lfs, lf_acc, lf_cov, n_classes)
+    y_prob = _label_model(votes, y_tr, n_classes)
+    human = simulate_annotators(k5, y_tr, n_classes, n_annotators, annotator_error)
+
+    return ChefDataset(
+        name=name,
+        X=X,
+        y_prob=y_prob,
+        y_weight=jnp.full((n_train,), gamma, jnp.float32),
+        cleaned=jnp.zeros((n_train,), bool),
+        y_true=y_tr,
+        human_labels=human,
+        X_val=X_val,
+        y_val=jax.nn.one_hot(y_v, n_classes),
+        X_test=X_test,
+        y_test=y_te,
+        n_classes=n_classes,
+    )
+
+
+def make_paper_dataset(name: str, key=None, scale: float = 1.0) -> ChefDataset:
+    """Synthetic stand-in with the size/shape of one of the paper's six
+    datasets (Table 3). `scale` < 1 shrinks N for CI-speed runs."""
+    from repro.configs.chef_lr import paper_dataset_specs
+
+    spec = paper_dataset_specs()[name]
+    import zlib
+
+    key = key if key is not None else jax.random.key(zlib.crc32(name.encode()) % (2**31))
+    return make_dataset(
+        key,
+        name=name,
+        n_train=max(512, int(spec.n_train * scale)),
+        n_val=max(64, int(spec.n_val * scale)),
+        n_test=max(64, int(spec.n_test * scale)),
+        feature_dim=spec.feature_dim,
+        n_classes=spec.n_classes,
+    )

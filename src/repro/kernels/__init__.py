@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the perf-critical compute:
+
+  infl_scores      — fused Eq. 6 INFL score matrix (sample-selector hot loop)
+  lr_grad          — fused LR-head batch gradient (training / CG rhs)
+  lr_hvp           — fused Hessian-vector product (CG / power-method inner loop)
+  flash_attention  — GQA flash attention forward (serving hot path)
+
+Each kernel: <name>.py (pl.pallas_call + BlockSpec) with a pure-jnp oracle in
+ref.py and a jit'd padding/dispatch wrapper in ops.py. On CPU (this
+container) they run with interpret=True; on TPU they compile.
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,110 @@
+"""Pallas flash-attention forward (GQA + causal + sliding window).
+
+Grid (B, Hq, nq, nk) — the KV dim is innermost/sequential ("arbitrary"
+semantics on TPU) so the online-softmax running max/denominator live in VMEM
+scratch that persists across KV steps; the output block is revisited and
+rescaled in place, then normalized on the last KV step.
+
+Block sizes default to (128, 128): MXU-aligned, and the working set
+(q, k, v, scores, acc tiles) stays well under VMEM.
+
+GQA is expressed in the k/v BlockSpec index maps (h // group) — no repeated
+K/V materialization.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    qpos_ref, kpos_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, scale: float, causal: bool, window: int, nk: int,
+):
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # [BQ, D]
+    k = k_ref[0, 0].astype(jnp.float32)  # [BK, D]
+    v = v_ref[0, 0].astype(jnp.float32)  # [BK, D]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # [BQ, BK]
+    qp = qpos_ref[...]  # [BQ]
+    kp = kpos_ref[...]  # [BK]
+    mask = jnp.ones(s.shape, bool)
+    if causal:
+        mask &= qp[:, None] >= kp[None, :]
+    if window:
+        mask &= qp[:, None] - kp[None, :] < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    alpha = jnp.exp(jnp.minimum(m_prev - m_new, 0.0))
+    p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+    l_new = l_scr[...] * alpha + jnp.sum(p, axis=-1)
+    acc = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+    acc_scr[...] = acc
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc / jnp.maximum(l_new, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jax.Array,  # [B, Hq, Sq, D]
+    k: jax.Array,  # [B, Hkv, Skv, D]
+    v: jax.Array,  # [B, Hkv, Skv, D]
+    qpos: jax.Array,  # [Sq] int32
+    kpos: jax.Array,  # [Skv] int32
+    *,
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    B, Hq, Sq, D = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    assert Sq % block_q == 0 and Skv % block_k == 0, (Sq, Skv, block_q, block_k)
+    nq, nk = Sq // block_q, Skv // block_k
+    kernel = functools.partial(
+        _kernel, scale=D**-0.5, causal=causal, window=window, nk=nk
+    )
+    grid = (B, Hq, nq, nk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q,), lambda b, h, qi, ki: (qi,)),  # qpos
+            pl.BlockSpec((block_k,), lambda b, h, qi, ki: (ki,)),  # kpos
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, qi, ki: (b, h // G, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, qi, ki: (b, h // G, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D), lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qpos, kpos, q, k, v)

@@ -1,0 +1,116 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+Handles padding to TPU-friendly tiles (rows to `block_n` multiples, classes /
+feature dims to 128 lanes), backend dispatch (interpret=True on CPU so the
+kernels execute and validate in this container; compiled on TPU), and
+restores reference semantics (slicing padding back off).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.infl_scores import infl_scores_pallas
+from repro.kernels.lr_grad import lr_grad_pallas
+from repro.kernels.lr_hvp import lr_hvp_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_rows(x, mult):
+    n = x.shape[0]
+    pad = (-n) % mult
+    if pad == 0:
+        return x, n
+    return jnp.pad(x, [(0, pad)] + [(0, 0)] * (x.ndim - 1)), n
+
+
+def _pad_dim(x, axis, mult):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _block_n(n: int) -> int:
+    for b in (512, 256, 128, 64, 32, 16, 8, 4, 2, 1):
+        if n % b == 0:
+            return b
+    return 1
+
+
+@functools.partial(jax.jit, static_argnames=("gamma",))
+def infl_scores(v, Xa, P, Y, gamma: float):
+    C = v.shape[0]
+    lane = 128 if not _interpret() else 8
+    vp = _pad_dim(_pad_dim(v, 0, lane), 1, lane)
+    Xp = _pad_dim(Xa, 1, lane)
+    Pp = _pad_dim(P, 1, lane)
+    Yp = _pad_dim(Y, 1, lane)
+    Xp, n = _pad_rows(Xp, 1)
+    bn = _block_n(Xp.shape[0])
+    S = infl_scores_pallas(
+        vp, Xp, _pad_rows(Pp, 1)[0], _pad_rows(Yp, 1)[0], gamma,
+        block_n=bn, c_actual=C, interpret=_interpret(),
+    )
+    return S[:n, :C]
+
+
+@functools.partial(jax.jit, static_argnames=("l2",))
+def lr_grad(w, Xa, Y, weights, l2: float):
+    C = w.shape[0]
+    N = Xa.shape[0]
+    lane = 128 if not _interpret() else 8
+    wp = _pad_dim(_pad_dim(w, 0, lane), 1, lane)
+    Xp = _pad_dim(Xa, 1, lane)
+    Yp = _pad_dim(Y, 1, lane)
+    bn = _block_n(N)
+    # padded rows get weight 0 => no contribution
+    Xp, _ = _pad_rows(Xp, bn)
+    Yp, _ = _pad_rows(Yp, bn)
+    w8p, _ = _pad_rows(weights, bn)
+    g = lr_grad_pallas(wp, Xp, Yp, w8p, 0.0, block_n=_block_n(Xp.shape[0]),
+                       c_actual=C, interpret=_interpret())
+    g = g * (Xp.shape[0] / N)  # kernel divided by padded N
+    return g[:C, : Xa.shape[1]] + l2 * w.astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("l2",))
+def lr_hvp(w, v, Xa, weights, l2: float, P=None):
+    del P  # probs are recomputed inside the fused kernel
+    C = w.shape[0]
+    N = Xa.shape[0]
+    lane = 128 if not _interpret() else 8
+    wp = _pad_dim(_pad_dim(w, 0, lane), 1, lane)
+    vp = _pad_dim(_pad_dim(v, 0, lane), 1, lane)
+    Xp = _pad_dim(Xa, 1, lane)
+    bn = _block_n(N)
+    Xp, _ = _pad_rows(Xp, bn)
+    w8p, _ = _pad_rows(weights, bn)
+    h = lr_hvp_pallas(wp, vp, Xp, w8p, 0.0, block_n=_block_n(Xp.shape[0]),
+                      c_actual=C, interpret=_interpret())
+    h = h * (Xp.shape[0] / N)
+    return h[:C, : Xa.shape[1]] + l2 * v.astype(jnp.float32)
+
+
+def flash_attention(q, k, v, qpos, kpos, spec):
+    """Model-layer adapter: q [B,S,H,D] -> kernel layout [B,H,S,D]."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    Sq, Skv = qt.shape[2], kt.shape[2]
+    bq = min(128, Sq) if Sq % min(128, Sq) == 0 else 1
+    bk = min(128, Skv) if Skv % min(128, Skv) == 0 else 1
+    o = flash_attention_pallas(
+        qt, kt, vt, qpos.astype(jnp.int32), kpos.astype(jnp.int32),
+        causal=spec.causal, window=spec.window,
+        block_q=bq, block_k=bk, interpret=_interpret(),
+    )
+    return o.transpose(0, 2, 1, 3)

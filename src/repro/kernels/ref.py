@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth
+that tests/test_kernels.py sweeps shapes/dtypes against)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def infl_scores_ref(v, Xa, P, Y, gamma: float) -> jax.Array:
+    """Eq. 6 score matrix. v [C,D]; Xa [N,D]; P,Y [N,C] -> [N,C]."""
+    U = (Xa.astype(jnp.float32) @ v.astype(jnp.float32).T)
+    base = jnp.sum((Y + (1.0 - gamma) * (P - Y)) * U, axis=-1)
+    return base[:, None] - U
+
+
+def lr_grad_ref(w, Xa, Y, weights, l2: float) -> jax.Array:
+    """Fused softmax + weighted residual + gradient matmul."""
+    z = (Xa.astype(jnp.float32) @ w.astype(jnp.float32).T)
+    P = jax.nn.softmax(z, axis=-1)
+    R = (P - Y) * weights[:, None]
+    return jnp.einsum("nc,nd->cd", R, Xa.astype(jnp.float32)) / Xa.shape[0] + l2 * w
+
+
+def lr_hvp_ref(w, v, Xa, weights, l2: float, P=None) -> jax.Array:
+    """Fused Gauss-Newton (== Hessian for CE) vector product."""
+    if P is None:
+        z = (Xa.astype(jnp.float32) @ w.astype(jnp.float32).T)
+        P = jax.nn.softmax(z, axis=-1)
+    U = Xa.astype(jnp.float32) @ v.astype(jnp.float32).T
+    S = P * U - P * jnp.sum(P * U, axis=-1, keepdims=True)
+    S = S * weights[:, None]
+    return jnp.einsum("nc,nd->cd", S, Xa.astype(jnp.float32)) / Xa.shape[0] + l2 * v
+
+
+def flash_attention_ref(q, k, v, qpos, kpos, *, causal=True, window=0) -> jax.Array:
+    """q [B,Hq,Sq,D]; k,v [B,Hkv,Skv,D]; direct softmax attention."""
+    B, Hq, Sq, D = q.shape
+    Hkv = k.shape[1]
+    G = Hq // Hkv
+    qf = q.astype(jnp.float32).reshape(B, Hkv, G, Sq, D)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kf) * (D**-0.5)
+    m = jnp.ones((Sq, kpos.shape[0]), bool)
+    if causal:
+        m &= qpos[:, None] >= kpos[None, :]
+    if window:
+        m &= qpos[:, None] - kpos[None, :] < window
+    s = jnp.where(m[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, vf)
+    return o.reshape(B, Hq, Sq, D).astype(q.dtype)

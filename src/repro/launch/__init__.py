@@ -1,0 +1,3 @@
+from repro.launch.mesh import host_mesh, make_mesh_for, make_production_mesh
+
+__all__ = ["host_mesh", "make_mesh_for", "make_production_mesh"]

@@ -1,0 +1,142 @@
+"""ShapeDtypeStruct stand-ins for every model input of every (arch x shape)
+cell — weak-type-correct, shardable, and never allocated.
+
+`train_*` cells lower `train_step(state, batch)`;
+`prefill_*` cells lower `prefill_step(params, batch)`;
+`decode_*` / `long_*` cells lower `decode_step(params, cache, batch)` with a
+KV cache of `seq_len` capacity (window/state-bounded for sub-quadratic archs).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.dist.sharding import batch_axes, make_resolver
+
+
+def _sds(mesh, shape, dtype, spec: P):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype, sharding=NamedSharding(mesh, spec))
+
+
+def _bspec(mesh, B: int, extra_dims: int) -> P:
+    ba = batch_axes(mesh)
+    dp = math.prod(mesh.shape[a] for a in ba) if ba else 1
+    lead = (ba if len(ba) > 1 else ba[0]) if (ba and B % dp == 0) else None
+    return P(lead, *([None] * extra_dims))
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec, mesh, *, decode: bool = False) -> dict:
+    """The `batch` argument pytree."""
+    B = shape.global_batch
+    S = 1 if decode else shape.seq_len
+    batch: dict = {"tokens": _sds(mesh, (B, S), jnp.int32, _bspec(mesh, B, 1))}
+    if not decode:
+        if shape.kind == "train":
+            batch["targets"] = _sds(mesh, (B, S), jnp.int32, _bspec(mesh, B, 1))
+            batch["weights"] = _sds(mesh, (B,), jnp.float32, _bspec(mesh, B, 0))
+    if cfg.is_encoder_decoder and not decode:
+        batch["enc_frames"] = _sds(
+            mesh, (B, cfg.encoder_seq, cfg.d_model), jnp.bfloat16, _bspec(mesh, B, 2)
+        )
+    if cfg.rope_kind == "mrope":
+        batch["pos3"] = _sds(mesh, (B, 3, S), jnp.int32, _bspec(mesh, B, 2))
+    return batch
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeSpec, mesh, kv_dtype=None) -> Any:
+    """Abstract KV/state cache matching model.init_cache structure, with
+    cache-length (and recurrent-state width) sharded over 'model' and batch
+    over ('pod','data')."""
+    from repro.models.model import Model
+
+    model = Model(cfg, param_dtype=jnp.bfloat16)
+    model.kv_dtype = kv_dtype
+    B, S = shape.global_batch, shape.seq_len
+    tmpl = jax.eval_shape(lambda: model.init_cache(B, S, dtype=jnp.bfloat16))
+    resolver = make_resolver(mesh)
+    msize = mesh.shape.get("model", 1)
+    ba = batch_axes(mesh)
+    dp = math.prod(mesh.shape[a] for a in ba) if ba else 1
+    blead = (ba if len(ba) > 1 else ba[0]) if (ba and B % dp == 0) else None
+
+    def assign(path, leaf):
+        ks = jax.tree_util.keystr(path)
+        shp = leaf.shape
+        if leaf.ndim == 0:  # pos scalar
+            return _sds(mesh, shp, leaf.dtype, P())
+        # leaves under ['blocks'] carry a leading stacked-layers dim
+        off = 1 if "'blocks'" in ks else 0
+        parts: list = [None] * leaf.ndim
+        if leaf.ndim > off:
+            parts[off] = blead  # batch dim
+
+        def try_model(d):
+            if d < leaf.ndim and shp[d] % msize == 0 and shp[d] >= msize:
+                parts[d] = "model"
+                return True
+            return False
+
+        nd = leaf.ndim - off  # logical rank without the stacking dim
+        if "'kv'" in ks and nd == 4:  # [B, W, Hkv, D] ring buffer
+            try_model(off + 1) or try_model(off + 2)
+        elif "'kv'" in ks and nd == 3:  # quantized-cache scales [B, W, Hkv]
+            try_model(off + 1)
+        elif ("'xk'" in ks or "'xv'" in ks) and nd == 4:  # [B, Se, Hkv, D]
+            try_model(off + 2)
+        elif "'rg'" in ks:
+            # RGLRUState: h [B, W] | conv [B, cw-1, W] — width is last
+            try_model(leaf.ndim - 1)
+        elif "'ssd'" in ks:
+            # SSDState: ssm [B, H, P, N] -> heads | conv [B, cw-1, c] -> last
+            try_model(off + 1 if nd == 4 else leaf.ndim - 1)
+        return _sds(mesh, shp, leaf.dtype, P(*parts))
+
+    return jax.tree_util.tree_map_with_path(assign, tmpl)
+
+
+def plan_accum(cfg: ModelConfig, shape: ShapeSpec, mesh) -> int:
+    """Gradient-accumulation factor: keep per-device microbatch at 1-4
+    sequences depending on model size so activations (+remat saves) fit HBM."""
+    ba = batch_axes(mesh)
+    dp = math.prod(mesh.shape[a] for a in ba) if ba else 1
+    n = cfg.param_count()
+    seqs_per_dev = 1 if n > 2e10 else (2 if n > 2e9 else 4)
+    micro_global = min(shape.global_batch, dp * seqs_per_dev)
+    accum = max(1, shape.global_batch // micro_global)
+    while shape.global_batch % accum:
+        accum -= 1
+    return accum
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec, mesh, optimizer_name: str = "adamw",
+                kv_dtype=None, fsdp: bool = True):
+    """Full jit argument pytrees for the cell.
+
+    Returns (kind, args):
+      train   -> (TrainState, batch)
+      prefill -> (params, batch)
+      decode  -> (params, cache, batch)
+    """
+    from repro.models.layers import abstract_creator
+    from repro.models.model import Model
+    from repro.training.state import abstract_train_state
+
+    resolver = make_resolver(mesh, fsdp=fsdp)
+    create = abstract_creator(mesh, resolver, jnp.bfloat16)
+    model = Model(cfg, param_dtype=jnp.bfloat16)
+    params = model.abstract_params(create)
+    if shape.kind == "train":
+        state = abstract_train_state(params, optimizer_name, mesh)
+        return "train", (state, batch_specs(cfg, shape, mesh))
+    if shape.kind == "prefill":
+        return "prefill", (params, batch_specs(cfg, shape, mesh))
+    return "decode", (
+        params,
+        cache_specs(cfg, shape, mesh, kv_dtype=kv_dtype),
+        batch_specs(cfg, shape, mesh, decode=True),
+    )

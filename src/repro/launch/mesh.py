@@ -1,0 +1,45 @@
+"""Production mesh construction.
+
+Single pod: (data=16, model=16) — 256 chips (one v5e pod).
+Multi-pod:  (pod=2, data=16, model=16) — 512 chips across 2 pods; the 'pod'
+axis carries only data parallelism (gradient all-reduce) so the slow inter-pod
+links never sit on the TP critical path.
+
+Defined as functions (never module-level constants) so importing this module
+does not touch jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_mesh_for(n_devices: int, model_parallel: int = 16, pods: int = 1):
+    """Elastic-scaling helper: factor an arbitrary device count into
+    (pod, data, model). Used by the resharding restore path."""
+    assert n_devices % (model_parallel * pods) == 0, (n_devices, model_parallel, pods)
+    data = n_devices // (model_parallel * pods)
+    if pods > 1:
+        return jax.make_mesh(
+            (pods, data, model_parallel),
+            ("pod", "data", "model"),
+            axis_types=(jax.sharding.AxisType.Auto,) * 3,
+        )
+    return jax.make_mesh(
+        (data, model_parallel),
+        ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )
+
+
+def host_mesh(model_parallel: int = 1):
+    """A trivial mesh over the locally visible devices (tests / examples)."""
+    n = len(jax.devices())
+    return make_mesh_for(n, model_parallel=model_parallel)

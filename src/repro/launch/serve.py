@@ -1,0 +1,54 @@
+"""Batched serving driver: loads (or inits) a model, runs a wave of batched
+greedy-decode requests through the ServeEngine.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --requests 8
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.models import Model
+from repro.serving.engine import Request, ServeEngine
+from repro.utils import get_logger
+
+log = get_logger("repro.serve")
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt_len", type=int, default=32)
+    ap.add_argument("--max_new", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = reduced(get_config(args.arch))
+    model = Model(cfg)
+    params = model.init(jax.random.key(args.seed))
+    engine = ServeEngine(model, params, batch_size=args.batch,
+                         max_len=args.prompt_len + args.max_new)
+
+    rng = np.random.default_rng(args.seed)
+    reqs = [
+        Request(uid=i, prompt=rng.integers(0, cfg.vocab_size, args.prompt_len),
+                max_new=args.max_new)
+        for i in range(args.requests)
+    ]
+    t0 = time.time()
+    done = engine.run(reqs)
+    dt = time.time() - t0
+    n_tok = sum(len(r.out) for r in done)
+    log.info("served %d requests, %d tokens in %.2fs (%.1f tok/s)",
+             len(done), n_tok, dt, n_tok / dt)
+    return {"requests": len(done), "tokens": n_tok, "wall_s": dt}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from repro.models.model import Model
+from repro.models.attention import AttnSpec, KVCache
+
+__all__ = ["Model", "AttnSpec", "KVCache"]

@@ -1,0 +1,373 @@
+"""GQA attention: memory-efficient chunked online-softmax for train/prefill,
+direct cache attention for decode, ring-buffer KV caches for sliding windows.
+
+Three execution paths:
+* ``direct``  — materializes [B,H,Sq,Skv] scores; used for short sequences.
+* ``chunked`` — lax.scan over query and KV chunks with running (max, denom)
+  accumulators (online softmax). Peak memory is O(chunk_q x chunk_kv); this is
+  the TPU-reasonable jnp fallback XLA fuses well and the dry-run default.
+* ``flash``   — the Pallas kernel in repro.kernels.flash_attention (opt-in).
+
+GQA layout: q [B, S, Hq, D]; k, v [B, S, Hkv, D]; queries are grouped as
+[B, S, Hkv, G, D] with G = Hq // Hkv so every einsum contracts against the
+shared kv head without materializing repeated K/V.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+class AttnSpec(NamedTuple):
+    causal: bool = True
+    window: int = 0  # 0 => unbounded (full attention)
+    logit_softcap: float = 0.0
+
+
+def _mask(qpos: jax.Array, kpos: jax.Array, spec: AttnSpec) -> jax.Array:
+    """[Sq, Skv] boolean validity mask from absolute positions."""
+    m = jnp.ones((qpos.shape[0], kpos.shape[0]), dtype=bool)
+    if spec.causal:
+        m &= qpos[:, None] >= kpos[None, :]
+    if spec.window:
+        m &= qpos[:, None] - kpos[None, :] < spec.window
+    return m
+
+
+def _scores(q, k, scale, spec: AttnSpec):
+    """q [B,Hk,G,Sq,D], k [B,Hk,Skv,D] -> f32 scores [B,Hk,G,Sq,Skv]."""
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", q, k, preferred_element_type=jnp.float32)
+    s = s * scale
+    if spec.logit_softcap:
+        s = spec.logit_softcap * jnp.tanh(s / spec.logit_softcap)
+    return s
+
+
+def direct_attention(q, k, v, qpos, kpos, spec: AttnSpec, kv_valid=None):
+    """q [B,Sq,Hq,D]; k,v [B,Skv,Hkv,D]; qpos [Sq]; kpos [Skv]."""
+    B, Sq, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, D).transpose(0, 2, 3, 1, 4)  # [B,Hk,G,Sq,D]
+    kk = k.transpose(0, 2, 1, 3)  # [B,Hk,Skv,D]
+    vv = v.transpose(0, 2, 1, 3)
+    s = _scores(qg, kk, D**-0.5, spec)
+    m = _mask(qpos, kpos, spec)
+    if kv_valid is not None:  # [B, Skv] per-batch cache validity
+        m = m[None, :, :] & kv_valid[:, None, :]
+        s = jnp.where(m[:, None, None, :, :], s, NEG_INF)
+    else:
+        s = jnp.where(m[None, None, None, :, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, vv)
+    return o.transpose(0, 3, 1, 2, 4).reshape(B, Sq, Hq, D)
+
+
+def _chunk_layout(q, k, v, qpos, kpos, chunk_q, chunk_kv):
+    B, Sq, Hq, D = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    nq, nk = Sq // chunk_q, Skv // chunk_kv
+    qg = q.reshape(B, nq, chunk_q, Hkv, G, D).transpose(1, 0, 3, 4, 2, 5)  # [nq,B,Hk,G,cq,D]
+    kc = k.reshape(B, nk, chunk_kv, Hkv, D).transpose(1, 0, 3, 2, 4)  # [nk,B,Hk,ck,D]
+    vc = v.reshape(B, nk, chunk_kv, Hkv, D).transpose(1, 0, 3, 2, 4)
+    return qg, kc, vc, qpos.reshape(nq, chunk_q), kpos.reshape(nk, chunk_kv)
+
+
+def _chunked_fwd_impl(q, k, v, qpos, kpos, spec: AttnSpec, chunk_q: int, chunk_kv: int):
+    """Online-softmax forward. Returns (out [B,Sq,Hq,D], lse [nq,B,Hk,G,cq])."""
+    B, Sq, Hq, D = q.shape
+    scale = D**-0.5
+    qg, kc, vc, qpos_c, kpos_c = _chunk_layout(q, k, v, qpos, kpos, chunk_q, chunk_kv)
+
+    def q_chunk_body(_, qx):
+        qi, qp = qx  # [B,Hk,G,cq,D], [cq]
+
+        def kv_body(carry, kx):
+            m_run, l_run, acc = carry
+            ki, vi, kp = kx
+            s = _scores(qi, ki, scale, spec)  # [B,Hk,G,cq,ck] f32
+            mask = _mask(qp, kp, spec)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+            alpha = jnp.exp(jnp.minimum(m_run - m_new, 0.0))
+            p = jnp.exp(s - m_new[..., None])
+            p = jnp.where(mask[None, None, None], p, 0.0)
+            l_new = l_run * alpha + jnp.sum(p, axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p.astype(vi.dtype), vi,
+                preferred_element_type=jnp.float32,
+            )
+            return (m_new, l_new, acc), None
+
+        init = (
+            jnp.full(qi.shape[:-1], NEG_INF, jnp.float32),
+            jnp.zeros(qi.shape[:-1], jnp.float32),
+            jnp.zeros(qi.shape, jnp.float32),
+        )
+        (m_f, l_f, acc), _ = jax.lax.scan(kv_body, init, (kc, vc, kpos_c))
+        out = acc / jnp.maximum(l_f, 1e-30)[..., None]
+        lse = m_f + jnp.log(jnp.maximum(l_f, 1e-30))  # [B,Hk,G,cq]
+        return None, (out.astype(q.dtype), lse)
+
+    _, (outs, lse) = jax.lax.scan(q_chunk_body, None, (qg, qpos_c))
+    B, Sq, Hq, D = q.shape
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sq, Hq, D)
+    return out, lse
+
+
+def _chunked_attention_base(q, k, v, qpos, kpos, spec, chunk_q, chunk_kv):
+    return _chunked_fwd_impl(q, k, v, qpos, kpos, spec, chunk_q, chunk_kv)[0]
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7))
+def _chunked_attention_vjp(q, k, v, qpos, kpos, spec, chunk_q, chunk_kv):
+    return _chunked_attention_base(q, k, v, qpos, kpos, spec, chunk_q, chunk_kv)
+
+
+def _chunked_vjp_fwd(q, k, v, qpos, kpos, spec, chunk_q, chunk_kv):
+    out, lse = _chunked_fwd_impl(q, k, v, qpos, kpos, spec, chunk_q, chunk_kv)
+    return out, (q, k, v, qpos, kpos, out, lse)
+
+
+def _chunked_vjp_bwd(spec, chunk_q, chunk_kv, res, dout):
+    """Flash-style backward: recompute scores per (q-chunk, kv-chunk) pair —
+    O(chunk^2) live memory instead of saving every softmax chunk."""
+    q, k, v, qpos, kpos, out, lse = res
+    B, Sq, Hq, D = q.shape
+    scale = D**-0.5
+    qg, kc, vc, qpos_c, kpos_c = _chunk_layout(q, k, v, qpos, kpos, chunk_q, chunk_kv)
+    nq, nk = qg.shape[0], kc.shape[0]
+    Hkv, G = kc.shape[2], qg.shape[3]
+    og = out.reshape(B, nq, chunk_q, Hkv, G, D).transpose(1, 0, 3, 4, 2, 5)
+    dog = dout.reshape(B, nq, chunk_q, Hkv, G, D).transpose(1, 0, 3, 4, 2, 5)
+    # softmax correction: delta = rowsum(dout * out)
+    delta = jnp.sum(dog.astype(jnp.float32) * og.astype(jnp.float32), axis=-1)  # [nq,B,Hk,G,cq]
+
+    def q_chunk_body(carry, qx):
+        dk_acc, dv_acc = carry  # [nk,B,Hk,ck,D] f32
+        qi, qp, lse_i, dlt_i, do_i = qx
+
+        def kv_body(c2, kx):
+            dq_acc = c2
+            ki, vi, kp, idx = kx
+            s = _scores(qi, ki, scale, spec)  # [B,Hk,G,cq,ck]
+            mask = _mask(qp, kp, spec)[None, None, None]
+            p = jnp.where(mask, jnp.exp(s - lse_i[..., None]), 0.0)
+            do_f = do_i.astype(jnp.float32)
+            dv_i = jnp.einsum("bhgqk,bhgqd->bhkd", p, do_f)
+            dp = jnp.einsum("bhgqd,bhkd->bhgqk", do_f, vi.astype(jnp.float32))
+            ds = p * (dp - dlt_i[..., None]) * scale
+            dq_acc = dq_acc + jnp.einsum("bhgqk,bhkd->bhgqd", ds, ki.astype(jnp.float32))
+            dk_i = jnp.einsum("bhgqk,bhgqd->bhkd", ds, qi.astype(jnp.float32))
+            return dq_acc, (dk_i, dv_i)
+
+        dq0 = jnp.zeros(qi.shape, jnp.float32)
+        dq_i, (dk_stack, dv_stack) = jax.lax.scan(
+            kv_body, dq0, (kc, vc, kpos_c, jnp.arange(nk))
+        )
+        return (dk_acc + dk_stack, dv_acc + dv_stack), dq_i
+
+    dk0 = jnp.zeros(kc.shape, jnp.float32)
+    dv0 = jnp.zeros(vc.shape, jnp.float32)
+    (dk_c, dv_c), dq_c = jax.lax.scan(
+        q_chunk_body, (dk0, dv0), (qg, qpos_c, lse, delta, dog)
+    )
+    # back to [B, S, H, D]
+    dq = dq_c.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sq, Hq, D).astype(q.dtype)
+    Skv = k.shape[1]
+    dk = dk_c.transpose(1, 0, 3, 2, 4).reshape(B, Skv, Hkv, D).astype(k.dtype)
+    dv = dv_c.transpose(1, 0, 3, 2, 4).reshape(B, Skv, Hkv, D).astype(v.dtype)
+    return dq, dk, dv, None, None
+
+
+_chunked_attention_vjp.defvjp(_chunked_vjp_fwd, _chunked_vjp_bwd)
+
+
+def chunked_attention(
+    q,
+    k,
+    v,
+    qpos,
+    kpos,
+    spec: AttnSpec,
+    chunk_q: int = 1024,
+    chunk_kv: int = 1024,
+):
+    """Memory-efficient attention: online-softmax forward, flash-style
+    recompute backward (custom_vjp). Peak live memory O(chunk_q x chunk_kv)
+    in both directions. Logit softcap falls back to plain AD (rare path)."""
+    Sq, Skv = q.shape[1], k.shape[1]
+    assert Sq % chunk_q == 0 and Skv % chunk_kv == 0, (Sq, Skv, chunk_q, chunk_kv)
+    if spec.logit_softcap:
+        return _chunked_attention_base(q, k, v, qpos, kpos, spec, chunk_q, chunk_kv)
+    return _chunked_attention_vjp(q, k, v, qpos, kpos, spec, chunk_q, chunk_kv)
+
+
+def attention(q, k, v, qpos, kpos, spec: AttnSpec, impl: str = "auto", kv_valid=None):
+    """Dispatch on sequence length / implementation choice."""
+    Sq, Skv = q.shape[1], k.shape[1]
+    if impl == "flash":
+        from repro.kernels import ops as kops
+
+        return kops.flash_attention(q, k, v, qpos, kpos, spec)
+    if impl == "direct" or (impl == "auto" and max(Sq, Skv) <= 2048):
+        return direct_attention(q, k, v, qpos, kpos, spec, kv_valid=kv_valid)
+    cq = min(1024, Sq)
+    ck = min(1024, Skv)
+    # pad to chunk multiples if required (rare: odd cache sizes)
+    assert Sq % cq == 0 and Skv % ck == 0
+    return chunked_attention(q, k, v, qpos, kpos, spec, chunk_q=cq, chunk_kv=ck)
+
+
+# ----------------------------------------------------------------------------
+# Attention block parameters
+# ----------------------------------------------------------------------------
+
+
+def init_attn(create, kg, cfg, layers: int, cross: bool = False) -> dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    nq, nkv = cfg.n_heads, cfg.n_kv_heads
+    p = {
+        "wq": create(kg, (layers, d, nq, hd), ("layers", "embed", "heads", "qkv"), fan_in=d),
+        "wk": create(kg, (layers, d, nkv, hd), ("layers", "embed", "kv", "qkv"), fan_in=d),
+        "wv": create(kg, (layers, d, nkv, hd), ("layers", "embed", "kv", "qkv"), fan_in=d),
+        "wo": create(kg, (layers, nq, hd, d), ("layers", "heads", "qkv", "embed"), fan_in=nq * hd),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = create(kg, (layers, nq, hd), ("layers", "heads", "qkv"), mode="zeros")
+        p["bk"] = create(kg, (layers, nkv, hd), ("layers", "kv", "qkv"), mode="zeros")
+        p["bv"] = create(kg, (layers, nkv, hd), ("layers", "kv", "qkv"), mode="zeros")
+    return p
+
+
+def qkv_proj(cfg, p: dict, x: jax.Array):
+    q = jnp.einsum("bsd,dhq->bshq", x, p["wq"])
+    k = jnp.einsum("bsd,dhq->bshq", x, p["wk"])
+    v = jnp.einsum("bsd,dhq->bshq", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    return q, k, v
+
+
+def out_proj(p: dict, o: jax.Array) -> jax.Array:
+    return jnp.einsum("bshq,hqd->bsd", o, p["wo"])
+
+
+# ----------------------------------------------------------------------------
+# KV cache (ring buffer when window-bounded)
+# ----------------------------------------------------------------------------
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # [B, W, Hkv, D]  (RoPE pre-applied to k)
+    v: jax.Array  # [B, W, Hkv, D]
+
+    @property
+    def capacity(self) -> int:
+        return self.k.shape[1]
+
+
+class QuantKVCache(NamedTuple):
+    """int8 KV cache with per-(slot, head) scales — halves decode HBM traffic
+    and cache footprint vs bf16 (beyond-paper serving optimization)."""
+
+    k: jax.Array  # [B, W, Hkv, D] int8
+    v: jax.Array  # [B, W, Hkv, D] int8
+    k_scale: jax.Array  # [B, W, Hkv] f32
+    v_scale: jax.Array  # [B, W, Hkv] f32
+
+    @property
+    def capacity(self) -> int:
+        return self.k.shape[1]
+
+
+def quantize_kv(x: jax.Array):
+    """[..., D] -> (int8 values, f32 scale over D)."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    q = jnp.clip(
+        jnp.round(x.astype(jnp.float32) / jnp.maximum(scale, 1e-9)[..., None]),
+        -127, 127,
+    ).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_kv(q: jax.Array, scale: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def init_kv_cache(cfg, batch: int, capacity: int, dtype=jnp.bfloat16):
+    hd = cfg.resolved_head_dim
+    shape = (batch, capacity, cfg.n_kv_heads, hd)
+    if dtype == jnp.int8:
+        return QuantKVCache(
+            jnp.zeros(shape, jnp.int8),
+            jnp.zeros(shape, jnp.int8),
+            jnp.zeros(shape[:3], jnp.float32),
+            jnp.zeros(shape[:3], jnp.float32),
+        )
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def cache_update_decode(cache, k_new, v_new, pos: jax.Array):
+    """Write one token at ring slot pos % capacity. k_new/v_new: [B,1,Hkv,D].
+
+    Implemented as a masked select rather than dynamic_update_slice: a DUS at
+    a traced index on the (model-sharded) cache-length dim makes XLA SPMD
+    all-gather the entire cache per step (observed 41 GiB peak on
+    olmo decode_32k); the elementwise select partitions cleanly.
+    """
+    W = cache.capacity
+    slot = (pos % W).astype(jnp.int32)
+    mask = (jnp.arange(W, dtype=jnp.int32) == slot)[None, :, None, None]
+    if isinstance(cache, QuantKVCache):
+        kq, ks = quantize_kv(k_new)
+        vq, vs = quantize_kv(v_new)
+        return QuantKVCache(
+            jnp.where(mask, kq, cache.k),
+            jnp.where(mask, vq, cache.v),
+            jnp.where(mask[..., 0], ks, cache.k_scale),
+            jnp.where(mask[..., 0], vs, cache.v_scale),
+        )
+    k = jnp.where(mask, k_new.astype(cache.k.dtype), cache.k)
+    v = jnp.where(mask, v_new.astype(cache.v.dtype), cache.v)
+    return KVCache(k, v)
+
+
+def decode_attend(cfg, cache, q, pos: jax.Array, spec: AttnSpec):
+    """One-token attention over the ring cache. q: [B,1,Hq,D]; pos: scalar
+    absolute position of the new token (cache already updated at `pos`)."""
+    W = cache.capacity
+    slots = jnp.arange(W)
+    # absolute position stored in each slot: the most recent write to slot s
+    # happened at the largest t <= pos with t % W == s.
+    kpos = pos - ((pos - slots) % W)
+    valid = kpos >= jnp.maximum(0, pos + 1 - (spec.window or (pos + 1)))
+    valid &= kpos >= 0
+    valid &= kpos <= pos
+    B, _, Hq, D = q.shape
+    Hkv = cache.k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, 1, Hkv, G, D).transpose(0, 2, 3, 1, 4)  # [B,Hk,G,1,D]
+    if isinstance(cache, QuantKVCache):
+        # barrier: stops XLA hoisting the int8->bf16 convert of the WHOLE
+        # stacked cache out of the layer loop (observed +17 GiB of temps)
+        kq, vq = jax.lax.optimization_barrier((cache.k, cache.v))
+        ck = dequantize_kv(kq, cache.k_scale, q.dtype)
+        cv = dequantize_kv(vq, cache.v_scale, q.dtype)
+    else:
+        ck, cv = cache.k, cache.v
+    kk = ck.transpose(0, 2, 1, 3)
+    vv = cv.transpose(0, 2, 1, 3)
+    s = _scores(qg, kk, D**-0.5, spec)  # [B,Hk,G,1,W]
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(vv.dtype)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, vv)
+    return o.transpose(0, 3, 1, 2, 4).reshape(B, 1, Hq, D)

@@ -1,0 +1,218 @@
+"""Shared building blocks: parameter creation (with logical sharding axes),
+norms, rotary embeddings (RoPE + M-RoPE + sinusoidal), and MLPs.
+
+Parameter creation protocol
+---------------------------
+Every parameter leaf is produced by a ``create(kg, shape, axes, ...)`` callable:
+
+* the **concrete** creator (`concrete_creator`) draws real arrays — used by
+  smoke tests / examples on CPU;
+* the **abstract** creator (`abstract_creator`) returns
+  ``jax.ShapeDtypeStruct`` with a ``NamedSharding`` resolved from the logical
+  axis names — used by the multi-pod dry-run (no allocation ever happens).
+
+Logical axis names (resolved by repro.dist.sharding):
+  "layers"   scan dimension (never sharded)
+  "vocab"    vocabulary        -> model
+  "embed"    d_model           -> data (FSDP / ZeRO-3 shard of params)
+  "heads"    query heads       -> model (iff divisible)
+  "kv"       kv heads          -> model (iff divisible)
+  "qkv"      per-head dim      -> replicated
+  "mlp"      d_ff              -> model
+  "experts"  expert dim        -> model iff MoE parallelism == "ep"
+  "moe_mlp"  per-expert d_ff   -> model iff MoE parallelism == "tp"
+  "lru"      RG-LRU width      -> model
+  "ssm_heads" SSD heads        -> model
+  "ssm_state"/"conv"/None      -> replicated
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+Creator = Callable  # create(kg, shape, axes, fan_in=None, mode="normal")
+
+
+class KeyGen:
+    """Stateful PRNG key splitter for (non-jitted) parameter initialization."""
+
+    def __init__(self, key_or_seed):
+        if isinstance(key_or_seed, int):
+            key_or_seed = jax.random.key(key_or_seed)
+        self._key = key_or_seed
+
+    def __call__(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+
+def concrete_creator(dtype=jnp.float32) -> Creator:
+    def create(kg: KeyGen, shape, axes, fan_in: Optional[int] = None, mode: str = "normal"):
+        del axes
+        if mode == "zeros":
+            return jnp.zeros(shape, dtype)
+        if mode == "ones":
+            return jnp.ones(shape, dtype)
+        scale = 0.02 if fan_in is None else fan_in**-0.5
+        return (jax.random.normal(kg(), shape, jnp.float32) * scale).astype(dtype)
+
+    return create
+
+
+def abstract_creator(mesh, resolve_axes, dtype=jnp.bfloat16) -> Creator:
+    """resolve_axes(axes, shape) -> PartitionSpec (from repro.dist.sharding)."""
+    from jax.sharding import NamedSharding
+
+    def create(kg: KeyGen, shape, axes, fan_in: Optional[int] = None, mode: str = "normal"):
+        del kg, fan_in, mode
+        spec = resolve_axes(axes, shape)
+        return jax.ShapeDtypeStruct(tuple(shape), dtype, sharding=NamedSharding(mesh, spec))
+
+    return create
+
+
+# ----------------------------------------------------------------------------
+# Norms
+# ----------------------------------------------------------------------------
+
+
+def init_norm(create, kg, cfg, layers: int) -> dict:
+    if cfg.norm_kind == "nonparam_ln":
+        return {}
+    p = {"scale": create(kg, (layers, cfg.d_model), ("layers", "embed"), mode="ones")}
+    if cfg.norm_kind == "layernorm":
+        p["bias"] = create(kg, (layers, cfg.d_model), ("layers", "embed"), mode="zeros")
+    return p
+
+
+def apply_norm(cfg, p: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm_kind == "rmsnorm":
+        xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+        out = xf * p["scale"].astype(jnp.float32)
+    else:  # layernorm / nonparam_ln
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        xf = (xf - mu) * jax.lax.rsqrt(var + eps)
+        if cfg.norm_kind == "layernorm":
+            xf = xf * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+        out = xf
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------------
+# Rotary embeddings
+# ----------------------------------------------------------------------------
+
+
+def _rope_angles(pos: jax.Array, half: int, theta: float) -> jax.Array:
+    """pos [..., S] -> angles [..., S, half] (float32)."""
+    inv = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    return pos.astype(jnp.float32)[..., None] * inv
+
+
+def apply_rope(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
+    """x: [B, S, H, D]; pos: [S] or [B, S]."""
+    half = x.shape[-1] // 2
+    ang = _rope_angles(pos, half, theta)  # [S, half] or [B, S, half]
+    if ang.ndim == 2:
+        ang = ang[None]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf1 * sin + xf2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def mrope_sections(half: int) -> tuple:
+    """Qwen2-VL split of the rotary half-dim over (t, h, w): 1/4, 3/8, 3/8.
+    For head_dim 128 (half 64) this is the paper's (16, 24, 24)."""
+    t = half // 4
+    h = (half - t) // 2
+    return (t, h, half - t - h)
+
+
+def apply_mrope(
+    x: jax.Array, pos3: jax.Array, theta: float, sections: Optional[tuple] = None
+) -> jax.Array:
+    """Multimodal RoPE (Qwen2-VL): pos3 [B, 3, S] = (temporal, height, width)
+    position ids; rotary half-dim is split across the three sections."""
+    half = x.shape[-1] // 2
+    sections = sections or mrope_sections(half)
+    assert sum(sections) == half, (sections, half)
+    ang_all = _rope_angles(pos3, half, theta)  # [B, 3, S, half]
+    parts = []
+    start = 0
+    for i, sec in enumerate(sections):
+        parts.append(ang_all[:, i, :, start : start + sec])
+        start += sec
+    ang = jnp.concatenate(parts, axis=-1)  # [B, S, half]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf1 * sin + xf2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d_model: int, offset=0) -> jax.Array:
+    """Whisper-style absolute sinusoidal position embeddings [S, d]."""
+    half = d_model // 2
+    pos = jnp.arange(seq, dtype=jnp.float32) + offset
+    inv = jnp.exp(-jnp.arange(half, dtype=jnp.float32) * (math.log(10_000.0) / max(half - 1, 1)))
+    ang = pos[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ----------------------------------------------------------------------------
+# MLP
+# ----------------------------------------------------------------------------
+
+
+def init_mlp(create, kg, cfg, layers: int, d_ff: Optional[int] = None) -> dict:
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    p = {
+        "wi": create(kg, (layers, d, ff), ("layers", "embed", "mlp"), fan_in=d),
+        "wo": create(kg, (layers, ff, d), ("layers", "mlp", "embed"), fan_in=ff),
+    }
+    if cfg.mlp_kind == "swiglu":
+        p["wg"] = create(kg, (layers, d, ff), ("layers", "embed", "mlp"), fan_in=d)
+    return p
+
+
+def apply_mlp(cfg, p: dict, x: jax.Array) -> jax.Array:
+    h = jnp.einsum("...d,df->...f", x, p["wi"])
+    if cfg.mlp_kind == "swiglu":
+        g = jnp.einsum("...d,df->...f", x, p["wg"])
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * h
+    else:
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("...f,fd->...d", h, p["wo"])
+
+
+# ----------------------------------------------------------------------------
+# Embedding / head
+# ----------------------------------------------------------------------------
+
+
+def init_embed(create, kg, cfg) -> dict:
+    v, d = cfg.padded_vocab, cfg.d_model
+    p = {"tok": create(kg, (v, d), ("vocab", "embed"), fan_in=d)}
+    if not cfg.tie_embeddings:
+        p["head"] = create(kg, (d, v), ("embed", "vocab"), fan_in=d)
+    return p
+
+
+def embed_tokens(cfg, p: dict, tokens: jax.Array, dtype=None) -> jax.Array:
+    out = jnp.take(p["tok"], tokens, axis=0)
+    return out if dtype is None else out.astype(dtype)
+
+
+def lm_logits(cfg, p: dict, h: jax.Array) -> jax.Array:
+    w = p["tok"].T if cfg.tie_embeddings else p["head"]
+    return jnp.einsum("...d,dv->...v", h, w)

@@ -1,0 +1,214 @@
+"""Public model API: a thin, functional facade over the transformer stack.
+
+    model = Model(get_config("olmo-1b"))
+    params = model.init(jax.random.key(0))
+    loss = model.train_loss(params, batch)
+    logits, cache = model.prefill(params, tokens)
+    logits, cache = model.decode_step(params, cache, next_token)
+    feats = model.features(params, tokens)        # CHEF head inputs
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig, param_dtype=jnp.float32, impl: str = "auto", mesh=None):
+        self.cfg = cfg
+        self.param_dtype = param_dtype
+        self.impl = impl
+        self.mesh = mesh
+        # jnp.int8 enables the quantized KV cache (serving memory halving)
+        self.kv_dtype = None
+        # pytree of NamedSharding matching params; when set, per-layer param
+        # slices are re-constrained inside the layer scan so the TRANSPOSED
+        # constraint pins the stacked gradient accumulator in the while body
+        # (otherwise SPMD replicates it: 168 GiB/device f32 expert grads on
+        # mixtral-8x22b).
+        self.param_shardings = None
+
+    def _slot_constrain(self, slot_params, slot_shardings):
+        if slot_shardings is None:
+            return slot_params
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        def c(path, x, s):
+            ks = jax.tree_util.keystr(path)
+            # KV projections (GQA: n_kv_heads rarely divides the model axis)
+            # must NOT be pinned: SPMD prefers a partial head sharding there
+            # and a hard constraint forces an 'involuntary full
+            # rematerialization' replicate-repartition round trip (~1 TB/step
+            # of pure waste observed on mixtral train_4k).
+            if any(k in ks for k in ("'wk'", "'wv'", "'bk'", "'bv'")):
+                return x
+            spec = tuple(s.spec)[1:]  # drop the stacked-layers dim
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(s.mesh, P(*spec))
+            )
+
+        return jax.tree_util.tree_map_with_path(c, slot_params, slot_shardings)
+
+    def _make_slot_constrain(self, params):
+        if self.param_shardings is None:
+            return None
+        blocks_sh = self.param_shardings["blocks"]
+
+        def fn(slot_params_tuple):
+            return tuple(
+                self._slot_constrain(sp, sh)
+                for sp, sh in zip(slot_params_tuple, blocks_sh)
+            )
+
+        return fn
+
+    def _act_constrain(self, x):
+        """Pin activation batch sharding to ('pod','data'). Without this, XLA
+        SPMD may treat the FSDP-sharded contracting dim of weights as
+        partial-sum parallelism and all-reduce full activations per layer
+        (observed: 100+GB/step of f32 activation all-reduces on olmo-1b)."""
+        if self.mesh is None or x.ndim < 2:
+            return x
+        import math
+
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        from repro.dist.sharding import batch_axes
+
+        ba = batch_axes(self.mesh)
+        dp = math.prod(self.mesh.shape[a] for a in ba) if ba else 1
+        if not ba or x.shape[0] % dp:
+            return x
+        lead = ba if len(ba) > 1 else ba[0]
+        spec = P(lead, *([None] * (x.ndim - 1)))
+        return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, spec))
+
+    # ------------------------------------------------------------------ init
+    def init(self, key) -> dict:
+        kg = L.KeyGen(key)
+        create = L.concrete_creator(self.param_dtype)
+        return T.init_params(self.cfg, kg, create)
+
+    def abstract_params(self, create) -> dict:
+        """Build ShapeDtypeStruct params via an abstract creator (dry-run)."""
+        kg = L.KeyGen(0)
+        return T.init_params(self.cfg, kg, create)
+
+    def init_cache(self, batch: int, seq_len: int, dtype=jnp.bfloat16) -> dict:
+        return T.init_cache(self.cfg, batch, seq_len, dtype, kv_dtype=self.kv_dtype)
+
+    # --------------------------------------------------------------- helpers
+    def _embed_in(self, params, batch: dict, mode: str, pos_offset=0):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        h = L.embed_tokens(cfg, params["embed"], tokens, dtype=self.param_dtype)
+        if cfg.rope_kind == "none" and not cfg.attention_free:
+            # absolute sinusoidal positions (whisper-style)
+            S = tokens.shape[1]
+            h = h + L.sinusoidal_positions(S, cfg.d_model, offset=pos_offset).astype(h.dtype)[None]
+        if "embeds" in batch and batch["embeds"] is not None:
+            # modality stub: splice precomputed frontend embeddings (VLM); the
+            # first `n_patch` positions are patch embeddings, rest are text.
+            emb = batch["embeds"].astype(h.dtype)
+            npatch = emb.shape[1]
+            h = jnp.concatenate([emb, h[:, npatch:]], axis=1)
+        return h
+
+    def _enc_out(self, params, batch, impl):
+        if not self.cfg.is_encoder_decoder:
+            return None
+        return T.run_encoder(self.cfg, params, batch["enc_frames"].astype(self.param_dtype), impl=impl)
+
+    # ----------------------------------------------------------------- train
+    def train_loss(self, params, batch: dict, *, impl: Optional[str] = None):
+        """Weighted next-token cross entropy (paper Eq. 1 weighting).
+
+        batch: tokens [B,S], targets [B,S], weights [B] (gamma_z per sequence;
+        1.0 for clean, gamma for probabilistic), optional enc_frames / embeds /
+        pos3.
+        """
+        cfg = self.cfg
+        impl = impl or self.impl
+        h = self._act_constrain(self._embed_in(params, batch, "train"))
+        pos = jnp.arange(batch["tokens"].shape[1])
+        out = T.run_stack(
+            cfg, params, h,
+            mode="train", cache=None, pos=pos,
+            pos3=batch.get("pos3"), enc_out=self._enc_out(params, batch, impl),
+            impl=impl, constrain=self._act_constrain,
+            slot_constrain=self._make_slot_constrain(params),
+        )
+        hid = L.apply_norm(cfg, params["final_norm"], self._act_constrain(out.hidden))
+        logits = L.lm_logits(cfg, params["embed"], hid)  # [B, S, V]
+        ll = _weighted_ce(logits, batch["targets"], batch["weights"])
+        aux = 0.01 * out.aux / max(cfg.n_layers, 1)
+        return ll + aux.astype(ll.dtype)
+
+    # ----------------------------------------------------------------- serve
+    def prefill(self, params, batch: dict, *, cache_len: Optional[int] = None,
+                impl: Optional[str] = None):
+        cfg = self.cfg
+        impl = impl or self.impl
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        cache = self.init_cache(B, cache_len or S, dtype=self.param_dtype)
+        h = self._act_constrain(self._embed_in(params, batch, "prefill"))
+        pos = jnp.arange(S)
+        out = T.run_stack(
+            cfg, params, h, mode="prefill", cache=cache, pos=pos,
+            pos3=batch.get("pos3"), enc_out=self._enc_out(params, batch, impl),
+            impl=impl, constrain=self._act_constrain,
+            slot_constrain=self._make_slot_constrain(params),
+        )
+        hid = L.apply_norm(cfg, params["final_norm"], out.hidden[:, -1:])
+        logits = L.lm_logits(cfg, params["embed"], hid)
+        return logits, out.cache
+
+    def decode_step(self, params, cache: dict, batch: dict, *, impl: Optional[str] = None):
+        """One decode step. batch: tokens [B,1] (+ optional pos3 [B,3,1])."""
+        cfg = self.cfg
+        impl = impl or self.impl
+        pos = cache["pos"]
+        h = self._embed_in(params, batch, "decode", pos_offset=pos)
+        out = T.run_stack(
+            cfg, params, h, mode="decode", cache=cache, pos=pos,
+            pos3=batch.get("pos3"), enc_out=None, impl=impl,
+            constrain=self._act_constrain,
+        )
+        hid = L.apply_norm(cfg, params["final_norm"], out.hidden)
+        logits = L.lm_logits(cfg, params["embed"], hid)
+        return logits, out.cache
+
+    # -------------------------------------------------------------- features
+    def features(self, params, batch: dict, *, impl: Optional[str] = None):
+        """Mean-pooled final hidden state [B, d_model] — the frozen-backbone
+        feature transformation CHEF's LR head consumes (paper Section 5.1)."""
+        cfg = self.cfg
+        impl = impl or self.impl
+        h = self._act_constrain(self._embed_in(params, batch, "train"))
+        pos = jnp.arange(batch["tokens"].shape[1])
+        out = T.run_stack(
+            cfg, params, h, mode="train", cache=None, pos=pos,
+            pos3=batch.get("pos3"), enc_out=self._enc_out(params, batch, impl),
+            impl=impl, constrain=self._act_constrain,
+            slot_constrain=self._make_slot_constrain(params),
+        )
+        hid = L.apply_norm(cfg, params["final_norm"], out.hidden)
+        return jnp.mean(hid.astype(jnp.float32), axis=1)
+
+
+def _weighted_ce(logits: jax.Array, targets: jax.Array, weights: jax.Array) -> jax.Array:
+    """Per-sequence-weighted token cross entropy; stable in f32."""
+    lf = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(jnp.max(lf, axis=-1, keepdims=True))
+    lse = jnp.log(jnp.sum(jnp.exp(lf - m), axis=-1)) + m[..., 0]
+    tgt = jnp.take_along_axis(lf, targets[..., None], axis=-1)[..., 0]
+    nll = lse - tgt  # [B, S]
+    w = weights.astype(jnp.float32)[:, None]
+    return jnp.sum(nll * w) / (jnp.sum(w) * targets.shape[1])

@@ -1,0 +1,109 @@
+"""Mixture-of-Experts layer: token-choice top-k routing with capacity-based
+one-hot dispatch (drop/zero overflow), einsum formulation.
+
+Parallelism modes (cfg.moe.parallelism):
+* "tp": every device holds all experts, each expert's d_ff is sharded over the
+  'model' axis (tensor parallelism inside experts). No token movement.
+  Required when n_experts does not divide the model axis (e.g. Mixtral, 8e).
+* "ep": the expert dim is sharded over 'model' (true expert parallelism);
+  XLA materializes the token redistribution as all-to-all-style collectives
+  on the dispatch/combine einsums. Used for Qwen3-MoE (128e % 16 == 0).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_moe(create, kg, cfg, layers: int) -> dict:
+    d = cfg.d_model
+    m = cfg.moe
+    ep = m.parallelism == "ep"
+    expert_axis = "experts" if ep else None
+    ff_axis = None if ep else "moe_mlp"
+    p = {
+        "router": create(kg, (layers, d, m.n_experts), ("layers", "embed", expert_axis), fan_in=d),
+        "wi": create(
+            kg, (layers, m.n_experts, d, m.d_ff),
+            ("layers", expert_axis, "embed", ff_axis), fan_in=d,
+        ),
+        "wo": create(
+            kg, (layers, m.n_experts, m.d_ff, d),
+            ("layers", expert_axis, ff_axis, "embed"), fan_in=m.d_ff,
+        ),
+    }
+    if cfg.mlp_kind == "swiglu":
+        p["wg"] = create(
+            kg, (layers, m.n_experts, d, m.d_ff),
+            ("layers", expert_axis, "embed", ff_axis), fan_in=d,
+        )
+    return p
+
+
+def _capacity(cfg, chunk_tokens: int) -> int:
+    m = cfg.moe
+    cap = int(chunk_tokens * m.top_k * m.capacity_factor / m.n_experts)
+    cap = max(1, min(chunk_tokens, (cap + 7) // 8 * 8 if cap >= 8 else cap))
+    return cap
+
+
+MOE_CHUNK = 4096  # sequence chunk for per-chunk capacity
+
+
+def apply_moe(cfg, p: dict, x: jax.Array):
+    """x: [B, S, d] -> ([B, S, d], aux_loss).
+
+    Capacity dispatch via one-hot einsums that KEEP the batch dim — routing
+    and capacity are per (sequence, S-chunk), so the dispatch/combine tensors
+    stay data-parallel-local (no cross-DP token traffic, mirroring per-rank
+    capacity in production MoE systems) and memory is
+    O(B_local * chunk * E * cap) instead of O(T_global^2).
+    """
+    m = cfg.moe
+    B, S, d = x.shape
+    Sc = min(S, MOE_CHUNK)
+    assert S % Sc == 0, (S, Sc)
+    nc = S // Sc
+    cap = _capacity(cfg, Sc)
+    xc = x.reshape(B, nc, Sc, d)
+
+    logits = jnp.einsum("bnsd,de->bnse", xc, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)  # [B,nc,Sc,E]
+    gate_vals, expert_idx = jax.lax.top_k(probs, m.top_k)  # [B,nc,Sc,K]
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, k) assignment inside its expert's buffer,
+    # computed per (b, chunk)
+    onehot_i = jax.nn.one_hot(expert_idx, m.n_experts, dtype=jnp.int32)  # [B,nc,Sc,K,E]
+    flat = onehot_i.reshape(B, nc, Sc * m.top_k, m.n_experts)
+    pos_flat = jnp.cumsum(flat, axis=2) - 1
+    pos = jnp.sum(
+        pos_flat.reshape(B, nc, Sc, m.top_k, m.n_experts) * onehot_i, axis=-1
+    )  # [B,nc,Sc,K]
+    keep = pos < cap
+
+    onehot_e = jax.nn.one_hot(expert_idx, m.n_experts, dtype=x.dtype)  # [B,nc,Sc,K,E]
+    slot = jax.nn.one_hot(jnp.where(keep, pos, cap), cap + 1, dtype=x.dtype)[..., :-1]
+    disp = jnp.einsum("bnske,bnskc->bnsec", onehot_e, slot)  # [B,nc,Sc,E,cap]
+    combine = disp * jnp.einsum(
+        "bnsk,bnske->bnse", gate_vals.astype(x.dtype), onehot_e
+    )[..., None]
+
+    xe = jnp.einsum("bnsd,bnsec->bnecd", xc, disp)  # [B,nc,E,cap,d]
+    h = jnp.einsum("bnecd,edf->bnecf", xe, p["wi"])
+    if cfg.mlp_kind == "swiglu":
+        g = jnp.einsum("bnecd,edf->bnecf", xe, p["wg"])
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * h
+    else:
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    ye = jnp.einsum("bnecf,efd->bnecd", h, p["wo"])  # [B,nc,E,cap,d]
+    yt = jnp.einsum("bnecd,bnsec->bnsd", ye, combine)
+
+    # load-balancing auxiliary loss (Switch-style)
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(expert_idx[..., 0], m.n_experts, dtype=jnp.float32),
+        axis=(0, 1, 2),
+    )
+    frac_probs = jnp.mean(probs, axis=(0, 1, 2))
+    aux = m.n_experts * jnp.sum(frac_tokens * frac_probs)
+    return yt.reshape(B, S, d), aux

@@ -1,0 +1,127 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+Block structure (arXiv:2402.19427, Fig. 2):
+    u -> [linear -> temporal conv1d -> RG-LRU] ⊙ [linear -> GeLU] -> linear -> out
+
+RG-LRU recurrence (per channel):
+    r_t = sigmoid(W_a x_t + b_a)            recurrence gate (block-diag W_a)
+    i_t = sigmoid(W_x x_t + b_x)            input gate      (block-diag W_x)
+    a_t = exp(c * r_t * log(Lambda))        Lambda = sigmoid(lambda_param)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training/prefill uses jax.lax.associative_scan over the linear recurrence;
+decode carries (h, conv window) state.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+_C = 8.0  # Griffin's fixed gate temperature
+# Block-diagonal gate weight blocks. 16 (not Griffin's per-head grouping) so
+# the [.., W] -> [.., NB, W/NB] reshape aligns with the 16-wide model-axis
+# shard of the LRU width: each shard owns exactly one block and the gate
+# einsum stays collective-free.
+_N_BLOCKS = 16
+
+
+class RGLRUState(NamedTuple):
+    h: jax.Array  # [B, W] recurrent state (f32)
+    conv: jax.Array  # [B, conv_width - 1, W] temporal-conv lookback
+
+
+def init_rglru(create, kg, cfg, layers: int) -> dict:
+    d = cfg.d_model
+    w = cfg.rglru.lru_width or d
+    cw = cfg.rglru.conv_width
+    bw = w // _N_BLOCKS
+    return {
+        "w_in": create(kg, (layers, d, w), ("layers", "embed", "lru"), fan_in=d),
+        "w_gate_branch": create(kg, (layers, d, w), ("layers", "embed", "lru"), fan_in=d),
+        "conv_w": create(kg, (layers, cw, w), ("layers", None, "lru"), fan_in=cw),
+        "conv_b": create(kg, (layers, w), ("layers", "lru"), mode="zeros"),
+        "w_a": create(kg, (layers, _N_BLOCKS, bw, bw), ("layers", None, None, "lru"), fan_in=bw),
+        "b_a": create(kg, (layers, w), ("layers", "lru"), mode="zeros"),
+        "w_x": create(kg, (layers, _N_BLOCKS, bw, bw), ("layers", None, None, "lru"), fan_in=bw),
+        "b_x": create(kg, (layers, w), ("layers", "lru"), mode="zeros"),
+        "lam": create(kg, (layers, w), ("layers", "lru"), mode="ones"),
+        "w_out": create(kg, (layers, w, d), ("layers", "lru", "embed"), fan_in=w),
+    }
+
+
+def init_rglru_state(cfg, batch: int, dtype=jnp.float32) -> RGLRUState:
+    w = cfg.rglru.lru_width or cfg.d_model
+    cw = cfg.rglru.conv_width
+    return RGLRUState(
+        jnp.zeros((batch, w), jnp.float32), jnp.zeros((batch, cw - 1, w), dtype)
+    )
+
+
+def _block_diag_mm(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x [..., W] @ block-diagonal w [NB, W/NB, W/NB] -> [..., W]."""
+    nb, bw, _ = w.shape
+    xs = x.reshape(*x.shape[:-1], nb, bw)
+    out = jnp.einsum("...ni,nij->...nj", xs, w)
+    return out.reshape(*x.shape)
+
+
+def _gates(p, x):
+    """x [..., W] -> (log_a, gated_input) in f32."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(_block_diag_mm(xf, p["w_a"].astype(jnp.float32)) + p["b_a"])
+    i = jax.nn.sigmoid(_block_diag_mm(xf, p["w_x"].astype(jnp.float32)) + p["b_x"])
+    log_lam = jax.nn.log_sigmoid(p["lam"].astype(jnp.float32))
+    log_a = _C * r * log_lam  # <= 0
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xf)
+    return a, gated
+
+
+def _conv1d(p, x, lookback=None):
+    """Causal temporal conv, width cw. x: [B, S, W]; lookback [B, cw-1, W]."""
+    cw = p["conv_w"].shape[0]
+    if lookback is None:
+        lookback = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([lookback, x], axis=1)  # [B, S+cw-1, W]
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * p["conv_w"][i][None, None, :] for i in range(cw)
+    )
+    new_lookback = xp[:, -(cw - 1) :, :] if cw > 1 else lookback
+    return out + p["conv_b"][None, None, :], new_lookback
+
+
+def apply_rglru_seq(cfg, p: dict, u: jax.Array, state: RGLRUState | None = None):
+    """Full-sequence (train/prefill) path. u: [B, S, d]."""
+    x = jnp.einsum("bsd,dw->bsw", u, p["w_in"])
+    gate = jnp.einsum("bsd,dw->bsw", u, p["w_gate_branch"])
+    lookback = None if state is None else state.conv
+    x, new_lookback = _conv1d(p, x, lookback)
+    a, gated = _gates(p, x)  # [B, S, W] f32
+    h0 = jnp.zeros_like(gated[:, 0]) if state is None else state.h
+
+    # linear recurrence h_t = a_t h_{t-1} + b_t via associative scan over S
+    b = gated.at[:, 0].add(a[:, 0] * h0) if state is not None else gated
+    aa, bb = jax.lax.associative_scan(
+        lambda l, r: (l[0] * r[0], r[0] * l[1] + r[1]), (a, b), axis=1
+    )
+    h = bb  # [B, S, W] f32
+    y = h.astype(u.dtype) * jax.nn.gelu(gate.astype(jnp.float32)).astype(u.dtype)
+    out = jnp.einsum("bsw,wd->bsd", y, p["w_out"])
+    new_state = RGLRUState(h[:, -1], new_lookback if new_lookback is not None else state.conv)
+    return out, new_state
+
+
+def apply_rglru_step(cfg, p: dict, u: jax.Array, state: RGLRUState):
+    """Single-token decode. u: [B, 1, d]."""
+    x = jnp.einsum("bsd,dw->bsw", u, p["w_in"])  # [B,1,W]
+    gate = jnp.einsum("bsd,dw->bsw", u, p["w_gate_branch"])
+    xp = jnp.concatenate([state.conv, x], axis=1)  # [B, cw, W]
+    cw = p["conv_w"].shape[0]
+    xc = jnp.einsum("bcw,cw->bw", xp[:, -cw:], p["conv_w"]) + p["conv_b"]
+    a, gated = _gates(p, xc)  # [B, W]
+    h = a * state.h + gated
+    y = h[:, None, :].astype(u.dtype) * jax.nn.gelu(gate.astype(jnp.float32)).astype(u.dtype)
+    out = jnp.einsum("bsw,wd->bsd", y, p["w_out"])
+    return out, RGLRUState(h, xp[:, 1:] if cw > 1 else state.conv)

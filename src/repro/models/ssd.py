@@ -1,0 +1,202 @@
+"""Mamba-2 SSD (state-space duality) block, arXiv:2405.21060.
+
+Train/prefill uses the chunked SSD algorithm (quadratic intra-chunk term +
+linear inter-chunk recurrence); decode carries the [B, H, P, N] SSM state and
+the conv lookback, giving O(1) per-token cost — this is why mamba2 runs the
+`long_500k` cell.
+
+Layout: d_inner = expand * d_model; H = d_inner / head_dim heads; state dim N;
+B/C shared across heads in G groups (G=1 here, like the 370m config).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SSDState(NamedTuple):
+    ssm: jax.Array  # [B, H, P, N] f32
+    conv: jax.Array  # [B, conv_width - 1, conv_dim]
+
+
+def _dims(cfg):
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    nh = di // s.head_dim
+    conv_dim = di + 2 * s.n_groups * s.state_dim
+    return di, nh, conv_dim
+
+
+def init_ssd(create, kg, cfg, layers: int) -> dict:
+    d = cfg.d_model
+    s = cfg.ssm
+    di, nh, conv_dim = _dims(cfg)
+    # in_proj emits [z (gate), x, B, C, dt]
+    proj_out = 2 * di + 2 * s.n_groups * s.state_dim + nh
+    return {
+        "in_proj": create(kg, (layers, d, proj_out), ("layers", "embed", "ssm_inner"), fan_in=d),
+        "conv_w": create(kg, (layers, s.conv_width, conv_dim), ("layers", None, "ssm_inner"), fan_in=s.conv_width),
+        "conv_b": create(kg, (layers, conv_dim), ("layers", "ssm_inner"), mode="zeros"),
+        "A_log": create(kg, (layers, nh), ("layers", "ssm_heads"), mode="ones"),
+        "D": create(kg, (layers, nh), ("layers", "ssm_heads"), mode="ones"),
+        "dt_bias": create(kg, (layers, nh), ("layers", "ssm_heads"), mode="zeros"),
+        "norm_scale": create(kg, (layers, di), ("layers", "ssm_inner"), mode="ones"),
+        "out_proj": create(kg, (layers, di, d), ("layers", "ssm_inner", "embed"), fan_in=di),
+    }
+
+
+def init_ssd_state(cfg, batch: int, dtype=jnp.bfloat16) -> SSDState:
+    s = cfg.ssm
+    di, nh, conv_dim = _dims(cfg)
+    return SSDState(
+        jnp.zeros((batch, nh, s.head_dim, s.state_dim), jnp.float32),
+        jnp.zeros((batch, s.conv_width - 1, conv_dim), dtype),
+    )
+
+
+def _split_proj(cfg, zxbcdt):
+    s = cfg.ssm
+    di, nh, _ = _dims(cfg)
+    gn = s.n_groups * s.state_dim
+    z, x, Bc, Cc, dt = jnp.split(zxbcdt, [di, 2 * di, 2 * di + gn, 2 * di + 2 * gn], axis=-1)
+    return z, x, Bc, Cc, dt
+
+
+def _conv1d(p, x, lookback):
+    cw = p["conv_w"].shape[0]
+    xp = jnp.concatenate([lookback, x], axis=1)
+    out = sum(xp[:, i : i + x.shape[1], :] * p["conv_w"][i][None, None, :] for i in range(cw))
+    out = jax.nn.silu((out + p["conv_b"][None, None, :]).astype(jnp.float32))
+    return out, xp[:, -(cw - 1) :, :]
+
+
+def _segsum(x):
+    """x [..., T] -> lower-triangular segment sums [..., T, T]."""
+    T = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool))
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def _ssd_chunked(xh, dt, A, Bc, Cc, chunk: int, h0):
+    """Chunked SSD scan.
+
+    xh: [B, S, H, P]; dt: [B, S, H] (post-softplus); A: [H] (negative);
+    Bc, Cc: [B, S, N] (single group, broadcast over heads);
+    h0: [B, H, P, N] initial state. Returns (y [B,S,H,P], hT).
+    """
+    Bsz, S, H, P = xh.shape
+    N = Bc.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    # discrete: dA = dt * A (log-decay), dB·x with x pre-scaled by dt
+    xbar = xh * dt[..., None]
+    Abar = dt * A[None, None, :]  # [B, S, H]
+
+    xc = xbar.reshape(Bsz, nc, chunk, H, P)
+    Ac = Abar.reshape(Bsz, nc, chunk, H).transpose(0, 3, 1, 2)  # [B, H, nc, L]
+    Bc_ = Bc.reshape(Bsz, nc, chunk, N)
+    Cc_ = Cc.reshape(Bsz, nc, chunk, N)
+
+    A_cum = jnp.cumsum(Ac, axis=-1)  # [B, H, nc, L]
+    # 1) intra-chunk (quadratic, attention-like)
+    L = jnp.exp(_segsum(Ac))  # [B, H, nc, L, L]
+    Y_diag = jnp.einsum("bcln,bcsn,bhcls,bcshp->bclhp", Cc_, Bc_, L, xc)
+    # 2) per-chunk final states
+    decay_states = jnp.exp(A_cum[..., -1:] - A_cum)  # [B, H, nc, L]
+    states = jnp.einsum("bcln,bhcl,bclhp->bchpn", Bc_, decay_states, xc)
+    # 3) inter-chunk recurrence (scan over chunks)
+    chunk_decay = jnp.exp(A_cum[..., -1])  # [B, H, nc]
+
+    def body(h, inp):
+        st, dec = inp  # [B,H,P,N], [B,H]
+        h_new = h * dec[..., None, None] + st
+        return h_new, h  # emit state *entering* the chunk
+
+    (hT, h_in) = jax.lax.scan(
+        body,
+        h0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(2, 0, 1)),
+    )
+    h_in = h_in.transpose(1, 0, 2, 3, 4)  # [B, nc, H, P, N]
+    # 4) inter-chunk outputs
+    state_decay = jnp.exp(A_cum)  # [B, H, nc, L]
+    Y_off = jnp.einsum("bcln,bchpn,bhcl->bclhp", Cc_, h_in, state_decay)
+    y = (Y_diag + Y_off).reshape(Bsz, S, H, P)
+    return y, hT
+
+
+def apply_ssd_seq(cfg, p: dict, u: jax.Array, state: SSDState | None = None):
+    """Full-sequence path. u: [B, S, d]."""
+    s = cfg.ssm
+    di, nh, conv_dim = _dims(cfg)
+    Bsz, S, _ = u.shape
+    zxbcdt = jnp.einsum("bsd,dp->bsp", u, p["in_proj"])
+    z, xbc_pre = zxbcdt[..., :di], zxbcdt[..., di : di + conv_dim]
+    dt_pre = zxbcdt[..., di + conv_dim :]
+    lookback = (
+        state.conv if state is not None else jnp.zeros((Bsz, s.conv_width - 1, conv_dim), u.dtype)
+    )
+    xbc, new_lookback = _conv1d(p, xbc_pre, lookback)
+    x, Bc, Cc = jnp.split(xbc, [di, di + s.n_groups * s.state_dim], axis=-1)
+    xh = x.reshape(Bsz, S, nh, s.head_dim).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_pre.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    h0 = (
+        state.ssm
+        if state is not None
+        else jnp.zeros((Bsz, nh, s.head_dim, s.state_dim), jnp.float32)
+    )
+    chunk = min(s.chunk_size, S)
+    pad = (-S) % chunk
+    if pad:
+        # zero-pad to a chunk multiple; dt=0 at pads => decay 1, no state
+        # update, so hT is exact and padded outputs are sliced off below.
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bc = jnp.pad(Bc, ((0, 0), (0, pad), (0, 0)))
+        Cc = jnp.pad(Cc, ((0, 0), (0, pad), (0, 0)))
+    y, hT = _ssd_chunked(xh, dt, A, Bc.astype(jnp.float32), Cc.astype(jnp.float32), chunk, h0)
+    if pad:
+        y = y[:, :S]
+        xh = xh[:, :S]
+    y = y + xh * p["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(Bsz, S, di)
+    # gated RMSNorm (mamba2)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = y * jax.lax.rsqrt(jnp.mean(y * y, axis=-1, keepdims=True) + 1e-6)
+    y = (y * p["norm_scale"].astype(jnp.float32)).astype(u.dtype)
+    out = jnp.einsum("bsp,pd->bsd", y, p["out_proj"])
+    return out, SSDState(hT, new_lookback)
+
+
+def apply_ssd_step(cfg, p: dict, u: jax.Array, state: SSDState):
+    """Single-token decode: recurrent update, O(1) in sequence length."""
+    s = cfg.ssm
+    di, nh, conv_dim = _dims(cfg)
+    Bsz = u.shape[0]
+    zxbcdt = jnp.einsum("bsd,dp->bsp", u, p["in_proj"])  # [B,1,proj]
+    z, xbc_pre = zxbcdt[..., :di], zxbcdt[..., di : di + conv_dim]
+    dt_pre = zxbcdt[..., di + conv_dim :]
+    xp = jnp.concatenate([state.conv, xbc_pre.astype(state.conv.dtype)], axis=1)  # [B, cw, conv]
+    xc = jnp.einsum("bcw,cw->bw", xp, p["conv_w"]) + p["conv_b"]
+    xbc = jax.nn.silu(xc.astype(jnp.float32))  # [B, conv_dim]
+    x, Bc, Cc = jnp.split(xbc, [di, di + s.n_groups * s.state_dim], axis=-1)
+    xh = x.reshape(Bsz, nh, s.head_dim)
+    dt = jax.nn.softplus(dt_pre[:, 0].astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt * A[None, :])  # [B, H]
+    # h' = dA h + dt * x ⊗ B ; y = h'·C + D x
+    h = state.ssm * dA[..., None, None] + jnp.einsum(
+        "bhp,bn,bh->bhpn", xh, Bc, dt
+    )
+    y = jnp.einsum("bhpn,bn->bhp", h, Cc) + xh * p["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(Bsz, 1, di)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = y * jax.lax.rsqrt(jnp.mean(y * y, axis=-1, keepdims=True) + 1e-6)
+    y = (y * p["norm_scale"].astype(jnp.float32)).astype(u.dtype)
+    out = jnp.einsum("bsp,pd->bsd", y, p["out_proj"])
+    return out, SSDState(h, xp[:, 1:])

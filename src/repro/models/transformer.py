@@ -1,0 +1,392 @@
+"""Decoder-stack orchestration for all assigned architectures.
+
+Layers are grouped into *super-blocks* — one repetition of
+``cfg.block_pattern`` — and the stack is a ``lax.scan`` over stacked
+super-block parameters (O(1) compile cost in depth; remainder layers that do
+not fill a full pattern are applied unrolled as the "tail"). Heterogeneous
+patterns (RecurrentGemma's rglru/rglru/local) scan cleanly because every
+super-block has identical structure.
+
+Modes:
+* ``train``   — full sequence, no caches, optional remat per super-block.
+* ``prefill`` — full sequence, returns populated caches (ring-rolled for
+  sliding-window attention).
+* ``decode``  — single token, cache read/update, O(1) state for SSM/RG-LRU.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_lib
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models import rglru as rglru_lib
+from repro.models import ssd as ssd_lib
+from repro.models.attention import AttnSpec, KVCache
+
+
+# ----------------------------------------------------------------------------
+# Parameter init
+# ----------------------------------------------------------------------------
+
+
+def _unstack0(tree):
+    """Drop the leading (layers) dim from every leaf; works for concrete
+    arrays and for ShapeDtypeStructs (dry-run abstract params)."""
+
+    def drop(x):
+        if isinstance(x, jax.ShapeDtypeStruct):
+            sharding = x.sharding
+            if sharding is not None:
+                from jax.sharding import NamedSharding, PartitionSpec as P
+
+                spec = tuple(sharding.spec)
+                spec = spec[1:] if len(spec) >= 1 else spec
+                sharding = NamedSharding(sharding.mesh, P(*spec))
+            return jax.ShapeDtypeStruct(x.shape[1:], x.dtype, sharding=sharding)
+        return x[0]
+
+    return jax.tree.map(drop, tree)
+
+
+def _init_block(create, kg, cfg, kind: str, layers: int) -> dict:
+    p: dict = {"norm1": L.init_norm(create, kg, cfg, layers)}
+    if kind in ("attn", "local", "attn_moe"):
+        p["attn"] = attn_lib.init_attn(create, kg, cfg, layers)
+        p["norm2"] = L.init_norm(create, kg, cfg, layers)
+        if kind == "attn_moe":
+            p["moe"] = moe_lib.init_moe(create, kg, cfg, layers)
+        else:
+            p["mlp"] = L.init_mlp(create, kg, cfg, layers)
+        if cfg.is_encoder_decoder:
+            p["xnorm"] = L.init_norm(create, kg, cfg, layers)
+            p["xattn"] = attn_lib.init_attn(create, kg, cfg, layers, cross=True)
+    elif kind == "rglru":
+        p["rglru"] = rglru_lib.init_rglru(create, kg, cfg, layers)
+        p["norm2"] = L.init_norm(create, kg, cfg, layers)
+        p["mlp"] = L.init_mlp(create, kg, cfg, layers)
+    elif kind == "ssd":
+        p["ssd"] = ssd_lib.init_ssd(create, kg, cfg, layers)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def init_params(cfg, kg: L.KeyGen, create) -> dict:
+    pattern = cfg.block_pattern
+    n_super, rem = divmod(cfg.n_layers, len(pattern))
+    params: dict = {"embed": L.init_embed(create, kg, cfg)}
+    if n_super:
+        params["blocks"] = tuple(
+            _init_block(create, kg, cfg, kind, n_super) for kind in pattern
+        )
+    else:
+        params["blocks"] = ()
+    params["tail"] = tuple(
+        _unstack0(_init_block(create, kg, cfg, kind, 1)) for kind in pattern[:rem]
+    )
+    params["final_norm"] = _unstack0(L.init_norm(create, kg, cfg, 1))
+    if cfg.is_encoder_decoder:
+        params["encoder"] = {
+            "blocks": _init_block(create, kg, cfg, "attn", cfg.n_encoder_layers),
+            "final_norm": _unstack0(L.init_norm(create, kg, cfg, 1)),
+        }
+    return params
+
+
+# ----------------------------------------------------------------------------
+# Caches
+# ----------------------------------------------------------------------------
+
+
+def cache_capacity(cfg, kind: str, seq_len: int) -> int:
+    window = cfg.sliding_window
+    if kind == "local" or (kind in ("attn", "attn_moe") and cfg.attn_kind == "sliding"):
+        return min(window, seq_len) if window else seq_len
+    return seq_len
+
+
+def init_block_cache(cfg, kind: str, batch: int, seq_len: int, dtype=jnp.bfloat16,
+                     kv_dtype=None):
+    if kind in ("attn", "local", "attn_moe"):
+        c: dict = {"kv": attn_lib.init_kv_cache(
+            cfg, batch, cache_capacity(cfg, kind, seq_len), kv_dtype or dtype)}
+        if cfg.is_encoder_decoder:
+            hd = cfg.resolved_head_dim
+            shape = (batch, cfg.encoder_seq, cfg.n_kv_heads, hd)
+            c["xk"] = jnp.zeros(shape, dtype)
+            c["xv"] = jnp.zeros(shape, dtype)
+        return c
+    if kind == "rglru":
+        return {"rg": rglru_lib.init_rglru_state(cfg, batch, dtype)}
+    if kind == "ssd":
+        return {"ssd": ssd_lib.init_ssd_state(cfg, batch, dtype)}
+    raise ValueError(kind)
+
+
+def init_cache(cfg, batch: int, seq_len: int, dtype=jnp.bfloat16, kv_dtype=None) -> dict:
+    """Full-model cache pytree: stacked per super-block slot + tail + pos."""
+    pattern = cfg.block_pattern
+    n_super, rem = divmod(cfg.n_layers, len(pattern))
+
+    def stacked(kind, n):
+        one = init_block_cache(cfg, kind, batch, seq_len, dtype, kv_dtype)
+        return jax.tree.map(lambda x: jnp.broadcast_to(x, (n,) + x.shape), one)
+
+    return {
+        "blocks": tuple(stacked(kind, n_super) for kind in pattern) if n_super else (),
+        "tail": tuple(
+            init_block_cache(cfg, kind, batch, seq_len, dtype, kv_dtype)
+            for kind in pattern[:rem]
+        ),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+# ----------------------------------------------------------------------------
+# Block application
+# ----------------------------------------------------------------------------
+
+
+def _attn_spec(cfg, kind: str, causal: bool = True) -> AttnSpec:
+    window = 0
+    if kind == "local" or cfg.attn_kind == "sliding":
+        window = cfg.sliding_window
+    return AttnSpec(causal=causal, window=window, logit_softcap=cfg.attn_logit_softcap)
+
+
+def _rotate(cfg, x, pos, pos3):
+    if cfg.rope_kind == "rope":
+        return L.apply_rope(x, pos, cfg.rope_theta)
+    if cfg.rope_kind == "mrope":
+        return L.apply_mrope(x, pos3, cfg.rope_theta)
+    return x
+
+
+def apply_block(
+    cfg,
+    kind: str,
+    p: dict,
+    h: jax.Array,
+    *,
+    mode: str,
+    cache: Optional[dict],
+    pos: jax.Array,  # [S] absolute positions (train/prefill) or scalar (decode)
+    pos3: Optional[jax.Array] = None,  # [B, 3, S] M-RoPE ids
+    enc_out: Optional[jax.Array] = None,
+    impl: str = "auto",
+):
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = cache
+
+    if kind in ("attn", "local", "attn_moe"):
+        spec = _attn_spec(cfg, kind)
+        x = L.apply_norm(cfg, p["norm1"], h)
+        q, k, v = attn_lib.qkv_proj(cfg, p["attn"], x)
+        if mode == "decode":
+            pvec = pos[None] if pos.ndim == 0 else pos
+            q = _rotate(cfg, q, pvec, pos3)
+            k = _rotate(cfg, k, pvec, pos3)
+            kv = attn_lib.cache_update_decode(cache["kv"], k, v, pos)
+            o = attn_lib.decode_attend(cfg, kv, q, pos, spec)
+            new_cache = dict(cache, kv=kv)
+        else:
+            q = _rotate(cfg, q, pos, pos3)
+            k = _rotate(cfg, k, pos, pos3)
+            o = attn_lib.attention(q, k, v, pos, pos, spec, impl=impl)
+            if mode == "prefill":
+                W = cache["kv"].capacity
+                S = k.shape[1]
+                quant = isinstance(cache["kv"], attn_lib.QuantKVCache)
+                if S >= W:
+                    k_last, v_last = k[:, -W:], v[:, -W:]
+                    if S > W:  # ring-roll so token t sits at slot t % W
+                        shift = (S - W) % W
+                        k_last = jnp.roll(k_last, shift, axis=1)
+                        v_last = jnp.roll(v_last, shift, axis=1)
+                    if quant:
+                        kq, ks = attn_lib.quantize_kv(k_last)
+                        vq, vs = attn_lib.quantize_kv(v_last)
+                        kv = attn_lib.QuantKVCache(kq, vq, ks, vs)
+                    else:
+                        kv = KVCache(
+                            k_last.astype(cache["kv"].k.dtype),
+                            v_last.astype(cache["kv"].v.dtype),
+                        )
+                else:  # write into the front of the allocated buffer
+                    dus = lambda buf, val: jax.lax.dynamic_update_slice(
+                        buf, val, (0,) * buf.ndim
+                    )
+                    if quant:
+                        kq, ks = attn_lib.quantize_kv(k)
+                        vq, vs = attn_lib.quantize_kv(v)
+                        kv = attn_lib.QuantKVCache(
+                            dus(cache["kv"].k, kq), dus(cache["kv"].v, vq),
+                            dus(cache["kv"].k_scale, ks), dus(cache["kv"].v_scale, vs),
+                        )
+                    else:
+                        kv = KVCache(
+                            dus(cache["kv"].k, k.astype(cache["kv"].k.dtype)),
+                            dus(cache["kv"].v, v.astype(cache["kv"].v.dtype)),
+                        )
+                new_cache = dict(cache, kv=kv)
+        h = h + attn_lib.out_proj(p["attn"], o)
+
+        if cfg.is_encoder_decoder:
+            xq = L.apply_norm(cfg, p["xnorm"], h)
+            q, _, _ = attn_lib.qkv_proj(cfg, p["xattn"], xq)
+            if mode == "decode":
+                xk, xv = cache["xk"], cache["xv"]
+            else:
+                xk = jnp.einsum("bsd,dhq->bshq", enc_out, p["xattn"]["wk"])
+                xv = jnp.einsum("bsd,dhq->bshq", enc_out, p["xattn"]["wv"])
+                if cfg.qkv_bias:
+                    xk = xk + p["xattn"]["bk"]
+                    xv = xv + p["xattn"]["bv"]
+                if mode == "prefill":
+                    new_cache = dict(
+                        new_cache, xk=xk.astype(cache["xk"].dtype), xv=xv.astype(cache["xv"].dtype)
+                    )
+            Se = xk.shape[1]
+            xspec = AttnSpec(causal=False, window=0)
+            qpos = jnp.zeros((q.shape[1],), jnp.int32)
+            o = attn_lib.direct_attention(q, xk, xv, qpos, jnp.arange(Se), xspec)
+            h = h + attn_lib.out_proj(p["xattn"], o)
+
+        x = L.apply_norm(cfg, p["norm2"], h)
+        if kind == "attn_moe":
+            y, aux = moe_lib.apply_moe(cfg, p["moe"], x)
+        else:
+            y = L.apply_mlp(cfg, p["mlp"], x)
+        h = h + y
+
+    elif kind == "rglru":
+        x = L.apply_norm(cfg, p["norm1"], h)
+        if mode == "decode":
+            y, st = rglru_lib.apply_rglru_step(cfg, p["rglru"], x, cache["rg"])
+            new_cache = dict(cache, rg=st)
+        else:
+            st = cache["rg"] if (mode == "prefill" and cache is not None) else None
+            y, st = rglru_lib.apply_rglru_seq(cfg, p["rglru"], x, None)
+            if mode == "prefill":
+                new_cache = dict(cache, rg=jax.tree.map(
+                    lambda a, b: a.astype(b.dtype), st, cache["rg"]))
+        h = h + y
+        x = L.apply_norm(cfg, p["norm2"], h)
+        h = h + L.apply_mlp(cfg, p["mlp"], x)
+
+    elif kind == "ssd":
+        x = L.apply_norm(cfg, p["norm1"], h)
+        if mode == "decode":
+            y, st = ssd_lib.apply_ssd_step(cfg, p["ssd"], x, cache["ssd"])
+            new_cache = dict(cache, ssd=st)
+        else:
+            y, st = ssd_lib.apply_ssd_seq(cfg, p["ssd"], x, None)
+            if mode == "prefill":
+                new_cache = dict(cache, ssd=jax.tree.map(
+                    lambda a, b: a.astype(b.dtype), st, cache["ssd"]))
+        h = h + y
+    else:
+        raise ValueError(kind)
+
+    return h, new_cache, aux
+
+
+# ----------------------------------------------------------------------------
+# Full stack
+# ----------------------------------------------------------------------------
+
+
+class StackOut(NamedTuple):
+    hidden: jax.Array
+    cache: Any
+    aux: jax.Array
+
+
+def run_stack(
+    cfg,
+    params: dict,
+    h: jax.Array,
+    *,
+    mode: str,
+    cache: Optional[dict] = None,
+    pos: jax.Array,
+    pos3: Optional[jax.Array] = None,
+    enc_out: Optional[jax.Array] = None,
+    impl: str = "auto",
+    constrain=None,
+    slot_constrain=None,
+) -> StackOut:
+    pattern = cfg.block_pattern
+    n_super, rem = divmod(cfg.n_layers, len(pattern))
+
+    def super_block(h_aux, slot_params, slot_caches):
+        h, aux = h_aux
+        if constrain is not None:
+            h = constrain(h)
+        if slot_constrain is not None:
+            slot_params = slot_constrain(slot_params)
+        new_caches = []
+        for j, kind in enumerate(pattern):
+            c = None if slot_caches is None else slot_caches[j]
+            h, nc, a = apply_block(
+                cfg, kind, slot_params[j], h,
+                mode=mode, cache=c, pos=pos, pos3=pos3, enc_out=enc_out, impl=impl,
+            )
+            new_caches.append(nc)
+            aux = aux + a
+        return (h, aux), tuple(new_caches)
+
+    aux0 = jnp.zeros((), jnp.float32)
+    if n_super:
+        def body(carry, xs):
+            slot_params = xs[0]
+            slot_caches = xs[1] if cache is not None else None
+            return super_block(carry, slot_params, slot_caches)
+
+        if cfg.remat and mode == "train":
+            body = jax.checkpoint(body, prevent_cse=False)
+
+        xs = (params["blocks"],) + ((cache["blocks"],) if cache is not None else ())
+        (h, aux0), new_block_caches = jax.lax.scan(body, (h, aux0), xs)
+    else:
+        new_block_caches = ()
+
+    new_tail = []
+    for j, kind in enumerate(pattern[:rem]):
+        c = None if cache is None else cache["tail"][j]
+        h, nc, a = apply_block(
+            cfg, kind, params["tail"][j], h,
+            mode=mode, cache=c, pos=pos, pos3=pos3, enc_out=enc_out, impl=impl,
+        )
+        new_tail.append(nc)
+        aux0 = aux0 + a
+
+    new_cache = None
+    if cache is not None:
+        new_pos = cache["pos"] + (1 if mode == "decode" else h.shape[1])
+        new_cache = {"blocks": new_block_caches, "tail": tuple(new_tail), "pos": new_pos}
+    return StackOut(h, new_cache, aux0)
+
+
+def run_encoder(cfg, params: dict, frames: jax.Array, impl: str = "auto") -> jax.Array:
+    """Whisper encoder over (stubbed) frame embeddings [B, Se, d]."""
+    enc = params["encoder"]
+    Se = frames.shape[1]
+    h = frames + L.sinusoidal_positions(Se, cfg.d_model).astype(frames.dtype)[None]
+    pos = jnp.arange(Se)
+
+    def body(h, slot_params):
+        x = L.apply_norm(cfg, slot_params["norm1"], h)
+        q, k, v = attn_lib.qkv_proj(cfg, slot_params["attn"], x)
+        o = attn_lib.attention(q, k, v, pos, pos, AttnSpec(causal=False), impl=impl)
+        h = h + attn_lib.out_proj(slot_params["attn"], o)
+        x = L.apply_norm(cfg, slot_params["norm2"], h)
+        h = h + L.apply_mlp(cfg, slot_params["mlp"], x)
+        return h, None
+
+    h, _ = jax.lax.scan(body, h, enc["blocks"])
+    return L.apply_norm(cfg, enc["final_norm"], h)

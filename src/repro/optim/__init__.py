@@ -1,0 +1,19 @@
+from repro.optim.base import Optimizer, apply_updates
+from repro.optim.sgd import sgd
+from repro.optim.adamw import adamw
+from repro.optim.schedule import constant, cosine, warmup_cosine
+from repro.optim.early_stop import EarlyStopper
+from repro.optim.compression import compress_gradients, CompressionState
+
+__all__ = [
+    "Optimizer",
+    "apply_updates",
+    "sgd",
+    "adamw",
+    "constant",
+    "cosine",
+    "warmup_cosine",
+    "EarlyStopper",
+    "compress_gradients",
+    "CompressionState",
+]

@@ -1,0 +1,61 @@
+"""AdamW with f32 first/second moments (sharded like the parameters — with
+FSDP rules this is ZeRO-style optimizer-state sharding)."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import Optimizer, resolve_lr
+
+
+class AdamWState(NamedTuple):
+    count: jax.Array
+    mu: object
+    nu: object
+
+
+def adamw(
+    lr,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    grad_clip: float = 0.0,
+) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(
+            jnp.zeros((), jnp.int32),
+            jax.tree.map(zeros, params),
+            jax.tree.map(zeros, params),
+        )
+
+    def update(grads, state, params):
+        g = jax.tree.map(lambda x: x.astype(jnp.float32), grads)
+        if grad_clip:
+            # sum(x*x), not vdot: vdot's 1D reshape un-shards sharded grads
+            gnorm = jnp.sqrt(
+                sum(jnp.sum(x * x) for x in jax.tree.leaves(g)) + 1e-16
+            )
+            scale = jnp.minimum(1.0, grad_clip / gnorm)
+            g = jax.tree.map(lambda x: x * scale, g)
+        count = state.count + 1
+        step_lr = resolve_lr(lr, state.count)
+        mu = jax.tree.map(lambda m, gi: b1 * m + (1 - b1) * gi, state.mu, g)
+        nu = jax.tree.map(lambda v, gi: b2 * v + (1 - b2) * gi * gi, state.nu, g)
+        c = count.astype(jnp.float32)
+        mu_hat_scale = 1.0 / (1.0 - b1**c)
+        nu_hat_scale = 1.0 / (1.0 - b2**c)
+
+        def upd(m, v, p):
+            u = -step_lr * (m * mu_hat_scale) / (jnp.sqrt(v * nu_hat_scale) + eps)
+            if weight_decay:
+                u = u - step_lr * weight_decay * p.astype(jnp.float32)
+            return u
+
+        updates = jax.tree.map(upd, mu, nu, params)
+        return updates, AdamWState(count, mu, nu)
+
+    return Optimizer(init, update)

@@ -1,0 +1,23 @@
+"""Minimal functional optimizer interface (no optax offline; built from
+scratch): an Optimizer is (init, update) where update maps
+(grads, state, params) -> (updates, new_state) and updates are *deltas*
+applied with apply_updates (cast back to the parameter dtype)."""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable  # params -> state
+    update: Callable  # (grads, state, params) -> (updates, new_state)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype), params, updates)
+
+
+def resolve_lr(lr, count):
+    return lr(count) if callable(lr) else jnp.asarray(lr, jnp.float32)

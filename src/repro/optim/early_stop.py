@@ -1,0 +1,34 @@
+"""Early stopping on a validation metric (paper Section 5.1: 'Early stopping
+is also applied to avoid overfitting' — we keep the best-metric parameters
+across epochs and stop after `patience` non-improving evaluations)."""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+
+class EarlyStopper:
+    def __init__(self, patience: int = 10, mode: str = "max", min_delta: float = 0.0):
+        assert mode in ("max", "min")
+        self.patience = patience
+        self.mode = mode
+        self.min_delta = min_delta
+        self.best: Optional[float] = None
+        self.best_payload: Any = None
+        self.bad = 0
+
+    def improved(self, value: float) -> bool:
+        if self.best is None:
+            return True
+        if self.mode == "max":
+            return value > self.best + self.min_delta
+        return value < self.best - self.min_delta
+
+    def update(self, value: float, payload: Any = None) -> bool:
+        """Returns True if training should stop."""
+        if self.improved(value):
+            self.best = value
+            self.best_payload = payload
+            self.bad = 0
+        else:
+            self.bad += 1
+        return self.bad >= self.patience

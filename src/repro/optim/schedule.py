@@ -1,0 +1,28 @@
+"""Learning-rate schedules (callables step -> lr, jit-traceable)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine(lr: float, total_steps: int, final_frac: float = 0.1):
+    def fn(step):
+        t = jnp.minimum(step.astype(jnp.float32) / max(total_steps, 1), 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return lr * (final_frac + (1 - final_frac) * cos)
+
+    return fn
+
+
+def warmup_cosine(lr: float, warmup_steps: int, total_steps: int, final_frac: float = 0.1):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = s / max(warmup_steps, 1)
+        t = jnp.clip((s - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return lr * jnp.where(s < warmup_steps, warm, cos)
+
+    return fn

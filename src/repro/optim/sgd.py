@@ -1,0 +1,36 @@
+"""SGD with optional momentum + decoupled weight decay — the paper's training
+algorithm for the CHEF head (Section 5.1: plain SGD, mini-batch 2000)."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import Optimizer, resolve_lr
+
+
+class SGDState(NamedTuple):
+    count: jax.Array
+    momentum: object  # pytree or None
+
+
+def sgd(lr, momentum: float = 0.0, weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        mom = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params) if momentum else None
+        return SGDState(jnp.zeros((), jnp.int32), mom)
+
+    def update(grads, state, params):
+        step_lr = resolve_lr(lr, state.count)
+        g = jax.tree.map(lambda x: x.astype(jnp.float32), grads)
+        if weight_decay:
+            g = jax.tree.map(lambda gi, p: gi + weight_decay * p.astype(jnp.float32), g, params)
+        if momentum:
+            mom = jax.tree.map(lambda m, gi: momentum * m + gi, state.momentum, g)
+            updates = jax.tree.map(lambda m: -step_lr * m, mom)
+        else:
+            mom = None
+            updates = jax.tree.map(lambda gi: -step_lr * gi, g)
+        return updates, SGDState(state.count + 1, mom)
+
+    return Optimizer(init, update)

@@ -1,0 +1,3 @@
+from repro.serving.engine import make_prefill_step, make_decode_step, ServeEngine
+
+__all__ = ["make_prefill_step", "make_decode_step", "ServeEngine"]

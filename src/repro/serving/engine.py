@@ -1,0 +1,77 @@
+"""Batched serving: jitted prefill / decode steps + a small continuous-batch
+engine used by examples/serve_model.py and the serve driver.
+
+The decode step is what `decode_*` / `long_*` dry-run cells lower: one new
+token against a KV cache of `seq_len` (ring-bounded to the sliding window for
+sub-quadratic archs; O(1) recurrent state for SSM / RG-LRU)."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def make_prefill_step(model):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch)
+
+    return prefill_step
+
+
+def make_decode_step(model):
+    def decode_step(params, cache, batch):
+        return model.decode_step(params, cache, batch)
+
+    return decode_step
+
+
+def greedy(logits: jax.Array) -> jax.Array:
+    return jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray  # [S] int32
+    max_new: int
+    out: list = field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    """Minimal batched greedy-decode engine (static batch slots, per-slot
+    request swapping — the continuous-batching pattern at miniature scale)."""
+
+    def __init__(self, model, params, batch_size: int, max_len: int):
+        self.model = model
+        self.params = params
+        self.B = batch_size
+        self.max_len = max_len
+        self._prefill = jax.jit(make_prefill_step(model))
+        self._decode = jax.jit(make_decode_step(model), donate_argnums=(1,))
+
+    def run(self, requests: list[Request]) -> list[Request]:
+        pending = list(requests)
+        out: list[Request] = []
+        while pending:
+            wave = pending[: self.B]
+            pending = pending[self.B :]
+            S = max(len(r.prompt) for r in wave)
+            toks = np.zeros((self.B, S), np.int32)
+            for i, r in enumerate(wave):
+                toks[i, S - len(r.prompt) :] = r.prompt  # left-pad
+            logits, cache = self._prefill(self.params, {"tokens": jnp.asarray(toks)})
+            nxt = greedy(logits)
+            for step in range(max(r.max_new for r in wave)):
+                for i, r in enumerate(wave):
+                    if step < r.max_new:
+                        r.out.append(int(np.asarray(nxt)[i, 0]))
+                logits, cache = self._decode(self.params, cache, {"tokens": nxt})
+                nxt = greedy(logits)
+            for r in wave:
+                r.done = True
+                out.append(r)
+        return out

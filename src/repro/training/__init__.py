@@ -1,0 +1,4 @@
+from repro.training.state import TrainState, abstract_train_state
+from repro.training.steps import make_train_step, make_eval_step
+
+__all__ = ["TrainState", "abstract_train_state", "make_train_step", "make_eval_step"]

@@ -1,0 +1,46 @@
+"""TrainState pytree + abstract (ShapeDtypeStruct) construction for dry-runs."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+class TrainState(NamedTuple):
+    step: jax.Array
+    params: Any
+    opt_state: Any
+
+
+def init_train_state(params, optimizer) -> TrainState:
+    return TrainState(jnp.zeros((), jnp.int32), params, optimizer.init(params))
+
+
+def _abstract_like(leaf, dtype, mesh):
+    if isinstance(leaf, jax.ShapeDtypeStruct):
+        sharding = leaf.sharding
+    else:
+        sharding = None
+    return jax.ShapeDtypeStruct(leaf.shape, dtype, sharding=sharding)
+
+
+def abstract_train_state(params_sds, optimizer_name: str, mesh) -> TrainState:
+    """Abstract TrainState matching adamw/sgd structure, optimizer moments
+    sharded exactly like their parameters (ZeRO via the FSDP rules)."""
+    rep = NamedSharding(mesh, P())
+    step = jax.ShapeDtypeStruct((), jnp.int32, sharding=rep)
+    count = jax.ShapeDtypeStruct((), jnp.int32, sharding=rep)
+    f32 = lambda: jax.tree.map(lambda l: _abstract_like(l, jnp.float32, mesh), params_sds)
+    if optimizer_name == "adamw":
+        from repro.optim.adamw import AdamWState
+
+        opt_state = AdamWState(count, f32(), f32())
+    elif optimizer_name == "sgd":
+        from repro.optim.sgd import SGDState
+
+        opt_state = SGDState(count, f32())
+    else:
+        raise ValueError(optimizer_name)
+    return TrainState(step, params_sds, opt_state)

@@ -1,0 +1,125 @@
+"""Canonical jitted steps: train (with microbatch gradient accumulation and
+optional gradient compression) and eval.
+
+The train step implements the paper's Eq. (1) objective through the model's
+per-sequence weights (gamma_z), and is what the multi-pod dry-run lowers for
+every `train_*` cell.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import batch_axes
+from repro.optim.base import apply_updates
+from repro.training.state import TrainState
+from repro.utils.tree import tree_add, tree_scale
+
+
+def _constrain_batch(batch, mesh):
+    if mesh is None:
+        return batch
+    import math
+
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    ba = batch_axes(mesh)
+    ba_spec = ba if len(ba) > 1 else (ba[0] if ba else None)
+    dp = max(1, math.prod(mesh.shape[a] for a in ba))
+
+    def c(x):
+        if x.ndim == 0 or x.shape[0] % dp:
+            return x
+        parts = [ba_spec] + [None] * (x.ndim - 1)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*parts)))
+
+    return jax.tree.map(c, batch)
+
+
+def make_train_step(
+    model,
+    optimizer,
+    accum: int = 1,
+    mesh=None,
+    compress: bool = False,
+    param_shardings=None,
+    reduce_dtype=None,
+):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    batch leaves are [G, ...]; with accum > 1 they are reshaped to
+    [accum, G/accum, ...] and scanned (gradient accumulation in f32).
+    `param_shardings` (pytree of NamedSharding) pins the f32 gradient
+    accumulator to the FSDP layout — without it XLA tends to replicate the
+    accumulator, blowing per-device HBM.
+    `reduce_dtype` (e.g. jnp.bfloat16) casts per-microbatch gradients BEFORE
+    the cross-device reduction, halving DP/FSDP gradient wire bytes while the
+    accumulator itself stays f32 (bf16-reduce / f32-accumulate, the standard
+    large-scale recipe).
+    """
+
+    def loss_fn(params, micro):
+        return model.train_loss(params, micro)
+
+    def _pin(tree):
+        if param_shardings is None:
+            return tree
+        return jax.tree.map(
+            lambda x, s: jax.lax.with_sharding_constraint(x, s), tree, param_shardings
+        )
+
+    def _wire(g):
+        if reduce_dtype is not None:
+            g = jax.tree.map(lambda x: x.astype(reduce_dtype), g)
+            g = _pin(g)  # constraint AFTER the cast => the reduce runs in reduce_dtype
+        return jax.tree.map(lambda x: x.astype(jnp.float32), g)
+
+    def train_step(state: TrainState, batch: dict):
+        if accum == 1:
+            micro = _constrain_batch(batch, mesh)
+            loss, grads = jax.value_and_grad(loss_fn)(state.params, micro)
+            grads = _pin(_wire(grads))
+        else:
+            split = jax.tree.map(
+                lambda x: x.reshape((accum, x.shape[0] // accum) + x.shape[1:]), batch
+            )
+
+            def body(carry, micro):
+                gsum, lsum = carry
+                micro = _constrain_batch(micro, mesh)
+                l, g = jax.value_and_grad(loss_fn)(state.params, micro)
+                gsum = _pin(tree_add(gsum, _wire(g)))
+                return (gsum, lsum + l), None
+
+            g0 = _pin(jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), state.params))
+            (grads, loss_sum), _ = jax.lax.scan(body, (g0, jnp.zeros((), jnp.float32)), split)
+            grads = tree_scale(grads, 1.0 / accum)
+            loss = loss_sum / accum
+
+        if compress:
+            from repro.optim.compression import CompressionState, compress_gradients
+
+            # stateless wire-format model (residual threading lives in the
+            # fault-tolerant trainer loop; see repro/launch/train.py)
+            grads, _ = compress_gradients(
+                grads, CompressionState(jax.tree.map(jnp.zeros_like, grads))
+            )
+
+        updates, new_opt = optimizer.update(grads, state.opt_state, state.params)
+        new_params = apply_updates(state.params, updates)
+        # sum(g*g), not vdot: vdot's 1D reshape un-shards 2D-sharded grads
+        gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in jax.tree.leaves(grads)))
+        metrics = {"loss": loss, "grad_norm": gnorm}
+        return TrainState(state.step + 1, new_params, new_opt), metrics
+
+    return train_step
+
+
+def make_eval_step(model):
+    def eval_step(params, batch):
+        return model.train_loss(params, batch)
+
+    return eval_step

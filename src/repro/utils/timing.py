@@ -1,0 +1,52 @@
+"""Wall-clock timing utilities for benchmarks (block_until_ready-aware)."""
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+
+import jax
+
+
+class Timer:
+    """Accumulating timer; `with timer: ...` adds to .total."""
+
+    def __init__(self, name: str = ""):
+        self.name = name
+        self.total = 0.0
+        self.count = 0
+
+    def __enter__(self):
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self.total += time.perf_counter() - self._t0
+        self.count += 1
+        return False
+
+    @property
+    def mean(self) -> float:
+        return self.total / max(self.count, 1)
+
+
+@contextmanager
+def timed(out: dict, key: str):
+    """Context manager that records elapsed seconds into out[key] (accumulating)."""
+    t0 = time.perf_counter()
+    try:
+        yield
+    finally:
+        out[key] = out.get(key, 0.0) + (time.perf_counter() - t0)
+
+
+def time_fn(fn, *args, iters: int = 5, warmup: int = 2, **kwargs) -> float:
+    """Median wall time of fn(*args) over `iters` runs, blocking on outputs."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kwargs))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kwargs))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]

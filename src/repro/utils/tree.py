@@ -1,0 +1,58 @@
+"""Pytree arithmetic helpers used across the optimizer / DeltaGrad / CG stack.
+
+All functions are jit-friendly (pure jax.tree operations).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(a, s):
+    return jax.tree.map(lambda x: x * s, a)
+
+
+def tree_axpy(alpha, x, y):
+    """alpha * x + y, leafwise."""
+    return jax.tree.map(lambda xi, yi: alpha * xi + yi, x, y)
+
+
+def tree_dot(a, b):
+    """Sum of elementwise products across all leaves (float32 accumulate).
+
+    Implemented as sum(x*y) rather than vdot: vdot reshapes to 1D, and a 1D
+    reshape of a 2D-sharded tensor forces a full all-gather under SPMD.
+    """
+    leaves_a = jax.tree.leaves(a)
+    leaves_b = jax.tree.leaves(b)
+    return sum(
+        jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32))
+        for x, y in zip(leaves_a, leaves_b)
+    )
+
+
+def tree_norm(a):
+    return jnp.sqrt(tree_dot(a, a))
+
+
+def tree_zeros_like(a):
+    return jax.tree.map(jnp.zeros_like, a)
+
+
+def tree_size(a) -> int:
+    """Total number of parameters in the pytree."""
+    return sum(int(x.size) for x in jax.tree.leaves(a))
+
+
+def tree_cast(a, dtype):
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x, a
+    )

@@ -1,0 +1,10 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS device-count override here — smoke
+tests and benches must see the real (single) device; only
+repro/launch/dryrun.py forces 512 placeholder devices, in its own process."""
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.key(0)

@@ -1,0 +1,74 @@
+"""Assigned architecture configs match the assignment table exactly."""
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, SHAPES, get_config, list_archs, reduced
+
+# (arch, layers, d_model, heads, kv, d_ff, vocab)
+TABLE = {
+    "mixtral-8x22b": (56, 6144, 48, 8, 16384, 32768),
+    "qwen3-moe-30b-a3b": (48, 2048, 32, 4, 768, 151936),
+    "recurrentgemma-9b": (38, 4096, 16, 1, 12288, 256000),
+    "qwen2-72b": (80, 8192, 64, 8, 29568, 152064),
+    "olmo-1b": (16, 2048, 16, 16, 8192, 50304),
+    "starcoder2-3b": (30, 3072, 24, 2, 12288, 49152),
+    "granite-8b": (36, 4096, 32, 8, 14336, 49152),
+    "mamba2-370m": (48, 1024, 0, 0, 0, 50280),
+    "whisper-tiny": (4, 384, 6, 6, 1536, 51865),
+    "qwen2-vl-72b": (80, 8192, 64, 8, 29568, 152064),
+}
+
+MOE = {"mixtral-8x22b": (8, 2), "qwen3-moe-30b-a3b": (128, 8)}
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_table_values(arch):
+    cfg = get_config(arch)
+    L, d, h, kv, ff, v = TABLE[arch]
+    assert cfg.n_layers == L
+    assert cfg.d_model == d
+    assert cfg.n_heads == h
+    assert cfg.n_kv_heads == kv
+    assert cfg.d_ff == ff
+    assert cfg.vocab_size == v
+    if arch in MOE:
+        assert (cfg.moe.n_experts, cfg.moe.top_k) == MOE[arch]
+
+
+def test_all_ten_assigned():
+    assert len(ASSIGNED_ARCHS) == 10
+    assert set(ASSIGNED_ARCHS) <= set(list_archs())
+
+
+@pytest.mark.parametrize(
+    "arch,expected_b",
+    [("mixtral-8x22b", (135, 146)), ("qwen2-72b", (70, 75)),
+     ("qwen3-moe-30b-a3b", (29, 32)), ("olmo-1b", (1.0, 1.4)),
+     ("starcoder2-3b", (2.9, 3.4)), ("granite-8b", (7.8, 8.6)),
+     ("mamba2-370m", (0.33, 0.42))],
+)
+def test_param_counts_plausible(arch, expected_b):
+    n = get_config(arch).param_count() / 1e9
+    assert expected_b[0] <= n <= expected_b[1], n
+
+
+def test_active_params_moe():
+    cfg = get_config("qwen3-moe-30b-a3b")
+    assert 2.5e9 < cfg.active_param_count() < 4e9  # "A3B"
+
+
+def test_long_context_support_matrix():
+    long = SHAPES["long_500k"]
+    runs = {a for a in ASSIGNED_ARCHS if get_config(a).supports_shape(long)[0]}
+    assert runs == {"mixtral-8x22b", "recurrentgemma-9b", "starcoder2-3b", "mamba2-370m"}
+
+
+def test_padded_vocab_shards_16():
+    for arch in ASSIGNED_ARCHS:
+        assert get_config(arch).padded_vocab % 256 == 0
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_reduced_is_small(arch):
+    cfg = reduced(get_config(arch))
+    assert cfg.param_count() < 5e6
+    assert cfg.block_pattern == get_config(arch).block_pattern  # same family

@@ -1,0 +1,118 @@
+"""Increm-INFL invariants (hypothesis property tests + exactness).
+
+Key paper claim (Section 5.3 Exp2): 'Increm-INFL always returns the same set
+of influential training samples as Full' — Theorem 1 bounds must contain the
+true round-k score and Algorithm 1 must keep every true top-b sample.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.chef_lr import ChefConfig
+from repro.core import lr_head, train_head
+from repro.core.increm import algorithm1, build_provenance, increm_infl, theorem1_bounds
+from repro.core.influence import infl, infl_scores, influence_vector, top_b
+from repro.data import make_dataset
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _setup(seed, n=256, d=12, C=2, drift=0.05):
+    ks = jax.random.split(jax.random.key(seed), 6)
+    Xa = lr_head.augment(jax.random.normal(ks[0], (n, d)))
+    Y = jax.nn.softmax(jax.random.normal(ks[1], (n, C)) * 2)
+    w0 = jax.random.normal(ks[2], (C, d + 1)) * 0.3
+    w_k = w0 + drift * jax.random.normal(ks[3], (C, d + 1))
+    v = jax.random.normal(ks[4], (C, d + 1)) * 0.5
+    return Xa, Y, w0, w_k, v
+
+
+@settings(deadline=None, max_examples=15)
+@given(seed=st.integers(0, 10_000), gamma=st.floats(0.0, 0.99),
+       drift=st.floats(0.0, 0.3))
+def test_theorem1_bounds_contain_exact_score(seed, gamma, drift):
+    """For every (sample, class): lower <= I^(k) <= upper.
+
+    Uses the paper-faithful bounds; the integrated Hessians are approximated
+    at w0 per Section 4.1.2, so we allow the same epsilon the paper does
+    implicitly (tiny numerical slack)."""
+    Xa, Y, w0, w_k, v = _setup(seed, drift=drift)
+    prov = build_provenance(w0, Xa, power_iters=30)
+    bounds = theorem1_bounds(prov, w_k, v, Xa, Y, gamma, tight=False)
+    P_k = lr_head.probs(w_k, Xa)
+    exact = infl_scores(v, Xa, P_k, Y, gamma)
+    slack = 1e-4 + 0.05 * drift * np.abs(np.asarray(exact)).max()
+    assert np.all(np.asarray(exact) <= np.asarray(bounds.upper) + slack)
+    assert np.all(np.asarray(exact) >= np.asarray(bounds.lower) - slack)
+
+
+@settings(deadline=None, max_examples=10)
+@given(seed=st.integers(0, 10_000), b=st.integers(1, 20))
+def test_algorithm1_keeps_true_topb(seed, b):
+    """The pruned candidate set must contain the exact top-b (exactness)."""
+    Xa, Y, w0, w_k, v = _setup(seed, drift=0.08)
+    gamma = 0.8
+    prov = build_provenance(w0, Xa, power_iters=30)
+    eligible = jnp.ones(Xa.shape[0], bool)
+    for tight in (False, True):
+        bounds = theorem1_bounds(prov, w_k, v, Xa, Y, gamma, tight=tight)
+        pruned = algorithm1(bounds, eligible, b)
+        P_k = lr_head.probs(w_k, Xa)
+        exact = jnp.min(infl_scores(v, Xa, P_k, Y, gamma), axis=-1)
+        true_top = set(np.asarray(jax.lax.top_k(-exact, b)[1]).tolist())
+        cand = set(np.where(np.asarray(pruned.candidates))[0].tolist())
+        assert true_top <= cand, (tight, true_top - cand)
+
+
+def test_increm_equals_full_selection(rng):
+    """End-to-end: Increm-INFL and Full pick the identical top-b set after a
+    realistic model update (paper Exp2's correctness observation)."""
+    ds = make_dataset(rng, n_train=600, n_val=80, n_test=50, feature_dim=24)
+    cfg = ChefConfig(n_epochs=30, batch_size=150, lr=0.02, l2=0.05)
+    w0, _, _ = train_head(ds, cfg, cache=False)
+    Xa, Xa_val = lr_head.augment(ds.X), lr_head.augment(ds.X_val)
+    prov = build_provenance(w0, Xa)
+    # simulate a later-round model
+    w_k = w0 + 0.02 * jax.random.normal(jax.random.key(9), w0.shape)
+    v, _ = influence_vector(w_k, Xa_val, ds.y_val, Xa, ds.y_weight, cfg.l2)
+    eligible = jnp.ones(ds.n, bool)
+    b = 10
+    r_full = infl(w_k, v, Xa, ds.y_prob, cfg.gamma)
+    idx_full = set(np.asarray(top_b(r_full.priority, eligible, b)).tolist())
+    for tight in (False, True):
+        pr, sg, info = increm_infl(prov, w_k, v, Xa, ds.y_prob, cfg.gamma,
+                                   eligible, b, tight=tight)
+        idx_inc = set(np.asarray(top_b(pr, eligible, b)).tolist())
+        assert idx_inc == idx_full
+        assert int(info.n_candidates) <= ds.n
+    # tight bounds must prune strictly harder than paper bounds here
+    _, _, info_paper = increm_infl(prov, w_k, v, Xa, ds.y_prob, cfg.gamma, eligible, b)
+    _, _, info_tight = increm_infl(prov, w_k, v, Xa, ds.y_prob, cfg.gamma, eligible, b,
+                                   tight=True)
+    assert int(info_tight.n_candidates) <= int(info_paper.n_candidates)
+
+
+def test_round0_prunes_to_exactly_b(rng):
+    """At w_k == w0 the bounds are exact -> candidates == top-b."""
+    Xa, Y, w0, _, v = _setup(3)
+    prov = build_provenance(w0, Xa, power_iters=20)
+    bounds = theorem1_bounds(prov, w0, v, Xa, Y, 0.8)
+    pruned = algorithm1(bounds, jnp.ones(Xa.shape[0], bool), 7)
+    assert int(pruned.n_candidates) == 7
+
+
+def test_per_sample_hessian_norm_matches_dense(rng):
+    """||H(w,z)|| from the Kronecker power method == dense eigendecomposition."""
+    d, C = 6, 3
+    ks = jax.random.split(rng, 2)
+    Xa = lr_head.augment(jax.random.normal(ks[0], (8, d)))
+    w = jax.random.normal(ks[1], (C, d + 1)) * 0.4
+    got = lr_head.per_sample_hessian_norm(w, Xa, iters=50)
+    P = lr_head.probs(w, Xa)
+    for i in range(8):
+        A = jnp.diag(P[i]) - jnp.outer(P[i], P[i])
+        H = jnp.kron(A, jnp.outer(Xa[i], Xa[i]))
+        want = float(jnp.max(jnp.linalg.eigvalsh(H)))
+        np.testing.assert_allclose(float(got[i]), want, rtol=2e-3)

@@ -1,0 +1,125 @@
+"""INFL correctness: closed forms vs autodiff, and influence scores vs
+actual retraining effects (the semantic ground truth)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.chef_lr import ChefConfig
+from repro.core import lr_head, train_head
+from repro.core.cg import cg_solve
+from repro.core.influence import infl, influence_vector
+from repro.data import make_dataset
+
+
+def test_closed_form_grad_matches_autodiff(rng):
+    N, d, C = 64, 16, 3
+    ks = jax.random.split(rng, 3)
+    Xa = lr_head.augment(jax.random.normal(ks[0], (N, d)))
+    Y = jax.nn.softmax(jax.random.normal(ks[1], (N, C)))
+    w8 = jax.random.uniform(ks[2], (N,))
+    w = jax.random.normal(ks[0], (C, d + 1)) * 0.3
+    g_auto = jax.grad(lr_head.loss)(w, Xa, Y, w8, 0.05)
+    g_closed = lr_head.grad(w, Xa, Y, w8, 0.05)
+    np.testing.assert_allclose(np.asarray(g_auto), np.asarray(g_closed), atol=1e-5)
+
+
+def test_closed_form_hvp_matches_autodiff(rng):
+    N, d, C = 64, 16, 3
+    ks = jax.random.split(rng, 3)
+    Xa = lr_head.augment(jax.random.normal(ks[0], (N, d)))
+    Y = jax.nn.softmax(jax.random.normal(ks[1], (N, C)))
+    w8 = jax.random.uniform(ks[2], (N,))
+    w = jax.random.normal(ks[0], (C, d + 1)) * 0.3
+    v = jax.random.normal(ks[1], (C, d + 1))
+    hvp_auto = jax.jvp(lambda w_: jax.grad(lr_head.loss)(w_, Xa, Y, w8, 0.05), (w,), (v,))[1]
+    hvp_closed = lr_head.hvp(w, v, Xa, w8, 0.05)
+    np.testing.assert_allclose(np.asarray(hvp_auto), np.asarray(hvp_closed), atol=1e-4)
+
+
+def test_class_gradient_eq9_matches_autodiff(rng):
+    """∇_y∇_w F δ_y = −δ_y ⊗ x̃ (Eq. 9 contracted) vs autodiff through y."""
+    d, C = 8, 4
+    ks = jax.random.split(rng, 3)
+    xa = lr_head.augment(jax.random.normal(ks[0], (1, d)))[0]
+    y = jax.nn.softmax(jax.random.normal(ks[1], (C,)))
+    w = jax.random.normal(ks[2], (C, d + 1)) * 0.3
+
+    def loss_wy(w_, y_):
+        logp = jax.nn.log_softmax(w_ @ xa)
+        return -jnp.sum(y_ * logp)
+
+    for c in range(C):
+        delta = jax.nn.one_hot(c, C) - y
+        # autodiff: d/dy of grad_w, contracted with delta
+        _, jvp_val = jax.jvp(lambda y_: jax.grad(loss_wy)(w, y_), (y,), (delta,))
+        closed = -jnp.outer(delta, xa)
+        np.testing.assert_allclose(np.asarray(jvp_val), np.asarray(closed), atol=1e-5)
+
+
+def test_cg_solves_hessian_system(rng):
+    N, d, C = 128, 12, 2
+    ks = jax.random.split(rng, 3)
+    Xa = lr_head.augment(jax.random.normal(ks[0], (N, d)))
+    w8 = jnp.ones((N,))
+    w = jax.random.normal(ks[1], (C, d + 1)) * 0.2
+    b = jax.random.normal(ks[2], (C, d + 1))
+    P = lr_head.probs(w, Xa)
+    hvp_fn = lambda v: lr_head.hvp(w, v, Xa, w8, 0.1, P=P)
+    x, stats = cg_solve(hvp_fn, b, iters=200, tol=1e-10)
+    np.testing.assert_allclose(np.asarray(hvp_fn(x)), np.asarray(b), atol=1e-4)
+
+
+def test_infl_score_predicts_cleaning_effect(rng):
+    """Eq. 6 is a first-order prediction of N*(F_val(w_clean) - F_val(w)).
+    Verify the correlation against actual re-optimization for single-sample
+    cleanings (the definition of influence)."""
+    ds = make_dataset(rng, n_train=400, n_val=100, n_test=50, feature_dim=16,
+                      class_sep=0.9)
+    cfg = ChefConfig(n_epochs=80, batch_size=200, lr=0.1, l2=0.1, gamma=0.8)
+    w, _, _ = train_head(ds, cfg, cache=False)
+    Xa, Xa_val = lr_head.augment(ds.X), lr_head.augment(ds.X_val)
+    v, _ = influence_vector(w, Xa_val, ds.y_val, Xa, ds.y_weight, cfg.l2,
+                            cg_iters=256, cg_tol=1e-10)
+    r = infl(w, v, Xa, ds.y_prob, cfg.gamma)
+
+    @jax.jit
+    def _reopt(y2, w8):
+        # re-optimize to convergence with full-batch GD (strongly convex)
+        def body(wi, _):
+            return wi - 0.5 * lr_head.grad(wi, Xa, y2, w8, cfg.l2), None
+
+        wi, _ = jax.lax.scan(body, w, None, length=300)
+        return lr_head.loss(wi, Xa_val, ds.y_val, jnp.ones(Xa_val.shape[0]), 0.0)
+
+    def val_loss_after_clean(i, c):
+        y2 = ds.y_prob.at[i].set(jax.nn.one_hot(c, ds.n_classes))
+        w8 = ds.y_weight.at[i].set(1.0)
+        return float(_reopt(y2, w8))
+
+    # converged base (influence assumes w* = argmin; SGD's w is not converged,
+    # which would otherwise add a constant offset to every delta)
+    base = float(_reopt(ds.y_prob, ds.y_weight))
+    idx = np.argsort(np.asarray(r.priority))[[0, 2, 5, 50, 200, 399]]
+    predicted, actual = [], []
+    for i in idx:
+        c = int(r.suggested[i])
+        predicted.append(float(r.scores[i, c]) / ds.n)
+        actual.append(val_loss_after_clean(int(i), c) - base)
+    corr = np.corrcoef(predicted, actual)[0, 1]
+    assert corr > 0.8, (corr, predicted, actual)
+    # the top-ranked sample should actually help when cleaned
+    assert actual[0] < 0
+
+
+def test_suggested_labels_mostly_match_truth(rng):
+    """Paper Section 5.3: >70% of INFL's suggested labels match ground truth."""
+    ds = make_dataset(rng, n_train=1000, n_val=150, n_test=100, feature_dim=32)
+    cfg = ChefConfig(n_epochs=40, batch_size=250, lr=0.1, l2=0.05)
+    w, _, _ = train_head(ds, cfg, cache=False)
+    Xa, Xa_val = lr_head.augment(ds.X), lr_head.augment(ds.X_val)
+    v, _ = influence_vector(w, Xa_val, ds.y_val, Xa, ds.y_weight, cfg.l2)
+    r = infl(w, v, Xa, ds.y_prob, cfg.gamma)
+    top = jax.lax.top_k(-r.priority, 100)[1]
+    frac = float(jnp.mean((r.suggested[top] == ds.y_true[top]).astype(jnp.float32)))
+    assert frac > 0.7, frac

@@ -1,0 +1,108 @@
+"""Per-arch smoke tests: reduced same-family config, one forward/train step
+on CPU, asserting output shapes and finiteness (assignment requirement (f))."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_config, reduced
+from repro.models import Model
+from repro.optim import adamw
+from repro.training.state import init_train_state
+from repro.training.steps import make_train_step
+
+
+def make_batch(cfg, key, B=2, S=16):
+    k1, k2 = jax.random.split(key)
+    b = {
+        "tokens": jax.random.randint(k1, (B, S), 0, cfg.vocab_size),
+        "targets": jax.random.randint(k2, (B, S), 0, cfg.vocab_size),
+        "weights": jnp.ones((B,)),
+    }
+    if cfg.is_encoder_decoder:
+        b["enc_frames"] = jax.random.normal(k1, (B, cfg.encoder_seq, cfg.d_model))
+    if cfg.rope_kind == "mrope":
+        b["pos3"] = jnp.broadcast_to(jnp.arange(S)[None, None, :], (B, 3, S))
+    return b
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_forward_train_step(arch, rng):
+    cfg = reduced(get_config(arch))
+    model = Model(cfg)
+    params = model.init(rng)
+    batch = make_batch(cfg, jax.random.key(1))
+
+    loss = model.train_loss(params, batch)
+    assert loss.shape == ()
+    assert np.isfinite(float(loss))
+
+    opt = adamw(1e-3)
+    step = jax.jit(make_train_step(model, opt, accum=1))
+    state = init_train_state(params, opt)
+    state2, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    assert int(state2.step) == 1
+    # parameters actually moved
+    moved = any(
+        float(jnp.abs(a - b).max()) > 0
+        for a, b in zip(jax.tree.leaves(state.params), jax.tree.leaves(state2.params))
+    )
+    assert moved
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_prefill_decode_shapes(arch, rng):
+    cfg = reduced(get_config(arch))
+    model = Model(cfg)
+    params = model.init(rng)
+    B, S = 2, 16
+    batch = make_batch(cfg, jax.random.key(1), B, S)
+    logits, cache = model.prefill(params, batch, cache_len=32)
+    assert logits.shape == (B, 1, cfg.padded_vocab)
+    db = {"tokens": jnp.zeros((B, 1), jnp.int32)}
+    if cfg.rope_kind == "mrope":
+        db["pos3"] = jnp.full((B, 3, 1), S)
+    logits2, cache2 = model.decode_step(params, cache, db)
+    assert logits2.shape == (B, 1, cfg.padded_vocab)
+    assert np.all(np.isfinite(np.asarray(logits2, np.float32)))
+    assert int(cache2["pos"]) == S + 1
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_features_for_chef_head(arch, rng):
+    cfg = reduced(get_config(arch))
+    model = Model(cfg)
+    params = model.init(rng)
+    feats = model.features(params, make_batch(cfg, jax.random.key(2)))
+    assert feats.shape == (2, cfg.d_model)
+    assert np.all(np.isfinite(np.asarray(feats)))
+
+
+@pytest.mark.parametrize("arch", ["olmo-1b", "mamba2-370m", "recurrentgemma-9b",
+                                  "mixtral-8x22b", "qwen2-vl-72b", "whisper-tiny"])
+def test_prefill_decode_consistency(arch, rng):
+    """Decode after prefill matches the full forward at the same position."""
+    cfg = reduced(get_config(arch))
+    if cfg.moe is not None:  # avoid capacity-dropping nondeterminism
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0)
+        )
+    model = Model(cfg)
+    params = model.init(rng)
+    S = 8
+    full = make_batch(cfg, jax.random.key(3), 1, S + 1)
+    part = {k: (v[:, :S] if k in ("tokens", "targets") else v) for k, v in full.items()}
+    if cfg.rope_kind == "mrope":
+        part["pos3"] = full["pos3"][..., :S]
+    lg_full, _ = model.prefill(params, full, cache_len=2 * S)
+    _, cache = model.prefill(params, part, cache_len=2 * S)
+    db = {"tokens": full["tokens"][:, S : S + 1]}
+    if cfg.rope_kind == "mrope":
+        db["pos3"] = full["pos3"][..., S : S + 1]
+    lg_dec, _ = model.decode_step(params, cache, db)
+    err = np.abs(np.asarray(lg_full, np.float32) - np.asarray(lg_dec, np.float32)).max()
+    assert err < 1e-3, err

@@ -1,0 +1,77 @@
+"""Optimizers, schedules, gradient compression (hypothesis properties)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import adamw, apply_updates, constant, sgd, warmup_cosine
+from repro.optim.compression import CompressionState, compress_gradients, init_compression
+
+
+def _quadratic_losses(opt, steps=200):
+    A = jnp.diag(jnp.array([1.0, 10.0]))
+    b = jnp.array([3.0, -2.0])
+    params = {"x": jnp.zeros(2)}
+    state = opt.init(params)
+    for _ in range(steps):
+        g = {"x": A @ params["x"] - b}
+        upd, state = opt.update(g, state, params)
+        params = apply_updates(params, upd)
+    return float(0.5 * params["x"] @ A @ params["x"] - b @ params["x"])
+
+
+def test_sgd_converges_quadratic():
+    assert _quadratic_losses(sgd(0.05)) < -4.69  # optimum = -4.7
+
+
+def test_sgd_momentum_converges():
+    assert _quadratic_losses(sgd(0.02, momentum=0.9)) < -4.69
+
+
+def test_adamw_converges_quadratic():
+    assert _quadratic_losses(adamw(0.2), steps=400) < -4.6
+
+
+def test_warmup_cosine_shape():
+    f = warmup_cosine(1.0, 10, 100)
+    assert float(f(jnp.asarray(0))) < 0.15
+    assert abs(float(f(jnp.asarray(10))) - 1.0) < 0.11
+    assert float(f(jnp.asarray(100))) < 0.2
+
+
+@settings(deadline=None, max_examples=25)
+@given(seed=st.integers(0, 10_000), scale=st.floats(1e-3, 1e3))
+def test_compression_error_feedback_property(seed, scale):
+    """int8 quantization with error feedback: per-step error bounded by the
+    quantization step, and the residual carries what was dropped (so the sum
+    of transmitted values tracks the sum of true gradients)."""
+    key = jax.random.key(seed)
+    g1 = {"w": jax.random.normal(key, (64,)) * scale}
+    state = init_compression(g1)
+    sent1, state = compress_gradients(g1, state)
+    # error feedback exactness: sent + residual == gradient
+    np.testing.assert_allclose(
+        np.asarray(sent1["w"] + state.residual["w"]), np.asarray(g1["w"]), rtol=1e-5,
+        atol=1e-5 * scale,
+    )
+    # per-element quantization error bounded by one step
+    step = float(jnp.max(jnp.abs(g1["w"]))) / 127.0
+    assert float(jnp.max(jnp.abs(state.residual["w"]))) <= step * 0.51 + 1e-9
+
+
+def test_compression_unbiased_over_steps():
+    """Accumulated transmitted gradient converges to accumulated true
+    gradient (error feedback prevents drift)."""
+    key = jax.random.key(0)
+    state = init_compression({"w": jnp.zeros(32)})
+    total_true = jnp.zeros(32)
+    total_sent = jnp.zeros(32)
+    for i in range(50):
+        g = {"w": jax.random.normal(jax.random.fold_in(key, i), (32,))}
+        sent, state = compress_gradients(g, state)
+        total_true += g["w"]
+        total_sent += sent["w"]
+    # residual is all that separates them
+    np.testing.assert_allclose(
+        np.asarray(total_sent + state.residual["w"]), np.asarray(total_true), atol=1e-4
+    )

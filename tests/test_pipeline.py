@@ -1,0 +1,90 @@
+"""End-to-end CHEF pipeline behaviour (Exp1-style semantics at small scale)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.chef_lr import ChefConfig
+from repro.core import run_chef, train_head
+from repro.core.pipeline import _evaluate
+from repro.data import make_dataset
+
+
+@pytest.fixture(scope="module")
+def hard_ds():
+    # systematically-biased weak labels (~17% noise), paper-like difficulty
+    return make_dataset(
+        jax.random.key(42), n_train=1500, n_val=300, n_test=600, feature_dim=48,
+        class_sep=1.0, noise=1.0, lf_acc=(0.5, 0.6),
+    )
+
+
+CFG = ChefConfig(budget=60, round_size=10, n_epochs=25, batch_size=300, lr=0.05, l2=0.02)
+
+
+def test_cleaning_improves_over_uncleaned(hard_ds):
+    w0, _, _ = train_head(hard_ds, CFG, cache=False)
+    _, f1_unclean = _evaluate(w0, hard_ds)
+    res = run_chef(hard_ds, CFG, method="infl", selector="full", constructor="retrain")
+    assert res.f1_test_final >= f1_unclean - 0.005
+
+
+def test_infl_beats_random(hard_ds):
+    r_infl = run_chef(hard_ds, CFG, method="infl", selector="full", constructor="retrain")
+    r_rand = run_chef(hard_ds, CFG, method="random", selector="full", constructor="retrain")
+    assert r_infl.f1_test_final >= r_rand.f1_test_final - 0.01
+
+
+@pytest.mark.parametrize("method", ["infl_d", "infl_y", "active_one", "active_two",
+                                    "o2u", "tars", "duti", "loss"])
+def test_baselines_run(hard_ds, method):
+    cfg = ChefConfig(budget=20, round_size=10, n_epochs=15, batch_size=300,
+                     lr=0.05, l2=0.02)
+    res = run_chef(hard_ds, cfg, method=method, selector="full", constructor="retrain")
+    assert 0.0 <= res.f1_test_final <= 1.0
+    assert int(jnp.sum(res.dataset.cleaned)) == 20
+
+
+@pytest.mark.parametrize("strategy", ["one", "two", "three"])
+def test_annotation_strategies(hard_ds, strategy):
+    import dataclasses
+
+    cfg = dataclasses.replace(CFG, strategy=strategy, budget=20)
+    res = run_chef(hard_ds, cfg, method="infl", selector="full", constructor="retrain")
+    assert res.f1_test_final > 0.4
+
+
+def test_early_termination(hard_ds):
+    import dataclasses
+
+    cfg = dataclasses.replace(CFG, target_f1=0.01, budget=60)
+    res = run_chef(hard_ds, cfg, method="infl", selector="full", constructor="retrain")
+    assert res.terminated_early
+    assert len(res.history) == 1  # stopped after the first round
+
+
+def test_increm_deltagrad_matches_full_retrain_selection(hard_ds):
+    import dataclasses
+
+    cfg = dataclasses.replace(CFG, budget=30, lr=0.02)
+    r_fast = run_chef(hard_ds, cfg, method="infl", selector="increm_tight",
+                      constructor="deltagrad")
+    r_slow = run_chef(hard_ds, cfg, method="infl", selector="full",
+                      constructor="retrain")
+    agree = float(jnp.mean((r_fast.dataset.cleaned == r_slow.dataset.cleaned)
+                           .astype(jnp.float32)))
+    assert agree > 0.99, agree
+    assert abs(r_fast.f1_test_final - r_slow.f1_test_final) < 0.03
+    # pruning actually happened after round 0
+    assert all(rec.n_candidates < hard_ds.n // 2 for rec in r_fast.history)
+
+
+def test_smaller_b_not_worse(hard_ds):
+    """Paper Section 5.3: smaller per-round batches give >= quality."""
+    import dataclasses
+
+    r_b30 = run_chef(hard_ds, dataclasses.replace(CFG, round_size=30),
+                     method="infl", selector="full", constructor="retrain")
+    r_b10 = run_chef(hard_ds, dataclasses.replace(CFG, round_size=10),
+                     method="infl", selector="full", constructor="retrain")
+    assert r_b10.f1_test_final >= r_b30.f1_test_final - 0.02

@@ -1,0 +1,99 @@
+"""End-to-end behaviour tests for the whole system: the paper's pipeline on a
+paper-shaped dataset, the training driver, the serving engine, and the
+dry-run artifact contract."""
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.chef_lr import ChefConfig
+from repro.core import run_chef
+from repro.data import make_paper_dataset
+
+
+def test_paper_shaped_pipeline_end_to_end():
+    """CHEF on a (scaled) twitter-shaped dataset: INFL(three) + Increm +
+    DeltaGrad-L improves F1 over the weak-label baseline and prunes."""
+    ds = make_paper_dataset("twitter", scale=0.08)  # ~900 samples, 768-d
+    cfg = ChefConfig(budget=30, round_size=10, n_epochs=15, batch_size=200,
+                     lr=0.02, l2=0.05, strategy="three")
+    res = run_chef(ds, cfg, method="infl", selector="increm_tight",
+                   constructor="deltagrad")
+    assert len(res.history) == 3
+    assert res.f1_test_final > 0.5
+    assert res.history[-1].n_candidates <= ds.n
+
+
+def test_train_driver_loss_decreases(tmp_path):
+    from repro.launch import train as train_mod
+
+    out = train_mod.main([
+        "--arch", "mamba2-370m", "--reduce", "smoke", "--steps", "30",
+        "--batch", "4", "--seq", "64", "--lr", "3e-3",
+        "--ckpt_dir", str(tmp_path),
+    ])
+    assert out["steps"] == 30
+    assert out["final_loss"] < out["first_loss"]
+
+
+def test_serve_driver_batched_requests():
+    from repro.launch import serve as serve_mod
+
+    out = serve_mod.main(["--arch", "starcoder2-3b", "--requests", "5",
+                          "--batch", "2", "--prompt_len", "16", "--max_new", "4"])
+    assert out["requests"] == 5
+    assert out["tokens"] == 20
+
+
+def test_compressed_training_step_runs(rng):
+    """Gradient compression composes with the jitted train step."""
+    from repro.configs import get_config, reduced
+    from repro.models import Model
+    from repro.optim import adamw
+    from repro.training.state import init_train_state
+    from repro.training.steps import make_train_step
+
+    cfg = reduced(get_config("granite-8b"))
+    model = Model(cfg)
+    params = model.init(rng)
+    opt = adamw(1e-3)
+    step = jax.jit(make_train_step(model, opt, accum=2, compress=True))
+    state = init_train_state(params, opt)
+    batch = {
+        "tokens": jax.random.randint(rng, (4, 16), 0, cfg.vocab_size),
+        "targets": jax.random.randint(rng, (4, 16), 0, cfg.vocab_size),
+        "weights": jnp.ones((4,)),
+    }
+    state, metrics = step(state, batch)
+    assert float(metrics["loss"]) > 0
+
+
+@pytest.mark.skipif(
+    not (Path(__file__).parents[1] / "artifacts" / "dryrun").exists(),
+    reason="dry-run artifacts not generated yet",
+)
+def test_dryrun_artifacts_complete_and_fit():
+    """Contract over the generated dry-run sweep: every (arch x shape x mesh)
+    cell is ok or a documented skip, and every train cell reports roofline
+    terms + collective stats."""
+    art = Path(__file__).parents[1] / "artifacts" / "dryrun"
+    from repro.configs import ASSIGNED_ARCHS, SHAPES
+
+    cells = {}
+    for f in art.glob("*.json"):
+        rec = json.loads(f.read_text())
+        if rec.get("tag"):
+            continue
+        cells[(rec["arch"], rec["shape"], rec["mesh"])] = rec
+    for arch in ASSIGNED_ARCHS:
+        for shape in SHAPES:
+            for mesh in ("single", "multi"):
+                rec = cells.get((arch, shape, mesh))
+                assert rec is not None, (arch, shape, mesh)
+                assert rec["status"] in ("ok", "skipped"), rec.get("error")
+                if rec["status"] == "ok":
+                    rl = rec["roofline"]
+                    assert rl["flops_per_device"] > 0
+                    assert rl["bottleneck"] in ("compute", "memory", "collective")
