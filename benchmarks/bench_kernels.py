@@ -1,7 +1,12 @@
-"""Kernel microbenchmarks: Pallas (interpret on CPU / compiled on TPU) vs the
-XLA-fused jnp reference. On CPU the interesting number is the REF column
-(XLA) — interpret-mode Pallas timing measures the Python interpreter, so we
-report both and flag the backend."""
+"""Kernel microbenchmarks across the Backend dispatch layer.
+
+Measures the three hot ops (infl_scores / lr_grad / lr_hvp) under any subset
+of the backends (`reference` | `pallas` | `pallas_sharded`). On CPU the
+interesting number is the REFERENCE column (XLA) — interpret-mode Pallas
+timing measures the Python interpreter, so non-reference wall times are only
+emitted on TPU, where `pallas_sharded` additionally shows the scaling of the
+shard_map data-parallel path over the local mesh.
+"""
 from __future__ import annotations
 
 import jax
@@ -9,12 +14,30 @@ import jax.numpy as jnp
 
 from benchmarks.common import emit
 from repro.core import lr_head
-from repro.core.influence import infl_scores as infl_scores_jnp
-from repro.kernels import ops
+from repro.core.backend import BACKENDS, get_backend
 from repro.utils.timing import time_fn
 
 
-def run(N: int = 8192, d: int = 2048, C: int = 2) -> list:
+def run(N: int = 8192, d: int = 2048, C: int = 2, backend: str = "all") -> list:
+    import sys
+
+    if backend in ("", "all"):
+        names = list(BACKENDS)
+    else:
+        names = [n.strip() for n in backend.split(",") if n.strip()]
+    bad = [n for n in names if n not in BACKENDS]
+    if bad or not names:
+        raise ValueError(f"unknown backend(s) {bad or [backend]}; "
+                         f"expected 'all' or a comma list of {BACKENDS}")
+    # reference first so speedup_vs_ref is derivable for the others
+    names.sort(key=lambda n: n != "reference")
+    if jax.default_backend() != "tpu":
+        suppressed = [n for n in names if n != "reference"]
+        if suppressed:
+            print(f"# {','.join(suppressed)} wall-times suppressed on "
+                  f"{jax.default_backend()} (interpret-mode Pallas measures "
+                  "the Python interpreter)", file=sys.stderr)
+            names = [n for n in names if n not in suppressed]
     ks = jax.random.split(jax.random.key(0), 5)
     Xa = jax.random.normal(ks[0], (N, d + 1))
     Y = jax.nn.softmax(jax.random.normal(ks[1], (N, C)))
@@ -22,26 +45,28 @@ def run(N: int = 8192, d: int = 2048, C: int = 2) -> list:
     v = jax.random.normal(ks[3], (C, d + 1)) * 0.1
     w8 = jnp.ones((N,))
     P = lr_head.probs(w, Xa)
-    backend = jax.default_backend()
+    hw = jax.default_backend()
     rows = []
 
-    pairs = [
-        ("infl_scores", lambda: ops.infl_scores(v, Xa, P, Y, 0.8),
-         jax.jit(lambda: infl_scores_jnp(v, Xa, P, Y, 0.8))),
-        ("lr_grad", lambda: ops.lr_grad(w, Xa, Y, w8, 0.05),
-         jax.jit(lambda: lr_head.grad(w, Xa, Y, w8, 0.05))),
-        ("lr_hvp", lambda: ops.lr_hvp(w, v, Xa, w8, 0.05),
-         jax.jit(lambda: lr_head.hvp(w, v, Xa, w8, 0.05))),
-    ]
-    for name, kfn, rfn in pairs:
-        t_ref = time_fn(rfn, iters=5)
-        flops = 2 * N * (d + 1) * C * (1 if name == "infl_scores" else 2)
-        emit(f"kernel_{name}_ref_xla", t_ref,
-             f"gflops={flops / t_ref / 1e9:.1f};backend={backend}")
-        if backend == "tpu":  # interpret-mode wall time is meaningless
-            t_k = time_fn(kfn, iters=5)
-            emit(f"kernel_{name}_pallas", t_k, f"speedup={t_ref / t_k:.2f}x")
-        rows.append((name, t_ref))
+    t_ref = {}
+    for name in names:
+        bk = get_backend(name)
+        pairs = [
+            ("infl_scores", lambda: bk.infl_scores(v, Xa, P, Y, 0.8), 1),
+            ("lr_grad", lambda: bk.lr_grad(w, Xa, Y, w8, 0.05), 2),
+            ("lr_hvp", lambda: bk.lr_hvp(w, v, Xa, w8, 0.05), 2),
+        ]
+        for op, fn, matmuls in pairs:
+            fn = fn if name != "reference" else jax.jit(fn)
+            t = time_fn(fn, iters=5)
+            flops = 2 * N * (d + 1) * C * matmuls
+            derived = f"gflops={flops / t / 1e9:.1f};hw={hw}"
+            if name == "reference":
+                t_ref[op] = t
+            elif op in t_ref:
+                derived += f";speedup_vs_ref={t_ref[op] / t:.2f}x"
+            emit(f"kernel_{op}_{name}", t, derived)
+            rows.append((op, name, t))
     return rows
 
 

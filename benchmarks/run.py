@@ -22,6 +22,9 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="", help="comma list: exp1,exp2,exp3,exp4,kern,roof")
+    ap.add_argument("--backend", default="all",
+                    help="kern suite backends: 'all' or comma list of "
+                         "reference,pallas,pallas_sharded")
     args = ap.parse_args()
     want = set(args.only.split(",")) if args.only else None
 
@@ -39,7 +42,7 @@ def main() -> None:
         ("exp3", exp3_deltagrad.run),
         ("exp4", exp4_vary_b.run),
         ("exp1", exp1_quality.run),
-        ("kern", bench_kernels.run),
+        ("kern", lambda: bench_kernels.run(backend=args.backend)),
         ("roof", roofline_table.run),
     ]
     print("name,us_per_call,derived")

@@ -41,6 +41,12 @@ class ChefConfig:
     # label strategy: "one" (humans only), "two" (INFL labels only),
     # "three" (INFL + humans, majority vote)
     strategy: str = "three"
+    # hot-loop backend: "reference" | "pallas" | "pallas_sharded"
+    # (resolved once per run_chef via repro.core.backend.get_backend)
+    backend: str = "reference"
+    # pallas_sharded only: rows per per-device kernel invocation
+    # (0 = whole local shard in one call)
+    score_chunk: int = 0
     seed: int = 0
 
 

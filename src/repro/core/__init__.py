@@ -1,5 +1,6 @@
 """CHEF core: the paper's contribution as composable JAX modules.
 
+  backend    — Backend dispatch (reference | pallas | pallas_sharded)
   lr_head    — the strongly-convex LR head (closed-form grad/HVP/loss)
   influence  — INFL (Eq. 6) + INFL-D (Eq. 2) + INFL-Y (Eq. 7)
   cg         — conjugate-gradient H⁻¹g
@@ -8,13 +9,43 @@
   annotation — simulated annotators, majority vote, INFL-as-annotator
   baselines  — Active x2, O2U-lite, TARS-lite, DUTI-lite, loss, random
   pipeline   — loop (2): select -> annotate -> update, early termination
+
+Backend dispatch contract
+-------------------------
+The three hot ops of the scoring loop — `lr_grad` (Eq. 1 batch gradient),
+`lr_hvp` (H(w)v inside CG), `infl_scores` (the Eq. 6 [N, C] score matrix) —
+are methods on a single frozen `Backend` object rather than per-call
+booleans:
+
+  * `get_backend(spec, mesh=None, chunk_rows=0)` resolves a spec
+    (`Backend` | name | `None`) once; `run_chef` does this from
+    `ChefConfig.backend` (or its `backend=` override) at entry and passes
+    the object down — no flag threading, no re-resolution per call.
+  * every implementation is semantically identical (same f32 outputs,
+    validated against the `reference` oracle in tests/test_backend.py);
+    choosing a backend is purely a performance/scale decision.
+  * `reference` — XLA-fused jnp closed forms; always available.
+  * `pallas` — fused TPU kernels (interpret-mode off-TPU).
+  * `pallas_sharded` — the kernels under `shard_map` over the mesh's data
+    axes: rows sharded, grad/HVP partial sums psum'd, optional `chunk_rows`
+    bounding the per-device working set, so full-selector scoring scales to
+    N >> single-device memory (the Increm-INFL pruning path still runs the
+    reference forms; see ROADMAP open items).
+
+New ops that want dispatch add a method to `Backend` and (optionally) a
+kernel in repro.kernels; call sites accept `backend: Backend | None = None`
+(None == reference) and never branch on the name themselves.
 """
+from repro.core.backend import Backend, BACKENDS, get_backend
 from repro.core.pipeline import ChefResult, RoundRecord, run_chef, train_head
 from repro.core.influence import infl, infl_scores, influence_vector, InflResult
 from repro.core.increm import build_provenance, increm_infl, theorem1_bounds, algorithm1
 from repro.core.deltagrad import DGConfig, deltagrad_replay, build_correction_schedule
 
 __all__ = [
+    "Backend",
+    "BACKENDS",
+    "get_backend",
     "ChefResult",
     "RoundRecord",
     "run_chef",

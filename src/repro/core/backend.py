@@ -1,0 +1,275 @@
+"""Backend dispatch for the CHEF hot loops.
+
+One `Backend` object — selected once (from `ChefConfig.backend` or an
+explicit override) and passed down through `run_chef` -> `influence_vector`
+-> `inverse_hvp` -> `lr_head.grad/hvp` / `infl_scores` — replaces the
+boolean kernel flag that used to be threaded through every call site.
+
+Three implementations of the same three ops (identical semantics, validated
+against each other in tests/test_backend.py):
+
+  reference       pure-jnp closed forms (XLA-fused); the semantic oracle.
+  pallas          fused Pallas TPU kernels (repro.kernels.ops; interpret-mode
+                  on CPU so they run and validate anywhere).
+  pallas_sharded  the Pallas kernels wrapped in `shard_map` over the mesh's
+                  data axes: rows of Xa/P/Y are split across devices, the
+                  row-local `X @ vᵀ` epilogue (infl_scores) stays local, and
+                  the grad/HVP partial sums are psum'd — so `run_chef` with
+                  selector="full" can score N >> single-device memory.
+                  (The Increm-INFL pruning path still evaluates its bounds on
+                  the reference forms — see ROADMAP open items.) `chunk_rows`
+                  additionally bounds the per-device working set by
+                  lax.map-ing the kernel over row chunks.
+
+The ops (all return f32, matching `repro.kernels.ref` oracles):
+
+  lr_grad(w, Xa, Y, weights, l2)        -> [C, d+1]   Eq. (1) batch gradient
+  lr_hvp(w, v, Xa, weights, l2, P=None) -> [C, d+1]   H(w) v
+  infl_scores(v, Xa, P, Y, gamma)       -> [N, C]     Eq. (6) score matrix
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Union
+
+import jax
+import jax.numpy as jnp
+
+BACKENDS = ("reference", "pallas", "pallas_sharded")
+
+
+@functools.lru_cache(maxsize=128)
+def _cached_sharded(backend: "Backend", op: str, static: float):
+    """One jitted shard_map callable per (Backend, op, static scalar).
+
+    Building the closure + shard_map wrapper inline on every call would hand
+    JAX a fresh function object each time — every eager invocation (each CG
+    iteration, each benchmark rep) would re-trace and re-compile. Backend is
+    frozen + hashable precisely so it can key this cache; jit's own cache
+    then handles shape polymorphism."""
+    return jax.jit(backend._build_sharded(op, static))
+
+
+@dataclass(frozen=True)
+class Backend:
+    """Dispatch object for the three CHEF hot ops. Frozen + hashable so it
+    can ride through `functools.partial`/jit closures unchanged."""
+
+    name: str = "reference"
+    mesh: Any = None  # required for pallas_sharded
+    chunk_rows: int = 0  # 0 = whole local shard in one kernel call
+
+    def __post_init__(self):
+        if self.name not in BACKENDS:
+            raise ValueError(f"unknown backend {self.name!r}; expected one of {BACKENDS}")
+        if self.name == "pallas_sharded" and self.mesh is None:
+            raise ValueError("pallas_sharded backend needs a mesh (see get_backend)")
+
+    # ------------------------------------------------------------- dispatch
+    def lr_grad(self, w, Xa, Y, weights, l2: float) -> jax.Array:
+        if self.name == "reference":
+            from repro.core import lr_head
+
+            return lr_head.grad_reference(w, Xa, Y, weights, l2)
+        if self.name == "pallas":
+            from repro.kernels import ops
+
+            return ops.lr_grad(w, Xa, Y, weights, l2)
+        return self._sharded_reduce("lr_grad", (Xa, Y, weights), w, None, l2)
+
+    def lr_hvp(self, w, v, Xa, weights, l2: float, P=None) -> jax.Array:
+        if self.name == "reference":
+            from repro.core import lr_head
+
+            return lr_head.hvp_reference(w, v, Xa, weights, l2, P=P)
+        if self.name == "pallas":
+            from repro.kernels import ops
+
+            return ops.lr_hvp(w, v, Xa, weights, l2, P=P)
+        return self._sharded_reduce("lr_hvp", (Xa, weights), w, v, l2)
+
+    def infl_scores(self, v, Xa, P, Y, gamma: float) -> jax.Array:
+        if self.name == "reference":
+            from repro.core.influence import infl_scores_reference
+
+            return infl_scores_reference(v, Xa, P, Y, gamma)
+        if self.name == "pallas":
+            from repro.kernels import ops
+
+            return ops.infl_scores(v, Xa, P, Y, gamma)
+        return self._sharded_scores(v, Xa, P, Y, gamma)
+
+    def unsharded(self) -> "Backend":
+        """Variant for small-N side computations (e.g. the validation
+        gradient) where shard/psum overhead outweighs the win: reference for
+        pallas_sharded — equally correct, XLA-fused, and fast off-TPU too —
+        self otherwise. Keeps the which-backend decision inside Backend so
+        call sites never branch on the name."""
+        return Backend("reference") if self.name == "pallas_sharded" else self
+
+    def probs(self, w, Xa) -> jax.Array:
+        """softmax(Xa wᵀ) through the backend: row-sharded for pallas_sharded
+        (building the [N, C] P matrix unsharded is exactly the full-N
+        materialization the sharded backend exists to avoid)."""
+        if self.name != "pallas_sharded":
+            from repro.core import lr_head
+
+            return lr_head.probs(w, Xa)
+        from repro.kernels.ops import _pad_rows
+
+        _, dp, lead = self._data_axes()
+        if lead is None:
+            from repro.core import lr_head
+
+            return lr_head.probs(w, Xa)
+        n = Xa.shape[0]
+        Xp = _pad_rows(Xa, self._row_mult(dp, n))[0]
+        return _cached_sharded(self, "probs", 0.0)(w, Xp)[:n]
+
+    # ------------------------------------------------- pallas_sharded paths
+    def _data_axes(self):
+        from repro.dist.sharding import data_axes_info
+
+        return data_axes_info(self.mesh)
+
+    def _chunked(self, kernel, row_args, n_rows: int, reduce: bool = False):
+        """Run `kernel(*rows)` over row chunks of <= chunk_rows via lax.map
+        (bounds per-device VMEM/HBM working set). The chunk count is the
+        smallest divisor of n_rows giving chunks within the cap — _row_mult
+        pads rows so a balanced divisor always exists. `reduce=True` sums the
+        per-chunk results (partial-sum kernels) instead of restacking rows."""
+        ck = self.chunk_rows
+        if ck <= 0 or n_rows <= ck:
+            return kernel(*row_args)
+        k = -(-n_rows // ck)
+        while n_rows % k:
+            k += 1
+        cs = n_rows // k
+        parts = [a.reshape((k, cs) + a.shape[1:]) for a in row_args]
+        out = jax.lax.map(lambda t: kernel(*t), tuple(parts))
+        if reduce:
+            return jnp.sum(out, axis=0)
+        return out.reshape((n_rows,) + out.shape[2:])
+
+    def _row_mult(self, dp: int, n: int) -> int:
+        """Row-padding multiple: shards must be equal and, when the local
+        shard will be chunked, divisible into balanced chunks <= chunk_rows.
+        Balancing (ceil(shard / n_chunks), not chunk_rows itself) keeps the
+        padding bounded: naively padding to dp*chunk_rows nearly doubles the
+        scored rows for N just past a chunk boundary (e.g. N = chunk+1)."""
+        ck = self.chunk_rows
+        if ck <= 0 or n <= dp * ck:
+            return dp
+        shard = -(-n // dp)
+        k = -(-shard // ck)
+        return dp * (-(-shard // k))
+
+    def _build_sharded(self, op: str, static: float):
+        """Construct the shard_map'd computation for one op. Called only via
+        _cached_sharded, so the returned function object is stable and JAX's
+        trace/compile caches actually hit."""
+        from jax.sharding import PartitionSpec as Pspec
+
+        from repro.dist.compat import shard_map_compat
+        from repro.kernels import ops
+
+        ba, _, lead = self._data_axes()
+        rep2 = Pspec(None, None)
+        row2 = Pspec(lead, None)
+        row1 = Pspec(lead)
+
+        if op == "probs":
+            def local(ww, xs):
+                from repro.core import lr_head
+
+                return self._chunked(lambda x: lr_head.probs(ww, x), (xs,), xs.shape[0])
+
+            return shard_map_compat(local, self.mesh, (rep2, row2), row2)
+
+        if op == "infl_scores":
+            def local(vv, xs, ps, ys):
+                return self._chunked(
+                    lambda x, p, y: ops.infl_scores(vv, x, p, y, static),
+                    (xs, ps, ys), xs.shape[0],
+                )
+
+            return shard_map_compat(local, self.mesh, (rep2, row2, row2, row2), row2)
+
+        if op == "lr_grad":
+            def local(ww, vv, xs, ys, w8s):
+                kernel = lambda x, y, w8: ops.lr_grad(ww, x, y, w8, 0.0) * x.shape[0]
+                total = self._chunked(kernel, (xs, ys, w8s), xs.shape[0], reduce=True)
+                return jax.lax.psum(total, ba)
+
+            in_specs = (rep2, rep2, row2, row2, row1)
+        else:  # lr_hvp
+            def local(ww, vv, xs, w8s):
+                kernel = lambda x, w8: ops.lr_hvp(ww, vv, x, w8, 0.0) * x.shape[0]
+                total = self._chunked(kernel, (xs, w8s), xs.shape[0], reduce=True)
+                return jax.lax.psum(total, ba)
+
+            in_specs = (rep2, rep2, row2, row1)
+        return shard_map_compat(local, self.mesh, in_specs, rep2)
+
+    def _sharded_scores(self, v, Xa, P, Y, gamma: float) -> jax.Array:
+        from repro.kernels import ops
+        from repro.kernels.ops import _pad_rows
+
+        _, dp, lead = self._data_axes()
+        if lead is None:
+            return ops.infl_scores(v, Xa, P, Y, gamma)
+        n = Xa.shape[0]
+        # padded rows produce garbage scores locally and are sliced off here
+        mult = self._row_mult(dp, n)
+        Xp, Pp, Yp = (_pad_rows(a, mult)[0] for a in (Xa, P, Y))
+        return _cached_sharded(self, "infl_scores", float(gamma))(v, Xp, Pp, Yp)[:n]
+
+    def _sharded_reduce(self, op: str, row_args, w, v, l2: float) -> jax.Array:
+        """Shared grad/HVP path: per-shard partial sums + psum over data axes.
+
+        The local kernel runs with l2=0 and its 1/N_local normalization is
+        undone, so the psum'd total divided by the true N plus the l2 term
+        reproduces the reference batch objective exactly. Padded rows carry
+        weight 0 => zero contribution."""
+        from repro.kernels import ops
+        from repro.kernels.ops import _pad_rows
+
+        _, dp, lead = self._data_axes()
+        n = row_args[0].shape[0]
+        if lead is None:
+            if op == "lr_grad":
+                return ops.lr_grad(w, *row_args, l2)
+            return ops.lr_hvp(w, v, row_args[0], row_args[1], l2)
+        mult = self._row_mult(dp, n)
+        padded = [_pad_rows(a, mult)[0] for a in row_args]
+        vv = w if v is None else v  # placeholder arg keeps one code path
+        total = _cached_sharded(self, op, 0.0)(w, vv, *padded)
+        target = w if op == "lr_grad" else v
+        return total / n + l2 * target.astype(jnp.float32)
+
+
+def get_backend(spec: Union[Backend, str, None] = None, *, mesh=None,
+                chunk_rows: int = 0) -> Backend:
+    """Resolve a backend spec (Backend | name | None) to a Backend.
+
+    None -> reference. For pallas_sharded with no mesh given, the locally
+    visible devices become a trivial data-parallel mesh (host_mesh).
+
+    An explicit Backend passes through with its fields winning, except that
+    unset fields (chunk_rows == 0) are filled from the kwargs — so
+    run_chef(backend=get_backend('pallas_sharded', mesh=prod_mesh)) still
+    picks up ChefConfig.score_chunk instead of silently disabling chunking.
+    """
+    if isinstance(spec, Backend):
+        if chunk_rows and spec.chunk_rows == 0:
+            return Backend(spec.name, spec.mesh, chunk_rows)
+        return spec
+    name = spec or "reference"
+    if name == "pallas_sharded" and mesh is None:
+        from repro.launch.mesh import host_mesh
+
+        mesh = host_mesh()
+    if name != "pallas_sharded":
+        mesh = None  # keep reference/pallas Backends hashable & comparable
+    return Backend(name, mesh, chunk_rows)

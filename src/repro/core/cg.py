@@ -41,10 +41,17 @@ def cg_solve(hvp_fn: Callable, b: jax.Array, *, iters: int = 64, tol: float = 1e
 
 
 def inverse_hvp(w, grad_val, Xa, weights, l2, *, iters=64, tol=1e-6,
-                use_kernels: bool = False):
-    """v = H(w)⁻¹ grad_val for the LR head (precomputes P once)."""
-    from repro.core import lr_head
+                backend=None):
+    """v = H(w)⁻¹ grad_val for the LR head.
 
-    P = lr_head.probs(w, Xa)
-    hvp_fn = lambda v: lr_head.hvp(w, v, Xa, weights, l2, P=P, use_kernels=use_kernels)
+    P is precomputed once only for the reference backend; the Pallas kernels
+    recompute probs inside the fused HVP, and materializing a full [N, C] P
+    is exactly what the sharded backend's N >> device-memory regime forbids.
+    """
+    from repro.core import lr_head
+    from repro.core.backend import get_backend
+
+    backend = get_backend(backend)
+    P = lr_head.probs(w, Xa) if backend.name == "reference" else None
+    hvp_fn = lambda v: lr_head.hvp(w, v, Xa, weights, l2, P=P, backend=backend)
     return cg_solve(hvp_fn, grad_val, iters=iters, tol=tol)

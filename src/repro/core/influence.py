@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import lr_head
+from repro.core.backend import Backend, get_backend
 from repro.core.cg import inverse_hvp
 
 
@@ -31,34 +32,46 @@ class InflResult(NamedTuple):
 
 
 def influence_vector(w, Xa_val, Y_val, Xa, weights, l2, *, cg_iters=64,
-                     cg_tol=1e-6, use_kernels=False):
-    """v = -H⁻¹ ∇F_val (shared by INFL / INFL-D / INFL-Y / Increm-INFL)."""
+                     cg_tol=1e-6, backend: Optional[Backend] = None):
+    """v = -H⁻¹ ∇F_val (shared by INFL / INFL-D / INFL-Y / Increm-INFL).
+
+    The validation gradient is small-N and always cheap, so it stays on the
+    unsharded form of the backend; the CG loop's HVPs over the full training
+    set are where `pallas_sharded` pays off.
+    """
+    backend = get_backend(backend)
+    g_backend = backend.unsharded()
     g_val = lr_head.grad(
         w, Xa_val, Y_val, jnp.ones(Xa_val.shape[0], jnp.float32), 0.0,
-        use_kernels=use_kernels,
+        backend=g_backend,
     )
     v, stats = inverse_hvp(w, g_val, Xa, weights, l2, iters=cg_iters, tol=cg_tol,
-                           use_kernels=use_kernels)
+                           backend=backend)
     return -v, stats
 
 
-def infl_scores(v, Xa, P, Y, gamma: float, use_kernels: bool = False) -> jax.Array:
-    """Eq. 6 score matrix [N, C]. P = probs at the current w; Y = current
-    probabilistic labels."""
-    if use_kernels:
-        from repro.kernels import ops
-
-        return ops.infl_scores(v, Xa, P, Y, gamma)
+def infl_scores_reference(v, Xa, P, Y, gamma: float) -> jax.Array:
+    """Reference (jnp) form of the Eq. 6 score matrix."""
     U = (Xa @ v.T).astype(jnp.float32)  # [N, C]
     base = jnp.sum((Y + (1.0 - gamma) * (P - Y)) * U, axis=-1)  # [N]
     return base[:, None] - U  # subtract e_c · u = U[:, c]
 
 
+def infl_scores(v, Xa, P, Y, gamma: float,
+                backend: Optional[Backend] = None) -> jax.Array:
+    """Eq. 6 score matrix [N, C]. P = probs at the current w; Y = current
+    probabilistic labels."""
+    return get_backend(backend).infl_scores(v, Xa, P, Y, gamma)
+
+
 def infl(w, v, Xa, Y, gamma: float, P: Optional[jax.Array] = None,
-         use_kernels: bool = False) -> InflResult:
+         backend: Optional[Backend] = None) -> InflResult:
+    backend = get_backend(backend)
     if P is None:
-        P = lr_head.probs(w, Xa)
-    S = infl_scores(v, Xa, P, Y, gamma, use_kernels=use_kernels)
+        # through the backend: row-sharded under pallas_sharded, so the
+        # [N, C] P matrix is never materialized on one device
+        P = backend.probs(w, Xa)
+    S = infl_scores(v, Xa, P, Y, gamma, backend=backend)
     return InflResult(jnp.min(S, axis=-1), jnp.argmin(S, axis=-1), S)
 
 

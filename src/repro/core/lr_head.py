@@ -13,9 +13,11 @@ Pallas kernels possible:
 
 The batch objective follows paper Eq. (1): (1/N) Σ γ_z F(w,z) + (λ/2)||W||².
 
-All functions take a `use_kernels` flag; when True the fused Pallas
-implementations in repro.kernels.ops are used (identical semantics,
-validated against these reference forms in tests/test_kernels.py).
+The hot functions (`grad` / `hvp`) dispatch through a `Backend` object
+(repro.core.backend): `reference` is the jnp closed form below, `pallas` the
+fused kernels in repro.kernels.ops, `pallas_sharded` the shard_map-wrapped
+data-parallel kernels (identical semantics, validated against each other in
+tests/test_kernels.py and tests/test_backend.py).
 """
 from __future__ import annotations
 
@@ -24,6 +26,8 @@ from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.backend import Backend, get_backend
 
 
 def augment(X: jax.Array) -> jax.Array:
@@ -51,30 +55,33 @@ def loss(w, Xa, Y, weights, l2: float) -> jax.Array:
     return jnp.sum(weights * ce) / Xa.shape[0] + 0.5 * l2 * jnp.sum(w * w)
 
 
-def grad(w, Xa, Y, weights, l2: float, use_kernels: bool = False) -> jax.Array:
-    """(1/N) Σ γ_i (p_i - y_i) x̃_iᵀ + λ w — fused kernel hot spot."""
-    if use_kernels:
-        from repro.kernels import ops
-
-        return ops.lr_grad(w, Xa, Y, weights, l2)
+def grad_reference(w, Xa, Y, weights, l2: float) -> jax.Array:
+    """Reference (jnp) form of the batch gradient."""
     P = probs(w, Xa)
     R = (P - Y) * weights[:, None]
     return jnp.einsum("nc,nd->cd", R, Xa) / Xa.shape[0] + l2 * w
 
 
-def hvp(w, v, Xa, weights, l2: float, P: Optional[jax.Array] = None,
-        use_kernels: bool = False) -> jax.Array:
-    """H(w) v for the batch objective. P may be precomputed probs."""
-    if use_kernels:
-        from repro.kernels import ops
+def grad(w, Xa, Y, weights, l2: float, backend: Optional[Backend] = None) -> jax.Array:
+    """(1/N) Σ γ_i (p_i - y_i) x̃_iᵀ + λ w — fused kernel hot spot."""
+    return get_backend(backend).lr_grad(w, Xa, Y, weights, l2)
 
-        return ops.lr_hvp(w, v, Xa, weights, l2, P=P)
+
+def hvp_reference(w, v, Xa, weights, l2: float,
+                  P: Optional[jax.Array] = None) -> jax.Array:
+    """Reference (jnp) form of H(w) v. P may be precomputed probs."""
     if P is None:
         P = probs(w, Xa)
     U = (Xa @ v.T).astype(jnp.float32)  # [N, C]
     S = P * U - P * jnp.sum(P * U, axis=-1, keepdims=True)
     S = S * weights[:, None]
     return jnp.einsum("nc,nd->cd", S, Xa) / Xa.shape[0] + l2 * v
+
+
+def hvp(w, v, Xa, weights, l2: float, P: Optional[jax.Array] = None,
+        backend: Optional[Backend] = None) -> jax.Array:
+    """H(w) v for the batch objective. P may be precomputed probs."""
+    return get_backend(backend).lr_hvp(w, v, Xa, weights, l2, P=P)
 
 
 def per_sample_hessian_norm(w, Xa, P: Optional[jax.Array] = None,

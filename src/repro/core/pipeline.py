@@ -26,6 +26,7 @@ import numpy as np
 
 from repro.configs.chef_lr import ChefConfig
 from repro.core import annotation, baselines, increm, lr_head, metrics
+from repro.core.backend import Backend, get_backend
 from repro.core.deltagrad import DGConfig, build_correction_schedule, deltagrad_replay
 from repro.core.influence import influence_vector, infl, top_b
 
@@ -85,11 +86,14 @@ def run_chef(
     method: str = "infl",  # infl|infl_d|infl_y|active_one|active_two|o2u|tars|duti|loss|random
     selector: str = "increm",  # increm | increm_tight | full (increm* only for infl)
     constructor: str = "deltagrad",  # deltagrad | retrain
-    use_kernels: bool = False,
+    backend: "Backend | str | None" = None,  # default: cfg.backend
     verbose: bool = False,
 ) -> ChefResult:
     assert selector == "full" or method == "infl", "Increm-INFL prunes INFL scores"
     tight = selector == "increm_tight"
+    # selected ONCE per run; every hot-loop call below receives the object
+    backend = get_backend(backend if backend is not None else cfg.backend,
+                          chunk_rows=cfg.score_chunk)
     key = jax.random.key(cfg.seed + 1)
     Xa = lr_head.augment(ds.X)
     Xa_val = lr_head.augment(ds.X_val)
@@ -114,7 +118,7 @@ def run_chef(
         if method == "infl":
             v, _ = influence_vector(
                 w, Xa_val, ds.y_val, Xa, ds.y_weight, cfg.l2,
-                cg_iters=cfg.cg_iters, cg_tol=cfg.cg_tol, use_kernels=use_kernels,
+                cg_iters=cfg.cg_iters, cg_tol=cfg.cg_tol, backend=backend,
             )
             if selector.startswith("increm"):
                 priority, suggested, pruned = increm.increm_infl(
@@ -123,7 +127,7 @@ def run_chef(
                 )
                 n_cand = int(pruned.n_candidates)
             else:
-                r = infl(w, v, Xa, ds.y_prob, cfg.gamma, use_kernels=use_kernels)
+                r = infl(w, v, Xa, ds.y_prob, cfg.gamma, backend=backend)
                 priority, suggested = r.priority, r.suggested
         else:
             sel = _run_baseline(method, w, Xa, ds, cfg, k_sel, Xa_val)

@@ -1,0 +1,53 @@
+"""Elastic restore: bring a checkpoint up on a *different* mesh.
+
+After an elastic resize (preemption, scale-up, straggler eviction) the
+replacement job's mesh rarely matches the one that saved the checkpoint.
+Checkpoints store plain host arrays plus global shapes (repro/ckpt), so
+restore is mesh-agnostic: we compute target NamedShardings for the new mesh
+and `jax.device_put` every leaf onto them while reassembling the pytree.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist.sharding import data_axes_info
+
+
+def target_shardings(tree_like: Any, mesh, shardings: Any = None) -> Any:
+    """A pytree of NamedSharding on `mesh` matching `tree_like`.
+
+    Explicit `shardings` (full pytree of NamedSharding) wins; otherwise the
+    default policy shards the leading dim over the mesh's data axes when
+    divisible and replicates everything else — correct for TrainState-shaped
+    trees on data-parallel meshes and always safe (resharding happens lazily
+    on first use under jit anyway).
+    """
+    if shardings is not None:
+        return shardings
+    _, dp, lead = data_axes_info(mesh)
+
+    def assign(leaf):
+        shape = np.shape(leaf)
+        if lead is None or len(shape) == 0 or shape[0] == 0 or shape[0] % dp:
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, P(lead, *([None] * (len(shape) - 1))))
+
+    return jax.tree.map(assign, tree_like)
+
+
+def elastic_restore(ckpt_dir, tree_like: Any, mesh, *, step: Optional[int] = None,
+                    shardings: Any = None) -> tuple[Any, int]:
+    """Restore the latest (or `step`) checkpoint onto `mesh`.
+
+    Returns (tree, step) with every leaf device_put onto its target sharding.
+    """
+    from repro.ckpt.checkpoint import restore_checkpoint
+
+    return restore_checkpoint(
+        ckpt_dir, tree_like, step=step,
+        shardings=target_shardings(tree_like, mesh, shardings),
+    )

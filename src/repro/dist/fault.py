@@ -1,0 +1,116 @@
+"""Fault tolerance for the training driver: liveness, stragglers, retries.
+
+Single-host building blocks with multi-host-shaped interfaces: the heartbeat
+file is what an external supervisor (or the other hosts) polls to decide a
+worker is dead; the straggler monitor is the per-host half of the detection
+that, at scale, feeds eviction; retry_step absorbs transient device errors
+before escalating to the restart-from-checkpoint path.
+"""
+from __future__ import annotations
+
+import json
+import os
+import statistics
+import time
+from pathlib import Path
+from typing import Callable, Optional
+
+
+class Heartbeat:
+    """Liveness beacon: atomically rewrites a small JSON file each step."""
+
+    def __init__(self, path, host_id: int = 0):
+        self.path = Path(path)
+        self.host_id = host_id
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+
+    def beat(self, step: int) -> None:
+        tmp = self.path.with_name(self.path.name + f".tmp{os.getpid()}")
+        tmp.write_text(json.dumps(
+            {"step": int(step), "time": time.time(), "host": self.host_id}
+        ))
+        tmp.replace(self.path)  # atomic on POSIX
+
+    def read(self) -> Optional[dict]:
+        try:
+            rec = json.loads(self.path.read_text())
+        except (FileNotFoundError, json.JSONDecodeError):
+            return None
+        # foreign writers / older schemas degrade to "no beat" (stale), not a
+        # crash in the supervisor's liveness loop
+        if not isinstance(rec, dict) or not isinstance(rec.get("time"), (int, float)):
+            return None
+        return rec
+
+    def age(self) -> float:
+        """Seconds since the last beat (inf when none was ever written)."""
+        rec = self.read()
+        return float("inf") if rec is None else time.time() - rec["time"]
+
+    def is_stale(self, timeout: float) -> bool:
+        return self.age() > timeout
+
+
+class StragglerMonitor:
+    """Flags steps that take `threshold`x the running median step time.
+
+    The median is over a sliding window so a drifting baseline (e.g. longer
+    steps after a batch-size ramp) does not poison detection. The first
+    `warmup` steps are never flagged (compilation).
+    """
+
+    def __init__(self, threshold: float = 3.0, warmup: int = 5, window: int = 50):
+        self.threshold = threshold
+        self.warmup = warmup
+        self.window = window
+        self._times: list[float] = []
+        self.flagged: list[tuple[int, float]] = []
+
+    def record(self, step: int, duration_s: float) -> bool:
+        """Returns True when `step` is flagged as a straggler."""
+        is_straggler = (
+            len(self._times) >= self.warmup
+            and duration_s > self.threshold * statistics.median(self._times)
+        )
+        if is_straggler:
+            self.flagged.append((step, duration_s))
+        # flagged steps enter the baseline too: the window median shrugs off
+        # isolated outliers, while a *permanent* step-time increase (batch
+        # ramp) shifts the median within ~window/2 steps so flagging stops
+        # instead of locking in forever
+        self._times.append(duration_s)
+        if len(self._times) > self.window:
+            self._times.pop(0)
+        return is_straggler
+
+    @property
+    def median(self) -> float:
+        return statistics.median(self._times) if self._times else 0.0
+
+
+def retry_step(fn: Callable, retries: int = 2, backoff_s: float = 0.0,
+               on_retry: Optional[Callable] = None) -> Callable:
+    """Wrap a step function with bounded retries on transient failures.
+
+    SystemExit / KeyboardInterrupt (deliberate shutdowns, incl. the driver's
+    simulated --kill_at failure) pass through untouched; any other exception
+    is retried up to `retries` times, then re-raised for the checkpoint
+    restart path to handle.
+    """
+
+    def wrapped(*args, **kwargs):
+        for attempt in range(retries + 1):
+            try:
+                return fn(*args, **kwargs)
+            except (SystemExit, KeyboardInterrupt):
+                raise
+            except Exception:  # noqa: BLE001 — transient device/runtime errors
+                if attempt == retries:
+                    raise
+                if on_retry is not None:
+                    on_retry(attempt)
+                if backoff_s:
+                    time.sleep(backoff_s * (2**attempt))
+        raise AssertionError("unreachable")
+
+    return wrapped

@@ -1,0 +1,107 @@
+"""The logical-axis sharding rulebook.
+
+Every parameter / activation dimension in the model stack is tagged with a
+*logical* axis name (see the table in ``repro/models/layers.py``); this module
+owns the single mapping from logical names to physical mesh axes:
+
+  "layers"                        -> never sharded (scan dimension)
+  "vocab" "mlp" "lru" "ssm_heads" -> "model"
+  "embed"                         -> "data"  (FSDP / ZeRO-3 parameter shard)
+  "heads" "kv"                    -> "model" iff the dim is divisible
+  "experts"                       -> "model" (MoE expert parallelism; the MoE
+                                     layer passes this name only under "ep")
+  "moe_mlp"                       -> "model" (per-expert d_ff under "tp")
+  anything else / unknown         -> replicated
+
+Safety rules applied on top of the table, in order:
+  1. a mesh axis absent from the mesh resolves to replicated (small meshes);
+  2. a dimension not divisible by the mesh axis size resolves to replicated
+     instead of failing (e.g. StarCoder2's 24 heads on a 16-wide model axis);
+  3. a mesh axis is consumed at most once per spec — the first logical axis
+     that claims it wins, later claims replicate.
+
+Works against both concrete ``Mesh`` and ``AbstractMesh`` (only ``.shape`` is
+consulted), so production layouts are testable without the hardware.
+"""
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+from jax.sharding import PartitionSpec as P
+
+# logical axis name -> preferred mesh axis (None = always replicated)
+_RULES: dict[str, str | None] = {
+    "layers": None,
+    "vocab": "model",
+    "embed": "data",
+    "heads": "model",
+    "kv": "model",
+    "qkv": None,
+    "mlp": "model",
+    "experts": "model",
+    "moe_mlp": "model",
+    "lru": "model",
+    "ssm_heads": "model",
+    "ssm_state": None,
+    "conv": None,
+}
+
+# data-parallel mesh axes, outermost first ('pod' carries only DP; see
+# repro/launch/mesh.py)
+_DATA_AXES = ("pod", "data")
+
+
+def batch_axes(mesh) -> tuple:
+    """The mesh axes a [B, ...] batch dimension is sharded over."""
+    return tuple(a for a in _DATA_AXES if a in mesh.shape)
+
+
+def data_axes_info(mesh) -> tuple:
+    """(batch_axes, total data-parallel degree, PartitionSpec leading entry).
+
+    The third element is what goes into `P(lead, ...)` for a row-sharded
+    leading dim: the axis tuple when there are several data axes, the bare
+    name for one, None when the mesh has no data axis at all."""
+    import math
+
+    ba = batch_axes(mesh)
+    dp = math.prod(mesh.shape[a] for a in ba) if ba else 1
+    lead = (ba if len(ba) > 1 else ba[0]) if ba else None
+    return ba, dp, lead
+
+
+def make_resolver(mesh, *, fsdp: bool = True) -> Callable:
+    """Returns resolve(axes, shape) -> PartitionSpec for `mesh`.
+
+    `fsdp=False` keeps "embed" replicated (pure tensor parallelism — used by
+    serving layouts where parameter gathers on the critical path hurt)."""
+    sizes = dict(mesh.shape)
+
+    def resolve(axes: Sequence[str | None], shape: Sequence[int]) -> P:
+        assert len(axes) == len(shape), (axes, shape)
+        used: set = set()
+        parts = []
+        for name, dim in zip(axes, shape):
+            mesh_axis = _RULES.get(name) if name is not None else None
+            if name == "embed" and not fsdp:
+                mesh_axis = None
+            size = sizes.get(mesh_axis, 0)
+            if (
+                mesh_axis is None
+                or size == 0          # axis not in this mesh
+                or mesh_axis in used  # already consumed by an earlier dim
+                or dim % size != 0    # divisibility fallback -> replicate
+                or dim == 0
+            ):
+                parts.append(None)
+            else:
+                used.add(mesh_axis)
+                parts.append(mesh_axis)
+        return P(*parts)
+
+    return resolve
+
+
+def resolve_axes(mesh, axes: Sequence, shape: Sequence[int], *, fsdp: bool = True) -> P:
+    """One-shot form of `make_resolver(mesh)(axes, shape)`."""
+    return make_resolver(mesh, fsdp=fsdp)(axes, shape)

@@ -39,11 +39,21 @@ def _pad_dim(x, axis, mult):
     return jnp.pad(x, widths)
 
 
-def _block_n(n: int) -> int:
-    for b in (512, 256, 128, 64, 32, 16, 8, 4, 2, 1):
+def _block_n_padded(n: int) -> int:
+    """Row block when the caller pads rows UP to the block: prefer a LARGE
+    block that divides n exactly (no padding), else a full 128-row block
+    padding a partial tail tile — never degrade to tiny blocks on awkward N
+    (the divisor scan stops at 64: for big N, one padded tail tile beats a
+    thousand 8-row grid steps)."""
+    for b in (512, 256, 128, 64):
         if n % b == 0:
             return b
-    return 1
+    if n >= 128:
+        return 128
+    b = 8
+    while b < n:
+        b *= 2
+    return b
 
 
 @functools.partial(jax.jit, static_argnames=("gamma",))
@@ -54,10 +64,13 @@ def infl_scores(v, Xa, P, Y, gamma: float):
     Xp = _pad_dim(Xa, 1, lane)
     Pp = _pad_dim(P, 1, lane)
     Yp = _pad_dim(Y, 1, lane)
-    Xp, n = _pad_rows(Xp, 1)
-    bn = _block_n(Xp.shape[0])
+    # pick the block first, then pad rows up to it — padding to a multiple
+    # of 1 and deriving the block from the raw row count forced block_n=1
+    # (one grid step per row) on odd N
+    bn = _block_n_padded(Xp.shape[0])
+    Xp, n = _pad_rows(Xp, bn)
     S = infl_scores_pallas(
-        vp, Xp, _pad_rows(Pp, 1)[0], _pad_rows(Yp, 1)[0], gamma,
+        vp, Xp, _pad_rows(Pp, bn)[0], _pad_rows(Yp, bn)[0], gamma,
         block_n=bn, c_actual=C, interpret=_interpret(),
     )
     return S[:n, :C]
@@ -71,12 +84,12 @@ def lr_grad(w, Xa, Y, weights, l2: float):
     wp = _pad_dim(_pad_dim(w, 0, lane), 1, lane)
     Xp = _pad_dim(Xa, 1, lane)
     Yp = _pad_dim(Y, 1, lane)
-    bn = _block_n(N)
+    bn = _block_n_padded(N)
     # padded rows get weight 0 => no contribution
     Xp, _ = _pad_rows(Xp, bn)
     Yp, _ = _pad_rows(Yp, bn)
     w8p, _ = _pad_rows(weights, bn)
-    g = lr_grad_pallas(wp, Xp, Yp, w8p, 0.0, block_n=_block_n(Xp.shape[0]),
+    g = lr_grad_pallas(wp, Xp, Yp, w8p, 0.0, block_n=bn,
                        c_actual=C, interpret=_interpret())
     g = g * (Xp.shape[0] / N)  # kernel divided by padded N
     return g[:C, : Xa.shape[1]] + l2 * w.astype(jnp.float32)
@@ -91,10 +104,10 @@ def lr_hvp(w, v, Xa, weights, l2: float, P=None):
     wp = _pad_dim(_pad_dim(w, 0, lane), 1, lane)
     vp = _pad_dim(_pad_dim(v, 0, lane), 1, lane)
     Xp = _pad_dim(Xa, 1, lane)
-    bn = _block_n(N)
+    bn = _block_n_padded(N)
     Xp, _ = _pad_rows(Xp, bn)
     w8p, _ = _pad_rows(weights, bn)
-    h = lr_hvp_pallas(wp, vp, Xp, w8p, 0.0, block_n=_block_n(Xp.shape[0]),
+    h = lr_hvp_pallas(wp, vp, Xp, w8p, 0.0, block_n=bn,
                       c_actual=C, interpret=_interpret())
     h = h * (Xp.shape[0] / N)
     return h[:C, : Xa.shape[1]] + l2 * v.astype(jnp.float32)

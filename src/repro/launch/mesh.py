@@ -12,13 +12,13 @@ from __future__ import annotations
 
 import jax
 
+from repro.dist.compat import make_compat_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_compat_mesh(shape, axes)
 
 
 def make_mesh_for(n_devices: int, model_parallel: int = 16, pods: int = 1):
@@ -27,16 +27,8 @@ def make_mesh_for(n_devices: int, model_parallel: int = 16, pods: int = 1):
     assert n_devices % (model_parallel * pods) == 0, (n_devices, model_parallel, pods)
     data = n_devices // (model_parallel * pods)
     if pods > 1:
-        return jax.make_mesh(
-            (pods, data, model_parallel),
-            ("pod", "data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 3,
-        )
-    return jax.make_mesh(
-        (data, model_parallel),
-        ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+        return make_compat_mesh((pods, data, model_parallel), ("pod", "data", "model"))
+    return make_compat_mesh((data, model_parallel), ("data", "model"))
 
 
 def host_mesh(model_parallel: int = 1):

@@ -1,0 +1,111 @@
+"""Backend dispatch contract: the three backends are interchangeable.
+
+Op-level parity (grad / HVP / scores, awkward N, chunked sharding) plus one
+full `run_chef` round under each backend on a single-device mesh producing
+identical selections, suggested labels, and final head weights.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.chef_lr import ChefConfig
+from repro.core import run_chef
+from repro.core.backend import BACKENDS, Backend, get_backend
+from repro.core import lr_head
+from repro.data import make_dataset
+
+NONREF = [b for b in BACKENDS if b != "reference"]
+
+
+@pytest.fixture(scope="module")
+def ds():
+    # deliberately odd N: exercises row padding in every non-reference path
+    return make_dataset(jax.random.key(3), n_train=515, n_val=64, n_test=64,
+                        feature_dim=32)
+
+
+def _op_data(key, N=301, D=51, C=3):
+    k = jax.random.split(key, 5)
+    Xa = jax.random.normal(k[0], (N, D))
+    Y = jax.nn.softmax(jax.random.normal(k[1], (N, C)))
+    w = jax.random.normal(k[2], (C, D)) * 0.1
+    v = jax.random.normal(k[3], (C, D)) * 0.1
+    w8 = jax.random.uniform(k[4], (N,))
+    return Xa, Y, w, v, w8
+
+
+def test_get_backend_resolution():
+    assert get_backend(None).name == "reference"
+    assert get_backend("pallas").name == "pallas"
+    bk = get_backend("pallas_sharded", chunk_rows=64)
+    assert bk.mesh is not None and bk.chunk_rows == 64
+    assert get_backend(bk) is bk  # pass-through, no re-resolution
+    with pytest.raises(ValueError):
+        Backend("metal")
+    with pytest.raises(ValueError):
+        Backend("pallas_sharded")  # mesh required
+
+
+@pytest.mark.parametrize("spec", NONREF + ["pallas_sharded_chunked",
+                                           "pallas_sharded_chunk_boundary"])
+def test_op_parity(spec, rng):
+    # chunk_boundary: N one past the chunk cap — the regime where naive
+    # padding to a full extra chunk would double the scored rows
+    chunk = {"pallas_sharded_chunked": 64, "pallas_sharded_chunk_boundary": 300}.get(spec, 0)
+    name = "pallas_sharded" if chunk else spec
+    bk = get_backend(name, chunk_rows=chunk)
+    ref = get_backend("reference")
+    Xa, Y, w, v, w8 = _op_data(rng)
+    P = lr_head.probs(w, Xa)
+    np.testing.assert_allclose(
+        np.asarray(bk.lr_grad(w, Xa, Y, w8, 0.05)),
+        np.asarray(ref.lr_grad(w, Xa, Y, w8, 0.05)), atol=1e-5, rtol=1e-4)
+    np.testing.assert_allclose(
+        np.asarray(bk.lr_hvp(w, v, Xa, w8, 0.05)),
+        np.asarray(ref.lr_hvp(w, v, Xa, w8, 0.05)), atol=1e-5, rtol=1e-4)
+    np.testing.assert_allclose(
+        np.asarray(bk.infl_scores(v, Xa, P, Y, 0.8)),
+        np.asarray(ref.infl_scores(v, Xa, P, Y, 0.8)), atol=1e-4, rtol=1e-4)
+
+
+def test_run_chef_backend_parity(ds):
+    """One full round (select -> annotate -> retrain) per backend: identical
+    cleaned sets, suggested labels, and final weights within tolerance."""
+    results = {}
+    for bk in BACKENDS:
+        cfg = ChefConfig(budget=10, round_size=10, n_epochs=8, batch_size=128,
+                         lr=0.05, l2=0.05, backend=bk)
+        results[bk] = run_chef(ds, cfg, method="infl", selector="full",
+                               constructor="retrain")
+    ref = results["reference"]
+    for bk in NONREF:
+        r = results[bk]
+        assert np.array_equal(np.asarray(r.dataset.cleaned),
+                              np.asarray(ref.dataset.cleaned)), bk
+        np.testing.assert_array_equal(np.asarray(jnp.argmax(r.dataset.y_prob, -1)),
+                                      np.asarray(jnp.argmax(ref.dataset.y_prob, -1)))
+        np.testing.assert_allclose(np.asarray(r.w), np.asarray(ref.w),
+                                   atol=1e-4, rtol=1e-3)
+        assert abs(r.f1_test_final - ref.f1_test_final) < 1e-3, bk
+
+
+def test_run_chef_backend_override_beats_config(ds, monkeypatch):
+    """The backend= argument overrides ChefConfig.backend (explicit wins)."""
+    import repro.core.pipeline as pipeline_mod
+
+    resolved = []
+    real = pipeline_mod.get_backend
+
+    def spy(spec, **kw):
+        bk = real(spec, **kw)
+        resolved.append(bk.name)
+        return bk
+
+    monkeypatch.setattr(pipeline_mod, "get_backend", spy)
+    cfg = ChefConfig(budget=10, round_size=10, n_epochs=5, batch_size=128,
+                     lr=0.05, l2=0.05, backend="reference")
+    r = run_chef(ds, cfg, method="infl", selector="full", constructor="retrain",
+                 backend="pallas")
+    assert resolved == ["pallas"]  # not cfg's "reference"
+    assert np.isfinite(r.f1_test_final)

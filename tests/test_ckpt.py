@@ -10,6 +10,7 @@ import pytest
 
 from repro.ckpt import CheckpointManager, restore_checkpoint, save_checkpoint
 from repro.ckpt.checkpoint import latest_step
+from repro.dist.compat import make_compat_mesh
 from repro.dist.elastic import elastic_restore
 
 
@@ -56,8 +57,7 @@ def test_elastic_restore_onto_new_mesh(tmp_path, tree):
     """Restore onto a different (trivial) mesh with explicit shardings —
     the resharding path used after an elastic resize."""
     save_checkpoint(tmp_path, 7, tree)
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_compat_mesh((1,), ("data",))
     out, step = elastic_restore(tmp_path, tree, mesh)
     assert step == 7
     leaf = jax.tree.leaves(out)[0]

@@ -5,6 +5,7 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
+from repro.dist.compat import abstract_mesh, make_compat_mesh
 from repro.dist.sharding import batch_axes, make_resolver
 from repro.launch.hlo_cost import analyze, parse_module
 from repro.launch.hlo_stats import model_flops, roofline_terms
@@ -13,8 +14,7 @@ from repro.launch.hlo_stats import model_flops, roofline_terms
 @pytest.fixture(scope="module")
 def mesh():
     # single-device "production-shaped" mesh: axis sizes 1 so no resharding
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_compat_mesh((1, 1), ("data", "model"))
 
 
 def test_resolver_basic(mesh):
@@ -26,7 +26,7 @@ def test_resolver_basic(mesh):
 def test_resolver_divisibility_fallback():
     # AbstractMesh: resolver logic against the production 16-wide model axis
     # without needing 256 real devices
-    mesh = jax.sharding.AbstractMesh((1, 16), ("data", "model"))
+    mesh = abstract_mesh((1, 16), ("data", "model"))
     resolve = make_resolver(mesh)
     # 24 heads % 16 != 0 -> replicate instead of failing (StarCoder2 case)
     spec = resolve(("layers", "embed", "heads", "qkv"), (4, 128, 24, 128))
