@@ -6,6 +6,8 @@ Prints ``name,us_per_call,derived`` CSV lines.
   exp2  Table 2      — Increm-INFL vs Full selection time + exactness
   exp3  Figure 2     — DeltaGrad-L vs Retrain constructor time
   exp4  Table 14     — vary per-round batch b
+  clean (service)    — pipelined vs blocking scheduler wall-clock per backend
+                       (writes the BENCH_cleaning.json artifact)
   kern  (framework)  — kernel microbench
   roof  (assignment) — roofline table from the dry-run artifacts
 
@@ -21,7 +23,8 @@ import traceback
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default="", help="comma list: exp1,exp2,exp3,exp4,kern,roof")
+    ap.add_argument("--only", default="",
+                    help="comma list: exp1,exp2,exp3,exp4,clean,kern,roof")
     ap.add_argument("--backend", default="all",
                     help="kern suite backends: 'all' or comma list of "
                          "reference,pallas,pallas_sharded")
@@ -29,6 +32,7 @@ def main() -> None:
     want = set(args.only.split(",")) if args.only else None
 
     from benchmarks import (
+        bench_cleaning,
         bench_kernels,
         exp1_quality,
         exp2_increm,
@@ -42,6 +46,7 @@ def main() -> None:
         ("exp3", exp3_deltagrad.run),
         ("exp4", exp4_vary_b.run),
         ("exp1", exp1_quality.run),
+        ("clean", bench_cleaning.run),
         ("kern", lambda: bench_kernels.run(backend=args.backend)),
         ("roof", roofline_table.run),
     ]

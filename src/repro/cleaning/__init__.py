@@ -1,0 +1,73 @@
+"""repro.cleaning — the resumable, pipelined label-cleaning service layer.
+
+Decomposes the monolithic `run_chef` loop into a service (see README.md):
+
+  session    — `CleaningSession`: round counter, budget ledger, label state,
+               DeltaGrad trajectory, Increm-INFL provenance, RNG key;
+               checkpoints via repro.ckpt and resumes bit-for-bit.
+  phases     — `Selector` / `Annotator` / `Constructor` protocols wrapping
+               INFL + Increm-INFL, the baselines, the annotation strategies,
+               and DeltaGrad-L / Retrain.
+  scheduler  — `RoundScheduler`: blocking or pipelined (speculate on INFL's
+               suggested labels inside the annotation-latency window,
+               validate against the votes), Heartbeat/retry_step fault
+               wiring, first-class early-termination policies.
+  service    — `CleaningService`: submit/poll/cancel N sessions over one
+               shared `Backend`.
+
+`repro.core.pipeline.run_chef` is a thin compatibility wrapper over a
+single-session blocking scheduler.
+"""
+from repro.cleaning.phases import (
+    AnnotationTask,
+    Annotator,
+    BaselineSelector,
+    Constructor,
+    ConstructorResult,
+    DeltaGradConstructor,
+    InflSelector,
+    RetrainConstructor,
+    RoundSelection,
+    Selector,
+    SimulatedAnnotator,
+    make_constructor,
+    make_selector,
+)
+from repro.cleaning.scheduler import (
+    MarginalF1PerLabel,
+    Patience,
+    RoundScheduler,
+    TargetF1,
+    TerminationPolicy,
+    make_scheduler,
+    make_termination,
+)
+from repro.cleaning.service import CleaningService, JobInfo
+from repro.cleaning.session import BudgetLedger, CleaningSession
+
+__all__ = [
+    "AnnotationTask",
+    "Annotator",
+    "BaselineSelector",
+    "BudgetLedger",
+    "CleaningService",
+    "CleaningSession",
+    "Constructor",
+    "ConstructorResult",
+    "DeltaGradConstructor",
+    "InflSelector",
+    "JobInfo",
+    "MarginalF1PerLabel",
+    "Patience",
+    "RetrainConstructor",
+    "RoundScheduler",
+    "RoundSelection",
+    "Selector",
+    "SimulatedAnnotator",
+    "TargetF1",
+    "TerminationPolicy",
+    "make_constructor",
+    "make_scheduler",
+    "make_selector",
+    "make_termination",
+]

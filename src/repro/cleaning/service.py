@@ -1,0 +1,212 @@
+"""`CleaningService` — a multi-session cleaning job queue (the serving story's
+entry point for label cleaning).
+
+Long-lived annotation campaigns are many concurrent sessions, not one loop:
+N datasets/teams share one accelerator allocation and submit cleaning jobs
+that run to completion, report progress, and can be cancelled. The service
+owns ONE `Backend` (resolved once — the compiled kernel / shard_map caches in
+`repro.core.backend` are keyed on it, so every session reuses the same traces)
+and a pool of worker threads that drain a FIFO queue of sessions.
+
+API shape is deliberately job-queue-like:
+
+    svc = CleaningService(backend="pallas", workers=2)
+    job = svc.submit(ds, cfg, method="infl", selector="increm")
+    svc.poll(job)            # -> JobInfo(state, rounds_done, f1_val, ...)
+    svc.result(job)          # block until done -> ChefResult
+    svc.cancel(job)          # pending: dropped; running: stops at the next
+                             # round boundary (sessions stay resumable)
+    svc.shutdown()
+
+Cancellation is cooperative at round granularity — exactly the granularity at
+which sessions checkpoint, so a cancelled job with a `ckpt_dir` can be
+resubmitted later via `CleaningSession.restore` and loses nothing.
+"""
+from __future__ import annotations
+
+import itertools
+import queue
+import threading
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.cleaning.scheduler import RoundScheduler, make_scheduler
+from repro.cleaning.session import CleaningSession
+from repro.core.backend import Backend, get_backend
+
+PENDING, RUNNING, DONE, FAILED, CANCELLED = (
+    "pending", "running", "done", "failed", "cancelled")
+
+
+@dataclass
+class JobInfo:
+    """Snapshot returned by `poll` — progress without touching the session."""
+
+    job_id: str
+    state: str
+    rounds_done: int = 0
+    n_cleaned: int = 0
+    f1_val: Optional[float] = None
+    error: Optional[str] = None
+
+
+@dataclass
+class _Job:
+    job_id: str
+    ds: object
+    cfg: object
+    opts: dict
+    state: str = PENDING
+    rounds_done: int = 0
+    n_cleaned: int = 0
+    f1_val: Optional[float] = None
+    error: Optional[str] = None
+    result: object = None
+    cancel_event: threading.Event = field(default_factory=threading.Event)
+    done_event: threading.Event = field(default_factory=threading.Event)
+
+
+class CleaningService:
+    """Submit / poll / cancel label-cleaning sessions over one shared
+    Backend. `workers` bounds how many sessions run concurrently (the rest
+    queue); each worker drives its session one round at a time so progress
+    and cancellation have round granularity."""
+
+    def __init__(self, backend: "Backend | str | None" = None, *,
+                 workers: int = 1, chunk_rows: int = 0):
+        self.backend = get_backend(backend, chunk_rows=chunk_rows)
+        self._queue: "queue.Queue[Optional[_Job]]" = queue.Queue()
+        self._jobs: dict[str, _Job] = {}
+        self._lock = threading.Lock()
+        self._ids = itertools.count()
+        self._workers = [
+            threading.Thread(target=self._worker, name=f"cleaning-worker-{i}",
+                             daemon=True)
+            for i in range(max(workers, 1))
+        ]
+        for t in self._workers:
+            t.start()
+
+    # ------------------------------------------------------------------- API
+    def submit(self, ds, cfg, *, method: str = "infl", selector: str = "full",
+               constructor: str = "retrain", pipelined: bool = False,
+               ckpt_dir=None, job_id: Optional[str] = None) -> str:
+        with self._lock:
+            if job_id is None:
+                job_id = f"job-{next(self._ids):04d}"
+            if job_id in self._jobs:
+                raise ValueError(f"duplicate job id {job_id!r}")
+            job = _Job(job_id, ds, cfg, dict(
+                method=method, selector=selector, constructor=constructor,
+                pipelined=pipelined, ckpt_dir=ckpt_dir))
+            self._jobs[job_id] = job
+        self._queue.put(job)
+        return job_id
+
+    def poll(self, job_id: str) -> JobInfo:
+        job = self._get(job_id)
+        with self._lock:
+            return JobInfo(job.job_id, job.state, job.rounds_done,
+                           job.n_cleaned, job.f1_val, job.error)
+
+    def result(self, job_id: str, timeout: Optional[float] = None):
+        """Block until the job leaves the queue/worker, then return its
+        `ChefResult` (raises on failed/cancelled jobs)."""
+        job = self._get(job_id)
+        if not job.done_event.wait(timeout):
+            raise TimeoutError(f"{job_id} still {job.state} after {timeout}s")
+        if job.state == DONE:
+            return job.result
+        raise RuntimeError(f"{job_id} finished as {job.state}: {job.error}")
+
+    def cancel(self, job_id: str) -> bool:
+        """True if the job will not produce a result (was pending or will
+        stop at the next round boundary); False if it already finished."""
+        job = self._get(job_id)
+        with self._lock:
+            if job.state in (DONE, FAILED, CANCELLED):
+                return False
+            job.cancel_event.set()
+            if job.state == PENDING:
+                # the worker will see the event and skip it
+                job.state = CANCELLED
+                job.done_event.set()
+        return True
+
+    def jobs(self) -> list:
+        with self._lock:
+            ids = list(self._jobs)
+        return [self.poll(j) for j in ids]
+
+    def join(self) -> None:
+        """Wait for every submitted job to finish (testing convenience)."""
+        for job in list(self._jobs.values()):
+            job.done_event.wait()
+
+    def shutdown(self, wait: bool = True) -> None:
+        for _ in self._workers:
+            self._queue.put(None)
+        if wait:
+            for t in self._workers:
+                t.join()
+
+    # ---------------------------------------------------------------- worker
+    def _get(self, job_id: str) -> _Job:
+        try:
+            return self._jobs[job_id]
+        except KeyError:
+            raise KeyError(f"unknown job {job_id!r}") from None
+
+    def _worker(self) -> None:
+        while True:
+            job = self._queue.get()
+            if job is None:
+                return
+            try:
+                self._run_job(job)
+            except Exception as e:  # noqa: BLE001 — job isolation boundary
+                with self._lock:
+                    job.state = FAILED
+                    job.error = f"{type(e).__name__}: {e}"
+            finally:
+                job.done_event.set()
+
+    def _run_job(self, job: _Job) -> None:
+        opts = job.opts
+        with self._lock:
+            # cancelled while pending: cancel() already set the final state
+            # under the lock; don't resurrect it to RUNNING
+            if job.cancel_event.is_set():
+                return
+            job.state = RUNNING
+        session = CleaningSession.initialize(
+            job.ds, job.cfg, backend=self.backend,
+            need_trajectory=(opts["constructor"] == "deltagrad"),
+            need_provenance=opts["selector"].startswith("increm"),
+        )
+        sched: RoundScheduler = make_scheduler(
+            session, method=opts["method"], selector=opts["selector"],
+            constructor=opts["constructor"], pipelined=opts["pipelined"],
+            ckpt_dir=opts["ckpt_dir"],
+        )
+        while not sched.exhausted:
+            if job.cancel_event.is_set():
+                with self._lock:
+                    job.state = CANCELLED
+                return
+            record = sched.step()
+            with self._lock:
+                job.rounds_done = session.round
+                job.n_cleaned = record.n_cleaned_total
+                job.f1_val = record.f1_val
+        if sched.ckpt is not None:
+            sched.ckpt.wait()
+        result = sched.result()
+        with self._lock:
+            # a cancel() that returned True during the final round must win:
+            # it promised the caller no result would be produced
+            if job.cancel_event.is_set():
+                job.state = CANCELLED
+                return
+            job.result = result
+            job.state = DONE

@@ -1,0 +1,237 @@
+"""`CleaningSession` — the resumable state object of one CHEF cleaning run.
+
+The paper's loop (select -> annotate -> update) is stateful in exactly six
+things; everything else is derived. A session owns them explicitly:
+
+  * the round counter and the budget ledger (labels spent vs. B),
+  * the dataset label state (y_prob / y_weight / cleaned — the only mutable
+    part of a `ChefDataset`),
+  * the current head `w`,
+  * the DeltaGrad trajectory handle (cached (w_t, g_t) provenance),
+  * the Increm-INFL provenance (w0, p0, hnorm),
+  * the base RNG key (per-round keys are `fold_in(key, round)`, never
+    sequentially split, so round k's randomness is a pure function of the
+    session — resume replays it bit-for-bit).
+
+Checkpointing goes through `repro.ckpt` (atomic COMMIT-marker dirs, async
+background writes via `CheckpointManager`): `state_tree()` flattens the
+mutable state into a fixed-structure array pytree, `restore()` rebuilds a
+session from the latest committed round plus the immutable dataset/config
+the caller still has. A killed job restored this way makes identical
+selections to the uninterrupted run (tests/test_cleaning.py asserts this
+bit-for-bit across all three backends).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.chef_lr import ChefConfig
+from repro.core import lr_head
+from repro.core.backend import Backend, get_backend
+from repro.core.deltagrad import DGConfig
+from repro.core.increm import Provenance, build_provenance
+from repro.core.pipeline import RoundRecord, train_head
+
+
+@dataclass
+class BudgetLedger:
+    """Cleaning-budget accounting: `total` = B, `spent` = labels cleaned."""
+
+    total: int
+    spent: int = 0
+
+    @property
+    def remaining(self) -> int:
+        return self.total - self.spent
+
+    def can_afford(self, b: int) -> bool:
+        return b <= self.remaining
+
+    def charge(self, b: int) -> None:
+        if not self.can_afford(b):
+            raise ValueError(f"budget exceeded: spent={self.spent} + {b} > {self.total}")
+        self.spent += b
+
+
+@dataclass
+class CleaningSession:
+    """All mutable state of one cleaning run + cached derived arrays."""
+
+    ds: "object"  # ChefDataset — label state evolves round to round
+    cfg: ChefConfig
+    backend: Backend
+    w: jax.Array
+    sched: jax.Array
+    traj: Optional[tuple] = None  # (ws [T,C,d+1], gs [T,C,d+1]) DeltaGrad handle
+    prov: Optional[Provenance] = None  # Increm-INFL provenance
+    key: Optional[jax.Array] = None  # base PRNG key (typed)
+    round: int = 0
+    ledger: BudgetLedger = None  # type: ignore[assignment]
+    history: list = field(default_factory=list)
+    terminated: bool = False
+    # derived caches (rebuilt, never checkpointed)
+    Xa: jax.Array = None  # type: ignore[assignment]
+    Xa_val: jax.Array = None  # type: ignore[assignment]
+    dgc: DGConfig = None  # type: ignore[assignment]
+
+    # ------------------------------------------------------------ lifecycle
+    @classmethod
+    def initialize(
+        cls,
+        ds,
+        cfg: ChefConfig,
+        *,
+        backend: "Backend | str | None" = None,
+        need_trajectory: bool = True,
+        need_provenance: bool = True,
+    ) -> "CleaningSession":
+        """Paper Initialization step: train the head on the weak labels and
+        cache the DeltaGrad / Increm-INFL provenance the later rounds need."""
+        backend = get_backend(backend if backend is not None else cfg.backend,
+                              chunk_rows=cfg.score_chunk)
+        w, traj, sched = train_head(ds, cfg, cache=need_trajectory)
+        session = cls(
+            ds=ds, cfg=cfg, backend=backend, w=w, sched=sched,
+            traj=traj if need_trajectory else None,
+            key=jax.random.key(cfg.seed + 1),
+            ledger=BudgetLedger(cfg.budget),
+        )
+        session._build_caches()
+        if need_provenance:
+            session.prov = build_provenance(w, session.Xa,
+                                            power_iters=cfg.power_iters,
+                                            backend=backend)
+        return session
+
+    def _build_caches(self) -> None:
+        self.Xa = lr_head.augment(self.ds.X)
+        self.Xa_val = lr_head.augment(self.ds.X_val)
+        self.dgc = DGConfig(self.cfg.dg_burn_in, self.cfg.dg_period,
+                            self.cfg.dg_history, self.cfg.lr, self.cfg.l2)
+        if self.ledger is None:
+            self.ledger = BudgetLedger(self.cfg.budget)
+
+    # --------------------------------------------------------------- rounds
+    def round_keys(self, k: int):
+        """(k_select, k_vote) for round k — a pure function of (key, k)."""
+        return jax.random.split(jax.random.fold_in(self.key, k), 2)
+
+    def child(self, ds_new, w, traj, sched) -> "CleaningSession":
+        """A speculative view of the post-round session (shares immutable
+        caches, swaps the round-evolving state). Used by the pipelined
+        scheduler to prefetch round k+1's selection before round k's votes
+        are in; nothing it computes mutates `self`."""
+        return replace(self, ds=ds_new, w=w, traj=traj, sched=sched,
+                       round=self.round + 1, history=list(self.history))
+
+    def apply_round(self, ds_new, w, traj, sched, record: RoundRecord) -> None:
+        """Commit one completed round (the only state mutation point)."""
+        self.ledger.charge(int(jnp.sum(ds_new.cleaned)) - int(jnp.sum(self.ds.cleaned)))
+        self.ds = ds_new
+        self.w = w
+        self.traj = traj
+        self.sched = sched
+        self.history.append(record)
+        self.round += 1
+
+    # --------------------------------------------------------- checkpointing
+    def state_tree(self) -> dict:
+        """Fixed-structure pytree of the mutable state (repro.ckpt payload).
+        Optional members (traj / prov) always occupy their slots — empty
+        arrays + a flag — so the restore template's structure never depends
+        on the run configuration."""
+        empty = np.zeros((0,), np.float32)
+        has_traj = self.traj is not None
+        has_prov = self.prov is not None
+        hist = (
+            np.array(
+                [[r.round, r.n_cleaned_total, r.f1_val, r.f1_test, r.n_candidates,
+                  r.t_select, r.t_update, r.suggested_match_truth]
+                 for r in self.history], np.float64)
+            if self.history else np.zeros((0, 8), np.float64)
+        )
+        return {
+            "w": self.w,
+            "sched": self.sched,
+            "traj_ws": self.traj[0] if has_traj else empty,
+            "traj_gs": self.traj[1] if has_traj else empty,
+            "has_traj": np.int32(has_traj),
+            "prov_w0": self.prov.w0 if has_prov else empty,
+            "prov_p0": self.prov.p0 if has_prov else empty,
+            "prov_hnorm": self.prov.hnorm if has_prov else empty,
+            "has_prov": np.int32(has_prov),
+            "key": jax.random.key_data(self.key),
+            "y_prob": self.ds.y_prob,
+            "y_weight": self.ds.y_weight,
+            "cleaned": self.ds.cleaned,
+            "round": np.int32(self.round),
+            "spent": np.int32(self.ledger.spent),
+            "terminated": np.int32(self.terminated),
+            "history": hist,
+        }
+
+    def save(self, manager) -> None:
+        """Checkpoint through a `repro.ckpt.CheckpointManager` (step = round;
+        the manager's async mode overlaps the write with the next round)."""
+        manager.save(self.round, self.state_tree(), blocking=False)
+
+    @classmethod
+    def restore(
+        cls,
+        ckpt_dir,
+        ds,
+        cfg: ChefConfig,
+        *,
+        backend: "Backend | str | None" = None,
+        step: Optional[int] = None,
+    ) -> "CleaningSession":
+        """Rebuild a session from the latest committed checkpoint. `ds` and
+        `cfg` supply the immutable parts (features, splits, annotator labels,
+        hyper-parameters); the label state inside `ds` is overwritten by the
+        checkpointed one."""
+        from repro.ckpt.checkpoint import restore_checkpoint
+
+        backend = get_backend(backend if backend is not None else cfg.backend,
+                              chunk_rows=cfg.score_chunk)
+        template = {k: np.zeros((0,), np.float32) for k in (
+            "w", "sched", "traj_ws", "traj_gs", "has_traj", "prov_w0", "prov_p0",
+            "prov_hnorm", "has_prov", "key", "y_prob", "y_weight", "cleaned",
+            "round", "spent", "terminated", "history")}
+        state, _ = restore_checkpoint(ckpt_dir, template, step=step)
+        ds = replace(
+            ds,
+            y_prob=jnp.asarray(state["y_prob"]),
+            y_weight=jnp.asarray(state["y_weight"]),
+            cleaned=jnp.asarray(state["cleaned"]),
+        )
+        traj = (
+            (jnp.asarray(state["traj_ws"]), jnp.asarray(state["traj_gs"]))
+            if int(state["has_traj"]) else None
+        )
+        prov = (
+            Provenance(jnp.asarray(state["prov_w0"]), jnp.asarray(state["prov_p0"]),
+                       jnp.asarray(state["prov_hnorm"]))
+            if int(state["has_prov"]) else None
+        )
+        history = [
+            RoundRecord(int(r[0]), int(r[1]), float(r[2]), float(r[3]), int(r[4]),
+                        float(r[5]), float(r[6]), float(r[7]))
+            for r in np.asarray(state["history"]).reshape(-1, 8)
+        ]
+        session = cls(
+            ds=ds, cfg=cfg, backend=backend,
+            w=jnp.asarray(state["w"]), sched=jnp.asarray(state["sched"]),
+            traj=traj, prov=prov,
+            key=jax.random.wrap_key_data(jnp.asarray(state["key"])),
+            round=int(state["round"]),
+            ledger=BudgetLedger(cfg.budget, spent=int(state["spent"])),
+            history=history,
+            terminated=bool(int(state["terminated"])),
+        )
+        session._build_caches()
+        return session

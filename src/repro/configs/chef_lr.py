@@ -24,8 +24,21 @@ class ChefConfig:
     # cleaning budget / per-round batch (Section 5.1: B=100, b in {10, 100})
     budget: int = 100
     round_size: int = 10
-    # early termination: stop when validation F1 >= target (0 disables)
+    # early termination (first-class policy objects in
+    # repro.cleaning.scheduler; all default-disabled):
+    #   target_f1        — stop when validation F1 >= target (0 disables)
+    #   patience         — stop after `patience` rounds without the best val
+    #                      F1 improving by >= patience_delta (0 disables)
+    #   min_f1_per_label — stop when the marginal val-F1 gain per cleaned
+    #                      label falls below this rate (0 disables)
     target_f1: float = 0.0
+    patience: int = 0
+    patience_delta: float = 0.0
+    min_f1_per_label: float = 0.0
+    # annotation-service simulation: seconds of human latency per cleaning
+    # round. The labels are deterministic either way; the latency is the
+    # window the pipelined scheduler overlaps with compute (0 = instant).
+    annotator_latency_s: float = 0.0
     # DeltaGrad-L hyper-parameters (Appendix F.2: j0=10, m0=2, T0=10)
     dg_burn_in: int = 10
     dg_period: int = 10

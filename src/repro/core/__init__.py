@@ -8,7 +8,9 @@
   deltagrad  — DeltaGrad-L (Algorithm 2 adapted to label cleaning)
   annotation — simulated annotators, majority vote, INFL-as-annotator
   baselines  — Active x2, O2U-lite, TARS-lite, DUTI-lite, loss, random
-  pipeline   — loop (2): select -> annotate -> update, early termination
+  pipeline   — `run_chef`, the blocking compatibility wrapper over
+               repro.cleaning (session/phases/scheduler/service — the
+               resumable, pipelined form of loop (2))
 
 Backend dispatch contract
 -------------------------
@@ -28,9 +30,11 @@ booleans:
   * `pallas` — fused TPU kernels (interpret-mode off-TPU).
   * `pallas_sharded` — the kernels under `shard_map` over the mesh's data
     axes: rows sharded, grad/HVP partial sums psum'd, optional `chunk_rows`
-    bounding the per-device working set, so full-selector scoring scales to
-    N >> single-device memory (the Increm-INFL pruning path still runs the
-    reference forms; see ROADMAP open items).
+    bounding the per-device working set, so scoring scales to N >>
+    single-device memory under both the Full selector and Increm-INFL's
+    bound evaluation (`increm.theorem1_bounds`/`increm_infl` take
+    `backend=`; the fused `Backend.probs_scores` pads + shard_maps once
+    per scoring round).
 
 New ops that want dispatch add a method to `Backend` and (optionally) a
 kernel in repro.kernels; call sites accept `backend: Backend | None = None`

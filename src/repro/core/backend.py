@@ -14,10 +14,10 @@ against each other in tests/test_backend.py):
   pallas_sharded  the Pallas kernels wrapped in `shard_map` over the mesh's
                   data axes: rows of Xa/P/Y are split across devices, the
                   row-local `X @ vᵀ` epilogue (infl_scores) stays local, and
-                  the grad/HVP partial sums are psum'd — so `run_chef` with
-                  selector="full" can score N >> single-device memory.
-                  (The Increm-INFL pruning path still evaluates its bounds on
-                  the reference forms — see ROADMAP open items.) `chunk_rows`
+                  the grad/HVP partial sums are psum'd — so `run_chef` can
+                  score N >> single-device memory under BOTH the Full selector
+                  and the Increm-INFL bound evaluation (repro.core.increm
+                  dispatches through this object too). `chunk_rows`
                   additionally bounds the per-device working set by
                   lax.map-ing the kernel over row chunks.
 
@@ -26,6 +26,7 @@ The ops (all return f32, matching `repro.kernels.ref` oracles):
   lr_grad(w, Xa, Y, weights, l2)        -> [C, d+1]   Eq. (1) batch gradient
   lr_hvp(w, v, Xa, weights, l2, P=None) -> [C, d+1]   H(w) v
   infl_scores(v, Xa, P, Y, gamma)       -> [N, C]     Eq. (6) score matrix
+  probs_scores(w, v, Xa, Y, gamma)      -> [N, C]     fused probs + Eq. (6)
 """
 from __future__ import annotations
 
@@ -99,6 +100,31 @@ class Backend:
 
             return ops.infl_scores(v, Xa, P, Y, gamma)
         return self._sharded_scores(v, Xa, P, Y, gamma)
+
+    def probs_scores(self, w, v, Xa, Y, gamma: float) -> jax.Array:
+        """Fused P = softmax(Xa wᵀ) + Eq. 6 scores [N, C].
+
+        For pallas_sharded this is ONE pad + ONE shard_map: probs are computed
+        on the local row shard and fed straight into the local score kernel.
+        The unfused form (`probs()` then `infl_scores()`) padded/sliced P to
+        global [N, C] and then re-padded Xa/P/Y to the same multiple — a
+        redundant full-N copy + reshard on every scoring round."""
+        if self.name != "pallas_sharded":
+            from repro.core import lr_head
+
+            return self.infl_scores(v, Xa, lr_head.probs(w, Xa), Y, gamma)
+        _, dp, lead = self._data_axes()
+        if lead is None:
+            from repro.core import lr_head
+            from repro.kernels import ops
+
+            return ops.infl_scores(v, Xa, lr_head.probs(w, Xa), Y, gamma)
+        from repro.kernels.ops import _pad_rows
+
+        n = Xa.shape[0]
+        mult = self._row_mult(dp, n)
+        Xp, Yp = (_pad_rows(a, mult)[0] for a in (Xa, Y))
+        return _cached_sharded(self, "probs_scores", float(gamma))(w, v, Xp, Yp)[:n]
 
     def unsharded(self) -> "Backend":
         """Variant for small-N side computations (e.g. the validation
@@ -186,6 +212,17 @@ class Backend:
                 return self._chunked(lambda x: lr_head.probs(ww, x), (xs,), xs.shape[0])
 
             return shard_map_compat(local, self.mesh, (rep2, row2), row2)
+
+        if op == "probs_scores":
+            def local(ww, vv, xs, ys):
+                from repro.core import lr_head
+
+                def kern(x, y):
+                    return ops.infl_scores(vv, x, lr_head.probs(ww, x), y, static)
+
+                return self._chunked(kern, (xs, ys), xs.shape[0])
+
+            return shard_map_compat(local, self.mesh, (rep2, rep2, row2, row2), row2)
 
         if op == "infl_scores":
             def local(vv, xs, ps, ys):

@@ -25,12 +25,13 @@ runs only on the survivors — and provably returns the same top-b as Full.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import lr_head
+from repro.core.backend import Backend, get_backend
 from repro.core.influence import infl_scores
 
 
@@ -40,8 +41,9 @@ class Provenance(NamedTuple):
     hnorm: jax.Array  # [N]
 
 
-def build_provenance(w0, Xa, power_iters: int = 12, key=None) -> Provenance:
-    p0 = lr_head.probs(w0, Xa)
+def build_provenance(w0, Xa, power_iters: int = 12, key=None,
+                     backend: Optional[Backend] = None) -> Provenance:
+    p0 = get_backend(backend).probs(w0, Xa)
     hnorm = lr_head.per_sample_hessian_norm(w0, Xa, P=p0, iters=power_iters, key=key)
     return Provenance(w0, p0, hnorm)
 
@@ -53,17 +55,22 @@ class Bounds(NamedTuple):
 
 
 def theorem1_bounds(
-    prov: Provenance, w_k, v, Xa, Y, gamma: float, tight: bool = False
+    prov: Provenance, w_k, v, Xa, Y, gamma: float, tight: bool = False,
+    backend: Optional[Backend] = None,
 ) -> Bounds:
     """`tight=False` is the paper's Theorem 1 verbatim. `tight=True` is our
     beyond-paper refinement: for cross entropy, ∇_y∇_wF(w,z̃)δ_y = −δ_y ⊗ x̃
     EXACTLY (Σ_j δ_j = 0 cancels the softmax term), so Diff₁ ≡ 0 and its
     bound width — the dominant slack — can be dropped with no approximation.
+
+    The O(NC) bound center I0 dispatches through `backend` (reference |
+    pallas | pallas_sharded), so Increm-INFL's bound evaluation scales the
+    same way the Full selector does; the e1/e2 scalars stay plain jnp.
     """
     dw = (w_k - prov.w0).astype(jnp.float32)
     e1 = jnp.sum(v * dw)
     e2 = jnp.linalg.norm(v) * jnp.linalg.norm(dw)
-    I0 = infl_scores(v, Xa, prov.p0, Y, gamma)  # [N, C] (center at p0)
+    I0 = infl_scores(v, Xa, prov.p0, Y, gamma, backend=backend)  # center at p0
     h = prov.hnorm[:, None]
     width1 = jnp.zeros_like(I0) if tight else h * e2 * (1.0 - Y)  # [N, C]
     lo2 = 0.5 * (1.0 - gamma) * (e1 - e2) * h
@@ -103,21 +110,24 @@ def increm_infl(
     eligible,
     b: int,
     tight: bool = False,
+    backend: Optional[Backend] = None,
 ):
     """Full Increm-INFL round: prune via Theorem 1, then exact Eq. 6 on the
     survivors only. Returns (priority [N], suggested [N], prune_info).
 
     Non-candidates get +inf priority — Algorithm 1 guarantees the true top-b
     are all candidates, so downstream top-b selection matches Full exactly.
+    Both the bound evaluation and the exact pass dispatch through `backend`.
     """
-    bounds = theorem1_bounds(prov, w_k, v, Xa, Y, gamma, tight=tight)
+    backend = get_backend(backend)
+    bounds = theorem1_bounds(prov, w_k, v, Xa, Y, gamma, tight=tight,
+                             backend=backend)
     pruned = algorithm1(bounds, eligible, b)
     # exact evaluation on survivors: needs current-probs p^k only for them.
     # (jit-static shapes: evaluate everywhere, mask; the BENCHMARKED wall-time
     # path gathers candidates into a dense buffer first — see
     # benchmarks/exp2_increm.py — matching the paper's Time_grad accounting.)
-    P = lr_head.probs(w_k, Xa)
-    S = infl_scores(v, Xa, P, Y, gamma)
+    S = backend.probs_scores(w_k, v, Xa, Y, gamma)
     S = jnp.where(pruned.candidates[:, None], S, jnp.inf)
     priority = jnp.min(S, axis=-1)
     suggested = jnp.argmin(S, axis=-1)

@@ -68,10 +68,12 @@ def infl(w, v, Xa, Y, gamma: float, P: Optional[jax.Array] = None,
          backend: Optional[Backend] = None) -> InflResult:
     backend = get_backend(backend)
     if P is None:
-        # through the backend: row-sharded under pallas_sharded, so the
-        # [N, C] P matrix is never materialized on one device
-        P = backend.probs(w, Xa)
-    S = infl_scores(v, Xa, P, Y, gamma, backend=backend)
+        # fused probs + scores through the backend: ONE pad + shard_map under
+        # pallas_sharded, and the [N, C] P matrix is never materialized on
+        # one device
+        S = backend.probs_scores(w, v, Xa, Y, gamma)
+    else:
+        S = infl_scores(v, Xa, P, Y, gamma, backend=backend)
     return InflResult(jnp.min(S, axis=-1), jnp.argmin(S, axis=-1), S)
 
 

@@ -11,24 +11,27 @@
                           majority vote (strategy one/two/three)
     3. model constructor — DeltaGrad-L incremental replay or full Retrain
 
-  until the budget B is exhausted or the target validation F1 is reached
-  (early termination).
+  until the budget B is exhausted or an early-termination policy fires.
+
+`run_chef` below is the blocking compatibility wrapper. The loop itself now
+lives in `repro.cleaning`: a `CleaningSession` (resumable state), phase
+protocol objects (`Selector`/`Annotator`/`Constructor`), and a
+`RoundScheduler` that can also run PIPELINED — overlapping annotation latency
+with speculative model updates and next-round scoring — plus a multi-session
+`CleaningService` job queue. Use those directly for anything beyond the
+paper's one-shot blocking loop.
 """
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
-from typing import Callable, Optional
+from dataclasses import dataclass
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.chef_lr import ChefConfig
-from repro.core import annotation, baselines, increm, lr_head, metrics
+from repro.core import lr_head, metrics
 from repro.core.backend import Backend, get_backend
-from repro.core.deltagrad import DGConfig, build_correction_schedule, deltagrad_replay
-from repro.core.influence import influence_vector, infl, top_b
 
 if False:  # import cycle guard (data.synth imports core.annotation)
     from repro.data.synth import ChefDataset  # noqa: F401
@@ -89,127 +92,25 @@ def run_chef(
     backend: "Backend | str | None" = None,  # default: cfg.backend
     verbose: bool = False,
 ) -> ChefResult:
+    """One blocking, single-session CHEF run (the paper's loop).
+
+    Thin wrapper over `repro.cleaning`: builds a `CleaningSession` + the
+    phase objects and drives a blocking `RoundScheduler` to budget
+    exhaustion / early termination. Results, history records, and the
+    argument vocabulary are unchanged from the original monolithic loop."""
+    from repro.cleaning import CleaningSession, make_scheduler
+
     assert selector == "full" or method == "infl", "Increm-INFL prunes INFL scores"
-    tight = selector == "increm_tight"
     # selected ONCE per run; every hot-loop call below receives the object
     backend = get_backend(backend if backend is not None else cfg.backend,
                           chunk_rows=cfg.score_chunk)
-    key = jax.random.key(cfg.seed + 1)
-    Xa = lr_head.augment(ds.X)
-    Xa_val = lr_head.augment(ds.X_val)
-
-    # ---- Initialization step
-    w, traj, sched = train_head(ds, cfg, cache=(constructor == "deltagrad"))
-    prov = increm.build_provenance(w, Xa, power_iters=cfg.power_iters) if selector.startswith("increm") else None
-    dgc = DGConfig(cfg.dg_burn_in, cfg.dg_period, cfg.dg_history, cfg.lr, cfg.l2)
-
-    history: list = []
-    f1v, f1t = _evaluate(w, ds)
-    n_rounds = cfg.budget // cfg.round_size
-    terminated = False
-
-    for k in range(n_rounds):
-        key, k_sel, k_vote = jax.random.split(key, 3)
-        eligible = ~ds.cleaned
-        t0 = time.perf_counter()
-
-        suggested = None
-        n_cand = ds.n
-        if method == "infl":
-            v, _ = influence_vector(
-                w, Xa_val, ds.y_val, Xa, ds.y_weight, cfg.l2,
-                cg_iters=cfg.cg_iters, cg_tol=cfg.cg_tol, backend=backend,
-            )
-            if selector.startswith("increm"):
-                priority, suggested, pruned = increm.increm_infl(
-                    prov, w, v, Xa, ds.y_prob, cfg.gamma, eligible, cfg.round_size,
-                    tight=tight,
-                )
-                n_cand = int(pruned.n_candidates)
-            else:
-                r = infl(w, v, Xa, ds.y_prob, cfg.gamma, backend=backend)
-                priority, suggested = r.priority, r.suggested
-        else:
-            sel = _run_baseline(method, w, Xa, ds, cfg, k_sel, Xa_val)
-            priority, suggested = sel.priority, sel.suggested
-
-        idx = top_b(priority, eligible, cfg.round_size)
-        t_select = time.perf_counter() - t0
-
-        # ---- annotation phase
-        humans = ds.human_labels[idx]
-        if suggested is not None:
-            infl_lbl = suggested[idx]
-            strategy = cfg.strategy
-        else:
-            infl_lbl = jnp.zeros(idx.shape, jnp.int32)
-            strategy = "one"  # no label suggestions -> humans only
-        new_labels = annotation.cleaned_labels(
-            strategy, humans, infl_lbl, ds.n_classes, key=k_vote
-        )
-        match = float(jnp.mean((suggested[idx] == ds.y_true[idx]).astype(jnp.float32))) if suggested is not None else float("nan")
-
-        # ---- model constructor phase
-        t1 = time.perf_counter()
-        old_prob, old_w8 = ds.y_prob, ds.y_weight
-        ds = ds.clean(idx, new_labels)
-        if constructor == "deltagrad":
-            ci, cm = build_correction_schedule(np.asarray(sched), np.asarray(idx))
-            # replay against the round-(k-1) cache (Section 4.2 item (2)):
-            # cached gradients were computed on the round-(k-1) labels
-            # (old_prob/old_w8), corrections cover only this round's b samples
-            w, traj = deltagrad_replay(
-                traj[0], traj[1], sched, Xa,
-                old_prob, ds.y_prob, old_w8, ds.y_weight, ci, cm,
-                dgc, int(sched.shape[1]),
-            )
-        else:
-            w, traj, sched = train_head(ds, cfg, cache=(constructor == "deltagrad"))
-        t_update = time.perf_counter() - t1
-
-        f1v, f1t = _evaluate(w, ds)
-        history.append(
-            RoundRecord(k, int(jnp.sum(ds.cleaned)), f1v, f1t, n_cand, t_select, t_update, match)
-        )
-        if verbose:
-            print(
-                f"round {k}: cleaned={int(jnp.sum(ds.cleaned))} f1_val={f1v:.4f} "
-                f"f1_test={f1t:.4f} cand={n_cand} sel={t_select:.3f}s upd={t_update:.3f}s"
-            )
-        if cfg.target_f1 and f1v >= cfg.target_f1:
-            terminated = True
-            break
-
-    return ChefResult(w, ds, history, f1t, f1v, terminated)
-
-
-def _run_baseline(method, w, Xa, ds: "ChefDataset", cfg: ChefConfig, key, Xa_val):
-    if method in ("infl_d", "infl_y"):
-        v, _ = influence_vector(
-            w, Xa_val, ds.y_val, Xa, ds.y_weight, cfg.l2,
-            cg_iters=cfg.cg_iters, cg_tol=cfg.cg_tol,
-        )
-        if method == "infl_d":
-            return baselines.select_infl_d(w, v, Xa, ds.y_prob)
-        return baselines.select_infl_y(w, v, Xa, ds.y_prob)
-    if method == "active_one":
-        return baselines.select_active_one(w, Xa)
-    if method == "active_two":
-        return baselines.select_active_two(w, Xa)
-    if method == "loss":
-        return baselines.select_loss(w, Xa, ds.y_prob)
-    if method == "random":
-        return baselines.select_random(key, ds.n)
-    if method == "o2u":
-        sched = lr_head.batch_schedule(cfg.seed + 7, ds.n, min(cfg.batch_size, ds.n), 4)
-        w0 = lr_head.init_head(key, ds.n_classes, ds.X.shape[1])
-        return baselines.select_o2u(
-            w0, Xa, ds.y_prob, ds.y_weight, sched, l2=cfg.l2, lr_max=cfg.lr * 4
-        )
-    if method == "tars":
-        return baselines.select_tars_lite(w, Xa, ds.y_prob, ds.human_labels, ds.n_classes)
-    if method == "duti":
-        return baselines.select_duti_lite(
-            w, Xa, ds.y_prob, ds.y_weight, Xa_val, ds.y_val, l2=cfg.l2, lr=cfg.lr
-        )
-    raise ValueError(method)
+    session = CleaningSession.initialize(
+        ds, cfg, backend=backend,
+        need_trajectory=(constructor == "deltagrad"),
+        need_provenance=selector.startswith("increm"),
+    )
+    scheduler = make_scheduler(
+        session, method=method, selector=selector, constructor=constructor,
+        pipelined=False, verbose=verbose,
+    )
+    return scheduler.run()

@@ -17,24 +17,46 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.dist.sharding import data_axes_info
 
 
-def target_shardings(tree_like: Any, mesh, shardings: Any = None) -> Any:
+def default_leading_spec(shape, dp: int, lead, min_shard_rows: int) -> P:
+    """Default elastic-restore policy for one leaf: row-shard BATCH-LEADING
+    leaves, replicate parameter-shaped ones.
+
+    Divisibility alone is the wrong test: a [C, d+1] head or any other small
+    parameter whose class/feature count happens to divide the DP degree would
+    end up sharded over 'data', turning every later use into a per-step
+    all-gather. A leaf is treated as batch-leading only when its leading dim
+    is both divisible by `dp` AND at least `min_shard_rows` — parameters have
+    few leading rows (classes, heads, layers), batches/trajectories have
+    many, so a threshold of a couple of rows per device separates them."""
+    if (lead is None or len(shape) == 0 or shape[0] == 0 or shape[0] % dp
+            or shape[0] < min_shard_rows):
+        return P()
+    return P(lead, *([None] * (len(shape) - 1)))
+
+
+def target_shardings(tree_like: Any, mesh, shardings: Any = None, *,
+                     min_shard_rows: Optional[int] = None) -> Any:
     """A pytree of NamedSharding on `mesh` matching `tree_like`.
 
     Explicit `shardings` (full pytree of NamedSharding) wins; otherwise the
-    default policy shards the leading dim over the mesh's data axes when
-    divisible and replicates everything else — correct for TrainState-shaped
-    trees on data-parallel meshes and always safe (resharding happens lazily
-    on first use under jit anyway).
+    default policy row-shards batch-leading leaves over the mesh's data axes
+    and replicates everything else (see `default_leading_spec`) — correct for
+    TrainState-shaped trees on data-parallel meshes and always safe
+    (resharding happens lazily on first use under jit anyway).
+
+    `min_shard_rows` defaults to max(2 * dp, 16): at least two rows per
+    device AND enough rows that the leaf plausibly is data, not parameters.
+    Pass 0 to restore pure divisibility gating.
     """
     if shardings is not None:
         return shardings
     _, dp, lead = data_axes_info(mesh)
+    if min_shard_rows is None:
+        min_shard_rows = max(2 * dp, 16)
 
     def assign(leaf):
-        shape = np.shape(leaf)
-        if lead is None or len(shape) == 0 or shape[0] == 0 or shape[0] % dp:
-            return NamedSharding(mesh, P())
-        return NamedSharding(mesh, P(lead, *([None] * (len(shape) - 1))))
+        return NamedSharding(
+            mesh, default_leading_spec(np.shape(leaf), dp, lead, min_shard_rows))
 
     return jax.tree.map(assign, tree_like)
 

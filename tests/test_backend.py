@@ -69,6 +69,51 @@ def test_op_parity(spec, rng):
         np.asarray(ref.infl_scores(v, Xa, P, Y, 0.8)), atol=1e-4, rtol=1e-4)
 
 
+@pytest.mark.parametrize("spec", NONREF + ["pallas_sharded_chunked"])
+def test_probs_scores_fused_parity(spec, rng):
+    """Backend.probs_scores (fused probs + Eq. 6, one pad + one shard_map on
+    the sharded path) == reference probs() then infl_scores()."""
+    chunk = 64 if spec == "pallas_sharded_chunked" else 0
+    bk = get_backend("pallas_sharded" if chunk else spec, chunk_rows=chunk)
+    ref = get_backend("reference")
+    Xa, Y, w, v, _ = _op_data(rng)
+    want = ref.infl_scores(v, Xa, lr_head.probs(w, Xa), Y, 0.8)
+    np.testing.assert_allclose(np.asarray(bk.probs_scores(w, v, Xa, Y, 0.8)),
+                               np.asarray(want), atol=1e-4, rtol=1e-4)
+
+
+def test_increm_backend_parity(rng):
+    """Increm-INFL's Theorem-1 bound evaluation and exact pass dispatch
+    through Backend: identical bounds, candidate sets, and selections on
+    every backend (ROADMAP open item closed)."""
+    from repro.core.increm import build_provenance, increm_infl, theorem1_bounds
+
+    Xa, Y, w, v, _ = _op_data(rng, N=257)
+    ks = jax.random.split(rng, 2)
+    w_k = w + 0.03 * jax.random.normal(ks[0], w.shape)
+    eligible = jnp.ones(Xa.shape[0], bool)
+    ref = {}
+    for name in BACKENDS:
+        bk = get_backend(name)
+        prov = build_provenance(w, Xa, power_iters=20, backend=bk)
+        bounds = theorem1_bounds(prov, w_k, v, Xa, Y, 0.8, backend=bk)
+        pri, sug, info = increm_infl(prov, w_k, v, Xa, Y, 0.8, eligible, 10,
+                                     backend=bk)
+        top = np.asarray(jax.lax.top_k(-pri, 10)[1])
+        if name == "reference":
+            ref = dict(lower=np.asarray(bounds.lower), upper=np.asarray(bounds.upper),
+                       n_cand=int(info.n_candidates), top=set(top.tolist()),
+                       sug=np.asarray(sug)[top])
+        else:
+            np.testing.assert_allclose(np.asarray(bounds.lower), ref["lower"],
+                                       atol=1e-4, rtol=1e-4)
+            np.testing.assert_allclose(np.asarray(bounds.upper), ref["upper"],
+                                       atol=1e-4, rtol=1e-4)
+            assert int(info.n_candidates) == ref["n_cand"], name
+            assert set(top.tolist()) == ref["top"], name
+            np.testing.assert_array_equal(np.asarray(sug)[top], ref["sug"])
+
+
 def test_run_chef_backend_parity(ds):
     """One full round (select -> annotate -> retrain) per backend: identical
     cleaned sets, suggested labels, and final weights within tolerance."""

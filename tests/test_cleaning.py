@@ -1,0 +1,235 @@
+"""repro.cleaning contract tests.
+
+The two load-bearing guarantees of the service layer:
+  1. RESUMABILITY — a session killed mid-run and restored from its
+     `repro.ckpt` checkpoint replays the remaining rounds to BIT-IDENTICAL
+     selections, labels, and final weights, on every backend.
+  2. DETERMINISTIC PIPELINING — the speculative pipelined scheduler moves
+     timing, not results: outputs are bit-identical to the blocking loop
+     whether speculation hits (strategy 'two') or misses (strategy 'three').
+
+Plus: budget ledger, annotation-latency simulation, early-termination
+policies, and the multi-session service queue (submit/poll/cancel).
+"""
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cleaning import (
+    AnnotationTask,
+    BudgetLedger,
+    CleaningService,
+    CleaningSession,
+    MarginalF1PerLabel,
+    Patience,
+    TargetF1,
+    make_scheduler,
+)
+from repro.configs.chef_lr import ChefConfig
+from repro.core.backend import BACKENDS
+from repro.core.pipeline import RoundRecord
+from repro.data import make_dataset
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_dataset(jax.random.key(7), n_train=300, n_val=64, n_test=64,
+                        feature_dim=24)
+
+
+CFG = ChefConfig(budget=30, round_size=10, n_epochs=6, batch_size=100,
+                 lr=0.05, l2=0.05)
+
+
+def _run(ds, cfg, *, backend=None, pipelined=False, ckpt_dir=None,
+         max_rounds=None, selector="increm_tight", constructor="deltagrad"):
+    session = CleaningSession.initialize(
+        ds, cfg, backend=backend,
+        need_trajectory=(constructor == "deltagrad"),
+        need_provenance=selector.startswith("increm"),
+    )
+    sched = make_scheduler(session, method="infl", selector=selector,
+                           constructor=constructor, pipelined=pipelined,
+                           ckpt_dir=ckpt_dir)
+    return sched.run(max_rounds=max_rounds), sched
+
+
+# ------------------------------------------------------------ resumability
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_kill_restore_bitwise_parity(ds, tmp_path, backend):
+    """Kill a session mid-run, restore from the committed checkpoint, and
+    the resumed rounds replay bit-for-bit against the uninterrupted run."""
+    res_full, _ = _run(ds, CFG, backend=backend)
+    assert len(res_full.history) == 3
+
+    _run(ds, CFG, backend=backend, ckpt_dir=tmp_path, max_rounds=1)  # "killed"
+    session = CleaningSession.restore(tmp_path, ds, CFG, backend=backend)
+    assert session.round == 1
+    assert session.ledger.spent == 10
+    sched = make_scheduler(session, method="infl", selector="increm_tight",
+                           constructor="deltagrad")
+    res = sched.run()
+
+    # identical selections (cleaned sets), labels, and weights — bit-for-bit
+    np.testing.assert_array_equal(np.asarray(res.dataset.cleaned),
+                                  np.asarray(res_full.dataset.cleaned))
+    np.testing.assert_array_equal(np.asarray(jnp.argmax(res.dataset.y_prob, -1)),
+                                  np.asarray(jnp.argmax(res_full.dataset.y_prob, -1)))
+    np.testing.assert_array_equal(np.asarray(res.w), np.asarray(res_full.w))
+    assert [r.f1_val for r in res.history] == [r.f1_val for r in res_full.history]
+    assert [r.n_candidates for r in res.history] \
+        == [r.n_candidates for r in res_full.history]
+
+
+def test_restore_without_commit_fails(ds, tmp_path):
+    with pytest.raises(FileNotFoundError):
+        CleaningSession.restore(tmp_path / "nothing", ds, CFG)
+
+
+# ------------------------------------------------- deterministic pipelining
+
+
+def test_pipelined_matches_blocking_bitwise_on_hits(ds):
+    """Strategy 'two': the votes ARE the suggestions, speculation always
+    hits, and the pipelined run must still be bit-identical to blocking."""
+    cfg = dataclasses.replace(CFG, strategy="two", annotator_latency_s=0.15)
+    res_b, _ = _run(ds, cfg)
+    res_p, sched = _run(ds, cfg, pipelined=True)
+    assert sched.spec_hits >= 2 and sched.spec_misses == 0
+    np.testing.assert_array_equal(np.asarray(res_b.dataset.cleaned),
+                                  np.asarray(res_p.dataset.cleaned))
+    np.testing.assert_array_equal(np.asarray(res_b.w), np.asarray(res_p.w))
+
+
+def test_pipelined_matches_blocking_with_misses(ds):
+    """Strategy 'three': human votes can override INFL's suggestion, so
+    speculation may miss — results must be unchanged either way."""
+    cfg = dataclasses.replace(CFG, strategy="three", annotator_latency_s=0.1)
+    res_b, _ = _run(ds, cfg)
+    res_p, sched = _run(ds, cfg, pipelined=True)
+    assert sched.spec_hits + sched.spec_misses >= 2
+    np.testing.assert_array_equal(np.asarray(res_b.dataset.cleaned),
+                                  np.asarray(res_p.dataset.cleaned))
+    np.testing.assert_array_equal(
+        np.asarray(jnp.argmax(res_b.dataset.y_prob, -1)),
+        np.asarray(jnp.argmax(res_p.dataset.y_prob, -1)))
+    np.testing.assert_array_equal(np.asarray(res_b.w), np.asarray(res_p.w))
+
+
+def test_annotation_task_latency():
+    task = AnnotationTask(jnp.arange(3), latency_s=0.15)
+    assert not task.ready()
+    t0 = time.monotonic()
+    labels = task.result()
+    assert time.monotonic() - t0 >= 0.1
+    assert task.ready()
+    np.testing.assert_array_equal(np.asarray(labels), [0, 1, 2])
+
+
+# ----------------------------------------------------------- budget ledger
+
+
+def test_budget_ledger():
+    led = BudgetLedger(total=25)
+    assert led.remaining == 25 and led.can_afford(10)
+    led.charge(10)
+    led.charge(10)
+    assert led.remaining == 5 and not led.can_afford(10)
+    with pytest.raises(ValueError):
+        led.charge(10)
+
+
+def test_budget_exhaustion_stops_scheduler(ds):
+    cfg = dataclasses.replace(CFG, budget=25)  # 2 full rounds of 10, 5 left
+    res, sched = _run(ds, cfg, selector="full", constructor="retrain")
+    assert len(res.history) == 2
+    assert int(jnp.sum(res.dataset.cleaned)) == 20
+    assert sched.exhausted and not res.terminated_early
+
+
+# ----------------------------------------------------- termination policies
+
+
+def _rec(k, f1v, cleaned):
+    return RoundRecord(k, cleaned, f1v, f1v, 0, 0.0, 0.0, float("nan"))
+
+
+def test_target_f1_policy():
+    assert not TargetF1(0.9).should_stop([])
+    assert not TargetF1(0.9).should_stop([_rec(0, 0.8, 10)])
+    assert TargetF1(0.9).should_stop([_rec(0, 0.8, 10), _rec(1, 0.92, 20)])
+
+
+def test_patience_policy():
+    hist = [_rec(0, 0.5, 10), _rec(1, 0.6, 20), _rec(2, 0.6, 30), _rec(3, 0.59, 40)]
+    assert Patience(2).should_stop(hist)  # no improvement in last 2 rounds
+    assert not Patience(3).should_stop(hist)  # window reaches the 0.5->0.6 jump
+    improving = [_rec(k, 0.5 + 0.05 * k, 10 * k) for k in range(5)]
+    assert not Patience(2).should_stop(improving)
+
+
+def test_marginal_f1_per_label_policy():
+    hist = [_rec(0, 0.80, 10), _rec(1, 0.801, 20)]  # 0.001 F1 for 10 labels
+    assert MarginalF1PerLabel(min_gain=1e-3).should_stop(hist)
+    assert not MarginalF1PerLabel(min_gain=1e-5).should_stop(hist)
+    assert not MarginalF1PerLabel(min_gain=1e-3).should_stop(hist[:1])
+
+
+def test_patience_terminates_run(ds):
+    # F1 saturates immediately on this easy dataset -> patience must fire
+    cfg = dataclasses.replace(CFG, budget=50, patience=1)
+    res, _ = _run(ds, cfg, selector="full", constructor="retrain")
+    assert res.terminated_early
+    assert len(res.history) < 5
+
+
+# ----------------------------------------------------------------- service
+
+
+def test_service_submit_poll_result(ds):
+    svc = CleaningService(workers=2)
+    try:
+        cfg = dataclasses.replace(CFG, budget=20)
+        j1 = svc.submit(ds, cfg, selector="full", constructor="retrain")
+        j2 = svc.submit(ds, cfg, selector="increm_tight", constructor="deltagrad")
+        r1 = svc.result(j1, timeout=600)
+        r2 = svc.result(j2, timeout=600)
+        assert svc.poll(j1).state == "done"
+        assert svc.poll(j2).rounds_done == 2
+        assert 0.0 <= r1.f1_test_final <= 1.0
+        assert int(jnp.sum(r2.dataset.cleaned)) == 20
+        states = {info.job_id: info.state for info in svc.jobs()}
+        assert states == {j1: "done", j2: "done"}
+    finally:
+        svc.shutdown()
+
+
+def test_service_cancel(ds):
+    svc = CleaningService(workers=1)
+    try:
+        cfg = dataclasses.replace(CFG, budget=30)
+        j1 = svc.submit(ds, cfg, selector="full", constructor="retrain")
+        j2 = svc.submit(ds, cfg, selector="full", constructor="retrain")
+        assert svc.cancel(j2) is True  # pending behind j1, or stops next round
+        svc.result(j1, timeout=600)
+        with pytest.raises(RuntimeError):
+            svc.result(j2, timeout=60)
+        assert svc.poll(j2).state == "cancelled"
+        assert svc.cancel(j2) is False  # already finished
+    finally:
+        svc.shutdown()
+
+
+def test_service_unknown_job():
+    svc = CleaningService(workers=1)
+    try:
+        with pytest.raises(KeyError):
+            svc.poll("job-9999")
+    finally:
+        svc.shutdown()

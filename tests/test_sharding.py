@@ -46,6 +46,28 @@ def test_batch_axes(mesh):
     assert batch_axes(mesh) == ("data",)
 
 
+def test_elastic_default_policy_batch_vs_params():
+    """target_shardings' default policy must row-shard batch-leading leaves
+    only: a small [C, d+1] head whose class count happens to divide the DP
+    degree is a parameter and stays replicated (no per-step all-gathers
+    after an elastic resize)."""
+    from repro.dist.elastic import default_leading_spec
+
+    dp, lead, min_rows = 2, "data", 16
+    # [C, d+1] LR head: 2 % dp == 0 but parameter-shaped -> replicate
+    assert default_leading_spec((2, 49), dp, lead, min_rows) == P()
+    # [T, C, d+1] trajectory cache / [N, d] batch: batch-leading -> sharded
+    assert default_leading_spec((500, 2, 49), dp, lead, min_rows) == P("data", None, None)
+    assert default_leading_spec((4096, 128), dp, lead, min_rows) == P("data", None)
+    # indivisible, scalar, empty, or no data axis -> replicate
+    assert default_leading_spec((4097, 128), dp, lead, min_rows) == P()
+    assert default_leading_spec((), dp, lead, min_rows) == P()
+    assert default_leading_spec((0,), dp, lead, min_rows) == P()
+    assert default_leading_spec((4096, 128), dp, None, min_rows) == P()
+    # min_shard_rows=0 restores pure divisibility gating
+    assert default_leading_spec((2, 49), dp, lead, 0) == P("data", None)
+
+
 def test_hlo_parser_counts_scan_trip(rng):
     """The while-aware parser multiplies scan bodies by trip count (within
     ~10% of analytic matmul FLOPs)."""
