@@ -1,0 +1,154 @@
+"""Constructor-phase benchmark: sgd_train + deltagrad_replay per backend.
+
+The DeltaGrad-L half of CHEF's speed story. For each backend this times the
+initialization-step SGD training (`train_head`, trajectory cached) and the
+DeltaGrad-L replay after cleaning b labels, asserts BIT-IDENTICAL results
+against the reference backend (the constructor parity contract), and records
+the committed sharding of the [T, C, d+1] trajectory cache — on
+`pallas_sharded` the leading axis must be row-sharded over the mesh's data
+axes (also asserted, not just reported).
+
+Also includes the `build_correction_schedule` micro-benchmark: the vectorized
+(np.isin + stable argsort) builder vs the old T x bs Python double loop,
+at T >= 1k where the win matters.
+
+On CPU the non-reference wall times measure interpret-mode Pallas (the
+Python-level kernel emulation) — the honest numbers are the reference column
+and the parity/sharding assertions; TPU runs produce real kernel timings.
+
+Emits CSV lines via `benchmarks.common.emit` AND writes a
+``BENCH_constructor.json`` artifact (the CI constructor-smoke job uploads it).
+
+Env knobs:
+  REPRO_BENCH_CONSTRUCTOR_N       training rows (default 1200 — CI smoke)
+  REPRO_BENCH_CONSTRUCTOR_EPOCHS  SGD epochs (default 12)
+  REPRO_BENCH_CONSTRUCTOR_SCHED_T schedule micro-bench iterations (default 1500)
+  REPRO_BENCH_CONSTRUCTOR_OUT     output JSON path (BENCH_constructor.json)
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs.chef_lr import ChefConfig
+from repro.core import lr_head, train_head
+from repro.core.backend import BACKENDS, get_backend
+from repro.core.deltagrad import (
+    DGConfig,
+    _build_correction_schedule_loop,
+    build_correction_schedule,
+    deltagrad_replay,
+)
+from repro.data import make_dataset
+from repro.dist.sharding import trajectory_spec
+from repro.utils.timing import time_fn
+
+
+def _schedule_microbench(T: int, record: dict) -> None:
+    """Vectorized vs loop `build_correction_schedule` at T >= 1k."""
+    key = jax.random.key(23)
+    sched = np.asarray(jax.random.randint(key, (T, 64), 0, 8 * T))
+    changed = np.arange(0, 8 * T, 97)
+    t_loop = time_fn(lambda: _build_correction_schedule_loop(sched, changed),
+                     iters=1, warmup=1)
+    t_vec = time_fn(lambda: build_correction_schedule(sched, changed),
+                    iters=1, warmup=1)
+    ci_v, _ = build_correction_schedule(sched, changed)
+    ci_l, _ = _build_correction_schedule_loop(sched, changed)
+    assert np.array_equal(np.asarray(ci_v), np.asarray(ci_l))
+    record["schedule_microbench"] = {
+        "T": T, "t_loop_s": t_loop, "t_vectorized_s": t_vec,
+        "speedup": t_loop / t_vec,
+    }
+    emit("constructor_schedule_loop", t_loop, f"T={T}")
+    emit("constructor_schedule_vectorized", t_vec,
+         f"T={T};speedup={t_loop / t_vec:.1f}x")
+
+
+def run(backends=None, out_path=None) -> dict:
+    n = int(os.environ.get("REPRO_BENCH_CONSTRUCTOR_N", "1200"))
+    epochs = int(os.environ.get("REPRO_BENCH_CONSTRUCTOR_EPOCHS", "12"))
+    sched_T = int(os.environ.get("REPRO_BENCH_CONSTRUCTOR_SCHED_T", "1500"))
+    if backends is None:
+        backends = list(BACKENDS)
+    # reference first: it is the parity oracle the other backends assert
+    # against (skipped if the caller excludes it)
+    backends = sorted(backends, key=lambda b: b != "reference")
+    ds = make_dataset(jax.random.key(13), n_train=n, n_val=150, n_test=300,
+                      feature_dim=64)
+    cfg = ChefConfig(n_epochs=epochs, batch_size=max(100, n // 4),
+                     lr=0.05, l2=0.05)
+    b = 10
+    idx = jnp.arange(b)
+    ds2 = ds.clean(idx, ds.y_true[idx])
+    Xa = lr_head.augment(ds.X)
+    dgc = DGConfig(cfg.dg_burn_in, cfg.dg_period, cfg.dg_history, cfg.lr, cfg.l2)
+    record = {
+        "bench": "constructor",
+        "n_train": int(ds.n),
+        "n_epochs": epochs,
+        "hw": jax.default_backend(),
+        "backends": {},
+    }
+    ref = {}
+    for name in backends:
+        bk = get_backend(name)
+        w, traj, sched = train_head(ds, cfg, cache=True, backend=bk)
+        t_train = time_fn(
+            lambda bk=bk: train_head(ds, cfg, cache=True, backend=bk)[0],
+            iters=2, warmup=1)
+        ci, cm = build_correction_schedule(np.asarray(sched), np.asarray(idx))
+        replay = lambda bk=bk, traj=traj, sched=sched, ci=ci, cm=cm: \
+            deltagrad_replay(traj[0], traj[1], sched, Xa, ds.y_prob, ds2.y_prob,
+                             ds.y_weight, ds2.y_weight, ci, cm, dgc,
+                             int(sched.shape[1]), backend=bk)
+        t_replay = time_fn(lambda: replay()[0], iters=2, warmup=1)
+        w_I, new_traj = replay()
+
+        spec = traj[0].sharding.spec if hasattr(traj[0].sharding, "spec") else None
+        if name == "reference":
+            ref = {"w": np.asarray(w), "traj": jax.tree.map(np.asarray, traj),
+                   "w_I": np.asarray(w_I),
+                   "new_traj": jax.tree.map(np.asarray, new_traj)}
+        elif ref:
+            # constructor parity contract: bit-identical, not allclose
+            assert np.array_equal(np.asarray(w), ref["w"]), name
+            assert all(np.array_equal(np.asarray(a), b)
+                       for a, b in zip(traj, ref["traj"])), name
+            assert np.array_equal(np.asarray(w_I), ref["w_I"]), name
+            assert all(np.array_equal(np.asarray(a), b)
+                       for a, b in zip(new_traj, ref["new_traj"])), name
+        if name == "pallas_sharded":
+            # the acceptance assert: the trajectory cache the replay consumed
+            # really is row-sharded over the mesh's data axes
+            want = trajectory_spec(bk.mesh, sched.shape[0])
+            assert want[0] is not None, "expected a shardable T axis"
+            assert spec == want, (spec, want)
+        record["backends"][name] = {
+            "t_sgd_train_s": t_train,
+            "t_deltagrad_replay_s": t_replay,
+            "replay_speedup_vs_train": t_train / t_replay,
+            "traj_sharding": str(spec),
+            "traj_shape": list(traj[0].shape),
+        }
+        emit(f"constructor_sgd_train_{name}", t_train, f"n={n};epochs={epochs}")
+        emit(f"constructor_deltagrad_replay_{name}", t_replay,
+             f"b={b};speedup_vs_train={t_train / t_replay:.1f}x;"
+             f"traj_sharding={spec}")
+
+    _schedule_microbench(sched_T, record)
+    out = out_path or os.environ.get("REPRO_BENCH_CONSTRUCTOR_OUT",
+                                     "BENCH_constructor.json")
+    with open(out, "w") as f:
+        json.dump(record, f, indent=2)
+    emit("constructor_artifact", 0.0, out)
+    return record
+
+
+if __name__ == "__main__":
+    run()

@@ -1,7 +1,10 @@
 """Kernel microbenchmarks across the Backend dispatch layer.
 
-Measures the three hot ops (infl_scores / lr_grad / lr_hvp) under any subset
-of the backends (`reference` | `pallas` | `pallas_sharded`). On CPU the
+Measures the five hot ops — the three selector-phase ops (infl_scores /
+lr_grad / lr_hvp) and the two constructor-phase ops (minibatch_grad /
+replay_correction, the fused gather kernels behind sgd_train and
+DeltaGrad-L replay) — under any subset of the backends (`reference` |
+`pallas` | `pallas_sharded`), so roofline tables cover both phases. On CPU the
 interesting number is the REFERENCE column (XLA) — interpret-mode Pallas
 timing measures the Python interpreter, so non-reference wall times are only
 emitted on TPU, where `pallas_sharded` additionally shows the scaling of the
@@ -38,28 +41,42 @@ def run(N: int = 8192, d: int = 2048, C: int = 2, backend: str = "all") -> list:
                   f"{jax.default_backend()} (interpret-mode Pallas measures "
                   "the Python interpreter)", file=sys.stderr)
             names = [n for n in names if n not in suppressed]
-    ks = jax.random.split(jax.random.key(0), 5)
+    ks = jax.random.split(jax.random.key(0), 6)
     Xa = jax.random.normal(ks[0], (N, d + 1))
     Y = jax.nn.softmax(jax.random.normal(ks[1], (N, C)))
     w = jax.random.normal(ks[2], (C, d + 1)) * 0.1
     v = jax.random.normal(ks[3], (C, d + 1)) * 0.1
     w8 = jnp.ones((N,))
     P = lr_head.probs(w, Xa)
+    # constructor-phase op inputs: a gathered mini-batch and a correction set
+    bs = min(1024, N)
+    r = min(32, bs)
+    idx = jax.random.randint(ks[4], (bs,), 0, N)
+    Y_new = jnp.roll(Y, 1, axis=1)
+    w8_new = jnp.ones((N,))
+    ci = jax.random.randint(ks[5], (r,), 0, N)
+    cm = jnp.ones((r,))
     hw = jax.default_backend()
     rows = []
 
     t_ref = {}
     for name in names:
         bk = get_backend(name)
+        # (op, fn, matmul-equivalents, rows the matmuls run over)
         pairs = [
-            ("infl_scores", lambda: bk.infl_scores(v, Xa, P, Y, 0.8), 1),
-            ("lr_grad", lambda: bk.lr_grad(w, Xa, Y, w8, 0.05), 2),
-            ("lr_hvp", lambda: bk.lr_hvp(w, v, Xa, w8, 0.05), 2),
+            ("infl_scores", lambda: bk.infl_scores(v, Xa, P, Y, 0.8), 1, N),
+            ("lr_grad", lambda: bk.lr_grad(w, Xa, Y, w8, 0.05), 2, N),
+            ("lr_hvp", lambda: bk.lr_hvp(w, v, Xa, w8, 0.05), 2, N),
+            ("minibatch_grad",
+             lambda: bk.minibatch_grad(w, Xa, Y, w8, idx, 0.05), 2, bs),
+            ("replay_correction",
+             lambda: bk.replay_correction(w, Xa, Y, Y_new, w8, w8_new,
+                                          ci, cm, bs), 2, r),
         ]
-        for op, fn, matmuls in pairs:
+        for op, fn, matmuls, n_rows in pairs:
             fn = fn if name != "reference" else jax.jit(fn)
             t = time_fn(fn, iters=5)
-            flops = 2 * N * (d + 1) * C * matmuls
+            flops = 2 * n_rows * (d + 1) * C * matmuls
             derived = f"gflops={flops / t / 1e9:.1f};hw={hw}"
             if name == "reference":
                 t_ref[op] = t

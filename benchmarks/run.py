@@ -8,6 +8,10 @@ Prints ``name,us_per_call,derived`` CSV lines.
   exp4  Table 14     — vary per-round batch b
   clean (service)    — pipelined vs blocking scheduler wall-clock per backend
                        (writes the BENCH_cleaning.json artifact)
+  constructor        — sgd_train + deltagrad_replay per backend, with
+                       bit-parity + trajectory-sharding asserts and the
+                       correction-schedule micro-bench (writes the
+                       BENCH_constructor.json artifact)
   kern  (framework)  — kernel microbench
   roof  (assignment) — roofline table from the dry-run artifacts
 
@@ -24,7 +28,8 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
-                    help="comma list: exp1,exp2,exp3,exp4,clean,kern,roof")
+                    help="comma list: exp1,exp2,exp3,exp4,clean,constructor,"
+                         "kern,roof")
     ap.add_argument("--backend", default="all",
                     help="kern suite backends: 'all' or comma list of "
                          "reference,pallas,pallas_sharded")
@@ -33,6 +38,7 @@ def main() -> None:
 
     from benchmarks import (
         bench_cleaning,
+        bench_constructor,
         bench_kernels,
         exp1_quality,
         exp2_increm,
@@ -47,6 +53,7 @@ def main() -> None:
         ("exp4", exp4_vary_b.run),
         ("exp1", exp1_quality.run),
         ("clean", bench_cleaning.run),
+        ("constructor", bench_constructor.run),
         ("kern", lambda: bench_kernels.run(backend=args.backend)),
         ("roof", roofline_table.run),
     ]

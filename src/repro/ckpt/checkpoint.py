@@ -85,6 +85,9 @@ def restore_checkpoint(ckpt_dir, tree_like: Any, step: Optional[int] = None,
     """Restore into the structure of `tree_like`. When `shardings` (a pytree
     of NamedSharding) is given, leaves are device_put onto it — this is the
     elastic-resharding path (the target mesh may differ from the saving one).
+    Individual sharding leaves may be None to leave that leaf as a host
+    array (partial resharding: e.g. only a session's [T, C, d+1] trajectory
+    caches go back onto the mesh, everything else stays host-side).
     """
     ckpt_dir = Path(ckpt_dir)
     if step is None:
@@ -97,10 +100,13 @@ def restore_checkpoint(ckpt_dir, tree_like: Any, step: Optional[int] = None,
     data = np.load(d / "shard_h0.npz")
     leaves_like, _, treedef = _flatten(tree_like)
     leaves = []
-    sh_leaves = jax.tree_util.tree_leaves(shardings) if shardings is not None else None
+    sh_leaves = (
+        jax.tree_util.tree_leaves(shardings, is_leaf=lambda x: x is None)
+        if shardings is not None else None
+    )
     for i, like in enumerate(leaves_like):
         arr = data[f"leaf_{i}"]
-        if sh_leaves is not None:
+        if sh_leaves is not None and sh_leaves[i] is not None:
             arr = jax.device_put(arr, sh_leaves[i])
         leaves.append(arr)
     return jax.tree_util.tree_unflatten(treedef, leaves), step

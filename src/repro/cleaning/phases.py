@@ -213,7 +213,10 @@ class Constructor(Protocol):
 class DeltaGradConstructor:
     """DeltaGrad-L incremental replay against the round-(k-1) cache
     (Section 4.2 item (2)): cached gradients were computed on the old labels;
-    corrections cover only this round's b samples."""
+    corrections cover only this round's b samples. The replay dispatches
+    through the session's `Backend` (explicit batch gradients + fused
+    corrections; bit-identical across backends) and keeps the refreshed
+    [T, C, d+1] trajectory row-sharded on pallas_sharded."""
 
     def construct(self, session, idx, labels) -> ConstructorResult:
         ds_old = session.ds
@@ -223,21 +226,25 @@ class DeltaGradConstructor:
             session.traj[0], session.traj[1], session.sched, session.Xa,
             ds_old.y_prob, ds_new.y_prob, ds_old.y_weight, ds_new.y_weight,
             ci, cm, session.dgc, int(session.sched.shape[1]),
+            backend=session.backend,
         )
-        return ConstructorResult(ds_new, w, traj, session.sched)
+        return ConstructorResult(ds_new, w, session.backend.shard_trajectory(traj),
+                                 session.sched)
 
 
 @dataclass(frozen=True)
 class RetrainConstructor:
-    """Full from-scratch retrain (the paper's Retrain baseline). Caches a
-    fresh trajectory only when a DeltaGrad round may still follow."""
+    """Full from-scratch retrain (the paper's Retrain baseline) — the SGD
+    scan dispatches through the session's `Backend`. Caches a fresh
+    trajectory only when a DeltaGrad round may still follow."""
 
     cache_trajectory: bool = False
 
     def construct(self, session, idx, labels) -> ConstructorResult:
         ds_new = session.ds.clean(idx, labels)
         w, traj, sched = train_head(ds_new, session.cfg,
-                                    cache=self.cache_trajectory)
+                                    cache=self.cache_trajectory,
+                                    backend=session.backend)
         return ConstructorResult(ds_new, w, traj if self.cache_trajectory else None,
                                  sched)
 

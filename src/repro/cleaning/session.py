@@ -94,7 +94,8 @@ class CleaningSession:
         cache the DeltaGrad / Increm-INFL provenance the later rounds need."""
         backend = get_backend(backend if backend is not None else cfg.backend,
                               chunk_rows=cfg.score_chunk)
-        w, traj, sched = train_head(ds, cfg, cache=need_trajectory)
+        w, traj, sched = train_head(ds, cfg, cache=need_trajectory,
+                                    backend=backend)
         session = cls(
             ds=ds, cfg=cfg, backend=backend, w=w, sched=sched,
             traj=traj if need_trajectory else None,
@@ -209,8 +210,12 @@ class CleaningSession:
             y_weight=jnp.asarray(state["y_weight"]),
             cleaned=jnp.asarray(state["cleaned"]),
         )
+        # a restored [T, C, d+1] trajectory goes back onto the row-sharded
+        # layout the constructor phase runs with (no-op off pallas_sharded;
+        # the general resharding policy lives in repro.dist.elastic)
         traj = (
-            (jnp.asarray(state["traj_ws"]), jnp.asarray(state["traj_gs"]))
+            backend.shard_trajectory(
+                (jnp.asarray(state["traj_ws"]), jnp.asarray(state["traj_gs"])))
             if int(state["has_traj"]) else None
         )
         prov = (

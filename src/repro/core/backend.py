@@ -27,6 +27,35 @@ The ops (all return f32, matching `repro.kernels.ref` oracles):
   lr_hvp(w, v, Xa, weights, l2, P=None) -> [C, d+1]   H(w) v
   infl_scores(v, Xa, P, Y, gamma)       -> [N, C]     Eq. (6) score matrix
   probs_scores(w, v, Xa, Y, gamma)      -> [N, C]     fused probs + Eq. (6)
+
+Constructor-phase ops (the DeltaGrad-L half of the speed story — every
+computation inside `lr_head.sgd_train` and `deltagrad.deltagrad_replay`
+dispatches through these, mirroring how the selector phase dispatches the
+four scoring ops above):
+
+  minibatch_grad(w, Xa, Y, weights, idx, l2)             -> [C, d+1]
+      gathered mini-batch gradient over B_t = Xa[idx] (Eq. 4 left term):
+      one fused gather+softmax+grad kernel on pallas; on pallas_sharded
+      Xa/Y/weights stay row-sharded and ONLY the gathered [bs, d+1] batch
+      rows are all-gathered (masked local take + psum) per step.
+  replay_correction(w, Xa, Y_old, Y_new, w_old, w_new,
+                    corr_idx, corr_mask, batch_size)     -> [C, d+1]
+      fused DeltaGrad correction over the changed slots of B_t (Eq. 4
+      right term, Section 4.2): one shared softmax feeds both the old- and
+      new-label residual branches; same sharded gather story.
+
+Constructor parity contract: the three backends produce BIT-IDENTICAL
+`sgd_train` weights/trajectories and `deltagrad_replay` results (not just
+allclose) — the kernels run the same floating-point program as the
+reference scan step, and the sharded gather is exact (each batch row owned
+by exactly one shard, psum adds zeros elsewhere). tests/test_backend.py
+asserts exact equality.
+
+Trajectory placement: `trajectory_sharding` / `constrain_trajectory` /
+`shard_trajectory` keep the [T, C, d+1] caches row-sharded over the mesh's
+data axes on pallas_sharded (rule: repro.dist.sharding.trajectory_spec),
+so the constructor phase scales with the selector phase instead of
+replicating T*C*(d+1) floats per device.
 """
 from __future__ import annotations
 
@@ -38,6 +67,29 @@ import jax
 import jax.numpy as jnp
 
 BACKENDS = ("reference", "pallas", "pallas_sharded")
+
+
+def _gather_rows_psum(rows, idx, axes):
+    """All-gather the global rows `idx` from row-sharded arrays, inside
+    shard_map: each device takes its local members of idx (masked local
+    take), the rest contribute zeros, and one psum over the data axes
+    assembles the replicated [bs, ...] batch. Exact, not approximate:
+    every batch row is owned by exactly one shard and the psum adds 0.0
+    everywhere else — which is why the sharded constructor path stays
+    bit-identical to the reference gather Xa[idx]."""
+    n_local = rows[0].shape[0]
+    flat = jnp.int32(0)
+    for a in axes:  # outermost data axis first (matches row-shard order)
+        flat = flat * jax.lax.psum(1, a) + jax.lax.axis_index(a)
+    lidx = idx - flat * n_local
+    ok = (lidx >= 0) & (lidx < n_local)
+    li = jnp.clip(lidx, 0, n_local - 1)
+    out = []
+    for r in rows:
+        g = jnp.take(r, li, axis=0)
+        g = jnp.where(ok.reshape((-1,) + (1,) * (r.ndim - 1)), g, 0.0)
+        out.append(jax.lax.psum(g, axes))
+    return out
 
 
 @functools.lru_cache(maxsize=128)
@@ -126,6 +178,103 @@ class Backend:
         Xp, Yp = (_pad_rows(a, mult)[0] for a in (Xa, Y))
         return _cached_sharded(self, "probs_scores", float(gamma))(w, v, Xp, Yp)[:n]
 
+    # ------------------------------------------------- constructor-phase ops
+    def minibatch_grad(self, w, Xa, Y, weights, idx, l2: float) -> jax.Array:
+        """Gathered mini-batch gradient over B_t = Xa[idx] (Eq. 4 left term):
+        the SGD-scan step of `sgd_train` and DeltaGrad-L's explicit
+        iterations. Bit-identical across backends (see module docstring)."""
+        if self.name == "reference":
+            from repro.core import lr_head
+
+            return lr_head.minibatch_grad_reference(w, Xa, Y, weights, idx, l2)
+        if self.name == "pallas":
+            from repro.kernels import ops
+
+            return ops.minibatch_grad(w, Xa, Y, weights, idx, l2)
+        from repro.kernels import ops
+        from repro.kernels.ops import _pad_rows
+
+        _, dp, lead = self._data_axes()
+        if lead is None:
+            return ops.minibatch_grad(w, Xa, Y, weights, idx, l2)
+        Xp, Yp, w8p = (_pad_rows(a, dp)[0] for a in (Xa, Y, weights))
+        return _cached_sharded(self, "minibatch_grad", float(l2))(
+            w, idx.astype(jnp.int32), Xp, Yp, w8p)
+
+    def replay_correction(self, w, Xa, Y_old, Y_new, w_old, w_new,
+                          corr_idx, corr_mask, batch_size: int) -> jax.Array:
+        """Fused DeltaGrad-L replay correction over the changed slots of B_t
+        (Eq. 4 right term): padded slots (corr_mask == 0) contribute exactly
+        zero. Bit-identical across backends."""
+        if self.name == "reference":
+            from repro.core import deltagrad
+
+            return deltagrad.replay_correction_reference(
+                w, Xa, Y_old, Y_new, w_old, w_new, corr_idx, corr_mask,
+                batch_size)
+        if self.name == "pallas":
+            from repro.kernels import ops
+
+            return ops.replay_correction(w, Xa, Y_old, Y_new, w_old, w_new,
+                                         corr_idx, corr_mask, batch_size)
+        from repro.kernels import ops
+        from repro.kernels.ops import _pad_rows
+
+        _, dp, lead = self._data_axes()
+        if lead is None:
+            return ops.replay_correction(w, Xa, Y_old, Y_new, w_old, w_new,
+                                         corr_idx, corr_mask, batch_size)
+        Xp, Yop, Ynp, wop, wnp = (
+            _pad_rows(a, dp)[0] for a in (Xa, Y_old, Y_new, w_old, w_new))
+        return _cached_sharded(self, "replay_correction", float(batch_size))(
+            w, corr_idx.astype(jnp.int32), corr_mask, Xp, Yop, Ynp, wop, wnp)
+
+    # ------------------------------------------- trajectory cache placement
+    def trajectory_sharding(self, n_steps: int):
+        """NamedSharding for a [T, C, d+1] trajectory cache leaf, or None on
+        unsharded backends (rule: repro.dist.sharding.trajectory_spec)."""
+        if self.name != "pallas_sharded":
+            return None
+        from jax.sharding import NamedSharding
+
+        from repro.dist.sharding import trajectory_spec
+
+        return NamedSharding(self.mesh, trajectory_spec(self.mesh, n_steps))
+
+    def constrain_trajectory(self, traj):
+        """Inside-jit sharding constraint for a (ws, gs) trajectory pytree:
+        tells GSPMD to keep the caches row-sharded over the data axes instead
+        of replicating them. No-op on unsharded backends / None trajectory."""
+        if traj is None:
+            return traj
+        sh = self.trajectory_sharding(jax.tree_util.tree_leaves(traj)[0].shape[0])
+        if sh is None:
+            return traj
+        return jax.tree.map(lambda t: jax.lax.with_sharding_constraint(t, sh), traj)
+
+    def constrain_replicated(self, x):
+        """Inside-jit constraint pinning x fully replicated (the L-BFGS ring
+        buffers of deltagrad_replay). No-op on unsharded backends."""
+        if self.name != "pallas_sharded":
+            return x
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        sh = NamedSharding(self.mesh, PartitionSpec())
+        return jax.lax.with_sharding_constraint(x, sh)
+
+    def shard_trajectory(self, traj):
+        """Outside-jit committed placement of a trajectory pytree onto the
+        row-sharded layout (device_put). jit normalizes a 1-device constraint
+        spec away; committing here makes the layout visible on the arrays
+        (`.sharding.spec`), which checkpoints/restores and the sharding
+        asserts in tests and BENCH_constructor rely on."""
+        if traj is None:
+            return traj
+        sh = self.trajectory_sharding(jax.tree_util.tree_leaves(traj)[0].shape[0])
+        if sh is None:
+            return traj
+        return jax.tree.map(lambda t: jax.device_put(t, sh), traj)
+
     def unsharded(self) -> "Backend":
         """Variant for small-N side computations (e.g. the validation
         gradient) where shard/psum overhead outweighs the win: reference for
@@ -161,22 +310,48 @@ class Backend:
 
     def _chunked(self, kernel, row_args, n_rows: int, reduce: bool = False):
         """Run `kernel(*rows)` over row chunks of <= chunk_rows via lax.map
-        (bounds per-device VMEM/HBM working set). The chunk count is the
-        smallest divisor of n_rows giving chunks within the cap — _row_mult
-        pads rows so a balanced divisor always exists. `reduce=True` sums the
-        per-chunk results (partial-sum kernels) instead of restacking rows."""
+        (bounds per-device VMEM/HBM working set). The chunk count comes from
+        `_chunk_count`: the smallest *divisor* of n_rows giving chunks within
+        the cap, or the balanced count with zero row padding when no sane
+        divisor exists (prime-ish n_rows). Zero-padded rows are exact no-ops:
+        weight 0 for the partial-sum kernels, sliced back off otherwise.
+        `reduce=True` sums the per-chunk results instead of restacking rows."""
         ck = self.chunk_rows
         if ck <= 0 or n_rows <= ck:
             return kernel(*row_args)
-        k = -(-n_rows // ck)
-        while n_rows % k:
-            k += 1
-        cs = n_rows // k
+        k = self._chunk_count(n_rows)
+        cs = -(-n_rows // k)
+        if k * cs != n_rows:  # balanced-padding fallback
+            pad = k * cs - n_rows
+            row_args = [jnp.pad(a, [(0, pad)] + [(0, 0)] * (a.ndim - 1))
+                        for a in row_args]
         parts = [a.reshape((k, cs) + a.shape[1:]) for a in row_args]
         out = jax.lax.map(lambda t: kernel(*t), tuple(parts))
         if reduce:
             return jnp.sum(out, axis=0)
-        return out.reshape((n_rows,) + out.shape[2:])
+        return out.reshape((k * cs,) + out.shape[2:])[:n_rows]
+
+    def _chunk_count(self, n_rows: int) -> int:
+        """Chunk count for _chunked: smallest divisor of n_rows >= the
+        balanced count ceil(n_rows / chunk_rows), found by walking the
+        divisors of n_rows (sqrt enumeration) — the old `while n % k: k += 1`
+        integer walk degenerated to 1-row chunks on prime-ish sizes. Capped
+        by the same balanced logic as `_row_mult`: a divisor whose chunks
+        shrink below half the balanced size is rejected in favour of the
+        balanced count itself (the caller then zero-pads one partial tail)."""
+        k_min = -(-n_rows // self.chunk_rows)
+        divs = set()
+        i = 1
+        while i * i <= n_rows:
+            if n_rows % i == 0:
+                divs.add(i)
+                divs.add(n_rows // i)
+            i += 1
+        k_div = min((d for d in divs if d >= k_min), default=None)
+        cs_bal = -(-n_rows // k_min)
+        if k_div is not None and n_rows // k_div >= (cs_bal + 1) // 2:
+            return k_div
+        return k_min
 
     def _row_mult(self, dp: int, n: int) -> int:
         """Row-padding multiple: shards must be equal and, when the local
@@ -232,6 +407,31 @@ class Backend:
                 )
 
             return shard_map_compat(local, self.mesh, (rep2, row2, row2, row2), row2)
+
+        if op == "minibatch_grad":
+            def local(ww, idxg, xs, ys, w8s):
+                xb, yb, wb = _gather_rows_psum((xs, ys, w8s), idxg, ba)
+                # gather is the identity here (the batch is already
+                # assembled), so the fused kernel's take() is exact
+                return ops.minibatch_grad(
+                    ww, xb, yb, wb,
+                    jnp.arange(idxg.shape[0], dtype=jnp.int32), static)
+
+            return shard_map_compat(
+                local, self.mesh, (rep2, Pspec(None), row2, row2, row1), rep2)
+
+        if op == "replay_correction":
+            def local(ww, ci, cm, xs, yos, yns, wos, wns):
+                xb, yo, yn, wo, wn = _gather_rows_psum(
+                    (xs, yos, yns, wos, wns), ci, ba)
+                return ops.replay_correction(
+                    ww, xb, yo, yn, wo, wn,
+                    jnp.arange(ci.shape[0], dtype=jnp.int32), cm, int(static))
+
+            return shard_map_compat(
+                local, self.mesh,
+                (rep2, Pspec(None), Pspec(None), row2, row2, row2, row1, row1),
+                rep2)
 
         if op == "lr_grad":
             def local(ww, vv, xs, ys, w8s):

@@ -25,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import lr_head
+from repro.core.backend import Backend, get_backend
 
 
 @dataclass(frozen=True)
@@ -84,7 +85,32 @@ def build_correction_schedule(idx_schedule: np.ndarray, changed_idx: np.ndarray)
     """For each iteration t, the changed-sample slots inside B_t.
 
     Returns (corr_idx [T, r_max] int32 — global sample ids, padded with 0;
-             corr_mask [T, r_max] f32 — 1 for real entries)."""
+             corr_mask [T, r_max] f32 — 1 for real entries).
+
+    Vectorized: one `np.isin` membership test over the whole [T, bs]
+    schedule plus a stable argsort that compacts each row's hits to the
+    front IN BATCH-SLOT ORDER — the same hit ordering the old per-row
+    Python scan produced (the correction einsum's summation order, and
+    therefore replay bit-parity, depends on it). The old double loop is
+    kept as `_build_correction_schedule_loop` (equivalence test + the
+    micro-benchmark in benchmarks/bench_constructor.py; at T >= 1k the
+    vectorized form wins by well over an order of magnitude)."""
+    idx_np = np.asarray(idx_schedule)
+    changed = np.asarray(changed_idx).reshape(-1)
+    hit = np.isin(idx_np, changed)  # [T, bs]
+    r_max = max(1, int(hit.sum(axis=1).max(initial=0)))
+    order = np.argsort(~hit, axis=1, kind="stable")[:, :r_max]
+    sel = np.take_along_axis(hit, order, axis=1)
+    ids = np.take_along_axis(idx_np, order, axis=1)
+    corr_idx = np.where(sel, ids, 0).astype(np.int32)
+    corr_mask = sel.astype(np.float32)
+    return jnp.asarray(corr_idx), jnp.asarray(corr_mask)
+
+
+def _build_correction_schedule_loop(idx_schedule: np.ndarray,
+                                    changed_idx: np.ndarray):
+    """Pre-vectorization reference (Python double loop over T x bs): the
+    oracle `build_correction_schedule` must match exactly."""
     idx_np = np.asarray(idx_schedule)
     changed = set(int(c) for c in np.asarray(changed_idx).tolist())
     T = idx_np.shape[0]
@@ -99,6 +125,18 @@ def build_correction_schedule(idx_schedule: np.ndarray, changed_idx: np.ndarray)
     return jnp.asarray(corr_idx), jnp.asarray(corr_mask)
 
 
+def replay_correction_reference(w, Xa, Y_old, Y_new, w_old, w_new,
+                                corr_idx, corr_mask, batch_size: int):
+    """Reference (jnp) replay correction for ONE iteration's changed slots:
+    (1/|B|) Σ_changed [ 1·∇F(w, z_new) − γ·∇F(w, z_old) ]  (Eq. 4 / §4.2).
+    The fused Pallas kernel reproduces this program bit-for-bit."""
+    xb = Xa[corr_idx]  # [r, d+1]
+    P = lr_head.probs(w, xb)
+    g_new = (P - Y_new[corr_idx]) * (w_new[corr_idx] * corr_mask)[:, None]
+    g_old = (P - Y_old[corr_idx]) * (w_old[corr_idx] * corr_mask)[:, None]
+    return jnp.einsum("nc,nd->cd", g_new - g_old, xb) / batch_size
+
+
 # ----------------------------------------------------------------------------
 # Replay
 # ----------------------------------------------------------------------------
@@ -106,7 +144,7 @@ def build_correction_schedule(idx_schedule: np.ndarray, changed_idx: np.ndarray)
 
 @partial(
     jax.jit,
-    static_argnames=("cfg", "batch_size"),
+    static_argnames=("cfg", "batch_size", "backend"),
 )
 def deltagrad_replay(
     cache_ws,  # [T, C, d+1] cached parameters
@@ -121,8 +159,18 @@ def deltagrad_replay(
     corr_mask,  # [T, r_max]
     cfg: DGConfig,
     batch_size: int,
+    backend: "Backend | None" = None,
 ):
-    """Algorithm 2 adapted for label cleaning (Section 4.2). Returns w^I_T."""
+    """Algorithm 2 adapted for label cleaning (Section 4.2). Returns w^I_T.
+
+    Constructor-phase dispatch: the explicit-iteration batch gradients and
+    the per-iteration corrections go through `Backend.minibatch_grad` /
+    `Backend.replay_correction` (bit-identical across the three backends).
+    On pallas_sharded, Xa/Y stay row-sharded, only the gathered batch rows
+    are all-gathered per step, the replayed [T, C, d+1] trajectory is
+    constrained row-sharded over the data axes, and the L-BFGS (ΔW, ΔG)
+    ring buffers are pinned replicated."""
+    bk = get_backend(backend)
     T, C, D = cache_ws.shape
     Pdim = C * D
     m0 = cfg.history
@@ -131,20 +179,12 @@ def deltagrad_replay(
     explicit = (t_arr < cfg.burn_in) | (((t_arr - cfg.burn_in) % cfg.period) == 0)
 
     def batch_grad(w, idx):
-        xb, yb, wb = Xa[idx], Y_old[idx], w_old[idx]
-        P = lr_head.probs(w, xb)
-        return (
-            jnp.einsum("nc,nd->cd", (P - yb) * wb[:, None], xb) / idx.shape[0]
-            + cfg.l2 * w
-        )
+        return bk.minibatch_grad(w, Xa, Y_old, w_old, idx, cfg.l2)
 
     def correction(w, ci, cm):
         """(1/|B|) Σ_changed [ 1·∇F(w, z_new) − γ·∇F(w, z_old) ]."""
-        xb = Xa[ci]  # [r, d+1]
-        P = lr_head.probs(w, xb)
-        g_new = (P - Y_new[ci]) * (w_new[ci] * cm)[:, None]
-        g_old = (P - Y_old[ci]) * (w_old[ci] * cm)[:, None]
-        return jnp.einsum("nc,nd->cd", g_new - g_old, xb) / batch_size
+        return bk.replay_correction(w, Xa, Y_old, Y_new, w_old, w_new,
+                                    ci, cm, batch_size)
 
     def step(carry, xs):
         wI, Sbuf, Ybuf, n_pairs = carry
@@ -179,11 +219,11 @@ def deltagrad_replay(
         return (w_next, Sbuf, Ybuf, n_pairs), (wI, g)
 
     w0 = cache_ws[0]
-    Sbuf = jnp.zeros((m0, Pdim), jnp.float32)
-    Ybuf = jnp.zeros((m0, Pdim), jnp.float32)
+    Sbuf = bk.constrain_replicated(jnp.zeros((m0, Pdim), jnp.float32))
+    Ybuf = bk.constrain_replicated(jnp.zeros((m0, Pdim), jnp.float32))
     (w_fin, *_), new_traj = jax.lax.scan(
         step,
         (w0, Sbuf, Ybuf, jnp.zeros((), jnp.int32)),
         (idx_schedule, cache_ws, cache_gs, explicit, corr_idx, corr_mask),
     )
-    return w_fin, new_traj
+    return w_fin, bk.constrain_trajectory(new_traj)

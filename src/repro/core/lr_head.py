@@ -114,6 +114,16 @@ def per_sample_hessian_norm(w, Xa, P: Optional[jax.Array] = None,
     return jnp.maximum(a_norm, 0.0) * xsq
 
 
+def minibatch_grad_reference(w, Xa, Y, weights, idx, l2: float) -> jax.Array:
+    """Reference (jnp) gathered mini-batch gradient over B_t = Xa[idx] —
+    the SGD-scan step and DeltaGrad-L's explicit iterations (Eq. 4 left
+    term). This exact floating-point program is what the fused Pallas
+    gather+grad kernel reproduces bit-for-bit (constructor parity)."""
+    xb, yb, wb = Xa[idx], Y[idx], weights[idx]
+    P = probs(w, xb)
+    return jnp.einsum("nc,nd->cd", (P - yb) * wb[:, None], xb) / idx.shape[0] + l2 * w
+
+
 def per_sample_loss(w, Xa, Y) -> jax.Array:
     z = (Xa @ w.T).astype(jnp.float32)
     logp = jax.nn.log_softmax(z, axis=-1)
@@ -146,7 +156,8 @@ def batch_schedule(seed: int, n: int, batch_size: int, n_epochs: int) -> jax.Arr
     return idx
 
 
-@partial(jax.jit, static_argnames=("l2", "lr", "momentum", "cache_trajectory"))
+@partial(jax.jit,
+         static_argnames=("l2", "lr", "momentum", "cache_trajectory", "backend"))
 def sgd_train(
     w0,
     Xa,
@@ -158,15 +169,23 @@ def sgd_train(
     lr: float,
     momentum: float = 0.0,
     cache_trajectory: bool = True,
+    backend: Optional[Backend] = None,
 ):
     """Plain SGD (paper Section 5.1) over a precomputed batch schedule,
-    optionally caching (w_t, g_t) for DeltaGrad-L."""
+    optionally caching (w_t, g_t) for DeltaGrad-L.
+
+    Every step's gathered mini-batch gradient dispatches through the
+    `Backend` (constructor-phase mirror of the scoring dispatch): reference
+    jnp, fused Pallas gather+grad kernel, or the shard_map path where
+    Xa/Y/weights stay row-sharded and only the gathered [bs, d+1] batch is
+    all-gathered per step. All three produce bit-identical weights and
+    trajectories. On pallas_sharded the cached [T, C, d+1] trajectory is
+    constrained row-sharded over the mesh's data axes."""
+    bk = get_backend(backend)
 
     def step(carry, idx):
         w, mom = carry
-        xb, yb, wb = Xa[idx], Y[idx], weights[idx]
-        P = probs(w, xb)
-        g = jnp.einsum("nc,nd->cd", (P - yb) * wb[:, None], xb) / idx.shape[0] + l2 * w
+        g = bk.minibatch_grad(w, Xa, Y, weights, idx, l2)
         mom_new = momentum * mom + g if momentum else mom
         w_new = w - lr * (mom_new if momentum else g)
         out = (w, g) if cache_trajectory else None
@@ -174,4 +193,4 @@ def sgd_train(
 
     mom0 = jnp.zeros_like(w0)
     (w_fin, _), traj = jax.lax.scan(step, (w0, mom0), idx_schedule)
-    return w_fin, traj
+    return w_fin, bk.constrain_trajectory(traj)

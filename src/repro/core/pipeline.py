@@ -69,8 +69,16 @@ def _evaluate(w, ds: "ChefDataset"):
     return float(f1v), float(f1t)
 
 
-def train_head(ds: "ChefDataset", cfg: ChefConfig, w0=None, cache: bool = True):
-    """Initialization-step training (plain SGD, paper Section 5.1)."""
+def train_head(ds: "ChefDataset", cfg: ChefConfig, w0=None, cache: bool = True,
+               backend: "Backend | str | None" = None):
+    """Initialization-step training (plain SGD, paper Section 5.1).
+
+    The SGD scan dispatches through `backend` (None -> reference, matching
+    the pre-dispatch behaviour bit-for-bit); all three backends produce
+    bit-identical weights and trajectories. On pallas_sharded the cached
+    [T, C, d+1] trajectory comes back committed row-sharded over the mesh's
+    data axes (`Backend.shard_trajectory`)."""
+    bk = get_backend(backend)
     Xa = lr_head.augment(ds.X)
     if w0 is None:
         w0 = lr_head.init_head(jax.random.key(cfg.seed), ds.n_classes, ds.X.shape[1])
@@ -78,8 +86,9 @@ def train_head(ds: "ChefDataset", cfg: ChefConfig, w0=None, cache: bool = True):
     w, traj = lr_head.sgd_train(
         w0, Xa, ds.y_prob, ds.y_weight, sched,
         l2=cfg.l2, lr=cfg.lr, momentum=cfg.momentum, cache_trajectory=cache,
+        backend=bk,
     )
-    return w, traj, sched
+    return w, bk.shard_trajectory(traj), sched
 
 
 def run_chef(

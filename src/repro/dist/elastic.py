@@ -35,14 +35,25 @@ def default_leading_spec(shape, dp: int, lead, min_shard_rows: int) -> P:
 
 
 def target_shardings(tree_like: Any, mesh, shardings: Any = None, *,
-                     min_shard_rows: Optional[int] = None) -> Any:
+                     min_shard_rows: Optional[int] = None,
+                     overrides: Optional[dict] = None) -> Any:
     """A pytree of NamedSharding on `mesh` matching `tree_like`.
 
     Explicit `shardings` (full pytree of NamedSharding) wins; otherwise the
     default policy row-shards batch-leading leaves over the mesh's data axes
     and replicates everything else (see `default_leading_spec`) — correct for
     TrainState-shaped trees on data-parallel meshes and always safe
-    (resharding happens lazily on first use under jit anyway).
+    (resharding happens lazily on first use under jit anyway). The policy
+    covers the constructor phase's [T, C, d+1] DeltaGrad trajectory caches
+    (`traj_ws`/`traj_gs` in a CleaningSession state tree): T is
+    batch-leading, so a divisible trajectory restores row-sharded — the
+    layout `deltagrad_replay` consumes — while the [C, d+1] head and other
+    parameter leaves stay replicated.
+
+    `overrides` maps key-path fragments (matched against
+    `jax.tree_util.keystr`, e.g. ``"traj_ws"``) to explicit PartitionSpecs;
+    a None spec forces replication. Overrides beat the default policy —
+    the escape hatch when a leaf's shape lies about its role.
 
     `min_shard_rows` defaults to max(2 * dp, 16): at least two rows per
     device AND enough rows that the leaf plausibly is data, not parameters.
@@ -54,11 +65,15 @@ def target_shardings(tree_like: Any, mesh, shardings: Any = None, *,
     if min_shard_rows is None:
         min_shard_rows = max(2 * dp, 16)
 
-    def assign(leaf):
+    def assign(path, leaf):
+        key = jax.tree_util.keystr(path)
+        for frag, spec in (overrides or {}).items():
+            if frag in key:
+                return NamedSharding(mesh, spec if spec is not None else P())
         return NamedSharding(
             mesh, default_leading_spec(np.shape(leaf), dp, lead, min_shard_rows))
 
-    return jax.tree.map(assign, tree_like)
+    return jax.tree_util.tree_map_with_path(assign, tree_like)
 
 
 def elastic_restore(ckpt_dir, tree_like: Any, mesh, *, step: Optional[int] = None,

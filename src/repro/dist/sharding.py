@@ -70,6 +70,19 @@ def data_axes_info(mesh) -> tuple:
     return ba, dp, lead
 
 
+def trajectory_spec(mesh, n_steps: int) -> P:
+    """Sharding rule for the constructor phase's [T, C, d+1] caches (the
+    DeltaGrad-L trajectory ws/gs and the replayed new_traj): row-shard the
+    iteration axis T over the mesh's data axes when it splits into equal
+    shards, replicate otherwise (same divisibility fallback as the rulebook).
+    The L-BFGS (ΔW, ΔG) ring buffers are deliberately NOT covered here — they
+    are [m0, C*(d+1)] with tiny m0 and stay replicated."""
+    _, dp, lead = data_axes_info(mesh)
+    if lead is None or n_steps == 0 or n_steps % dp:
+        return P()
+    return P(lead, None, None)
+
+
 def make_resolver(mesh, *, fsdp: bool = True) -> Callable:
     """Returns resolve(axes, shape) -> PartitionSpec for `mesh`.
 

@@ -1,0 +1,77 @@
+"""Pallas kernel: fused gather + mini-batch LR-head gradient.
+
+The constructor-phase hot op (paper Eq. 4, left term): every SGD training
+step and every explicit DeltaGrad-L iteration computes
+
+    g = (1/|B_t|) Σ_{i in B_t} γ_i (p_i − y_i) x̃_iᵀ + λ w
+
+over a *gathered* mini-batch B_t = Xa[idx]. This kernel fuses the row gather
+with the logits matmul -> masked softmax -> weighted residual -> gradient
+matmul epilogue, so the gathered [bs, d+1] batch never round-trips through
+HBM between the gather and the two MXU dots.
+
+Bit-parity contract: the kernel body is the *same* floating-point program as
+`lr_head.minibatch_grad_reference` (same gather, same softmax algorithm, same
+einsum contraction, same divide/add order). ops.py calls it unpadded in
+interpret mode, so reference / pallas / pallas_sharded produce bit-identical
+SGD trajectories (asserted in tests/test_backend.py) — the property the
+DeltaGrad-L replay parity rests on.
+
+TPU deployment note: the gather is expressed as `jnp.take` on a resident
+block, which bounds the in-kernel working set to the *local row shard* — the
+pallas_sharded backend is the path that scales N past one device's memory
+(each device gathers only its shard's members; see Backend._build_sharded).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(idx_ref, x_ref, y_ref, w8_ref, w_ref, o_ref, *,
+            l2: float, n_batch: int, c_actual: int):
+    idx = idx_ref[...]
+    xb = jnp.take(x_ref[...], idx, axis=0)  # [bs, D]
+    yb = jnp.take(y_ref[...], idx, axis=0)  # [bs, C]
+    wb = jnp.take(w8_ref[...], idx, axis=0)  # [bs]
+    w = w_ref[...]
+    z = xb @ w.T  # [bs, C]
+    # mask padded class lanes out of the softmax (no-op when unpadded:
+    # where(True, z, ...) returns z bitwise, preserving reference parity)
+    lane = jax.lax.broadcasted_iota(jnp.int32, z.shape, 1)
+    z = jnp.where(lane < c_actual, z, -1e30)
+    p = jax.nn.softmax(z.astype(jnp.float32), axis=-1)
+    g = jnp.einsum("nc,nd->cd", (p - yb) * wb[:, None], xb) / n_batch
+    o_ref[...] = g + l2 * w.astype(jnp.float32)
+
+
+def minibatch_grad_pallas(
+    w: jax.Array,  # [C, D]
+    Xa: jax.Array,  # [N, D]
+    Y: jax.Array,  # [N, C]
+    weights: jax.Array,  # [N]
+    idx: jax.Array,  # [bs] int32 row ids into Xa/Y/weights
+    l2: float,
+    *,
+    n_batch: int | None = None,
+    c_actual: int | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused gather + batch gradient; returns [C, D] f32.
+
+    `n_batch` is the true mini-batch size used as the 1/|B_t| divisor — it
+    differs from idx.shape[0] only when ops.py padded idx with pointers to a
+    zeroed row (TPU sublane alignment)."""
+    C, D = w.shape
+    kernel = functools.partial(
+        _kernel, l2=float(l2), n_batch=int(n_batch or idx.shape[0]),
+        c_actual=int(c_actual or C),
+    )
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((C, D), jnp.float32),
+        interpret=interpret,
+    )(idx, Xa, Y, weights, w)

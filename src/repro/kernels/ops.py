@@ -16,6 +16,8 @@ from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.infl_scores import infl_scores_pallas
 from repro.kernels.lr_grad import lr_grad_pallas
 from repro.kernels.lr_hvp import lr_hvp_pallas
+from repro.kernels.minibatch_grad import minibatch_grad_pallas
+from repro.kernels.replay_correction import replay_correction_pallas
 
 
 def _interpret() -> bool:
@@ -111,6 +113,63 @@ def lr_hvp(w, v, Xa, weights, l2: float, P=None):
                       c_actual=C, interpret=_interpret())
     h = h * (Xp.shape[0] / N)
     return h[:C, : Xa.shape[1]] + l2 * v.astype(jnp.float32)
+
+
+def _pad_gather_rows(arrs, mult: int):
+    """Row-pad arrays that will be *gathered from*: always leaves at least one
+    zeroed tail row, so padded gather indices (pointing at the original row
+    count) land on zeros and contribute exactly 0."""
+    return [_pad_rows(a, mult)[0] if a.shape[0] % mult else
+            jnp.pad(a, [(0, mult)] + [(0, 0)] * (a.ndim - 1)) for a in arrs]
+
+
+@functools.partial(jax.jit, static_argnames=("l2",))
+def minibatch_grad(w, Xa, Y, weights, idx, l2: float):
+    """Fused gather + mini-batch gradient (constructor-phase hot op).
+
+    Interpret mode runs the kernel UNPADDED: the body is then the same
+    floating-point program as the reference scan step, which is what makes
+    sgd_train/deltagrad_replay bit-identical across backends. On TPU, lanes
+    pad to 128 and the gathered batch pads to sublane multiples with indices
+    pointing at a zeroed row (weight 0 => exact-zero contribution)."""
+    idx = idx.astype(jnp.int32)
+    if _interpret():
+        return minibatch_grad_pallas(w, Xa, Y, weights, idx, l2, interpret=True)
+    C = w.shape[0]
+    bs = idx.shape[0]
+    lane = 128
+    wp = _pad_dim(_pad_dim(w, 0, lane), 1, lane)
+    Xp, Yp, w8p = _pad_gather_rows(
+        [_pad_dim(Xa, 1, lane), _pad_dim(Y, 1, lane), weights], 8)
+    idxp = jnp.pad(idx, (0, (-bs) % 8), constant_values=Xa.shape[0])
+    g = minibatch_grad_pallas(wp, Xp, Yp, w8p, idxp, l2, n_batch=bs,
+                              c_actual=C, interpret=False)
+    return g[:C, : Xa.shape[1]]
+
+
+@functools.partial(jax.jit, static_argnames=("batch_size",))
+def replay_correction(w, Xa, Y_old, Y_new, w_old, w_new, ci, cm,
+                      batch_size: int):
+    """Fused gather + DeltaGrad-L replay correction. Same interpret-unpadded
+    bit-parity contract as `minibatch_grad`; TPU row padding extends ci with
+    pointers to a zeroed row and cm with zeros (exact-zero contribution)."""
+    ci = ci.astype(jnp.int32)
+    if _interpret():
+        return replay_correction_pallas(w, Xa, Y_old, Y_new, w_old, w_new,
+                                        ci, cm, batch_size, interpret=True)
+    C = w.shape[0]
+    r = ci.shape[0]
+    lane = 128
+    wp = _pad_dim(_pad_dim(w, 0, lane), 1, lane)
+    Xp, Yop, Ynp, wop, wnp = _pad_gather_rows(
+        [_pad_dim(Xa, 1, lane), _pad_dim(Y_old, 1, lane),
+         _pad_dim(Y_new, 1, lane), w_old, w_new], 8)
+    pad = (-r) % 8
+    cip = jnp.pad(ci, (0, pad), constant_values=Xa.shape[0])
+    cmp_ = jnp.pad(cm, (0, pad))
+    g = replay_correction_pallas(wp, Xp, Yop, Ynp, wop, wnp, cip, cmp_,
+                                 batch_size, c_actual=C, interpret=False)
+    return g[:C, : Xa.shape[1]]
 
 
 def flash_attention(q, k, v, qpos, kpos, spec):

@@ -1,0 +1,71 @@
+"""Pallas kernel: fused DeltaGrad-L replay correction (paper Eq. 4, right
+term, adapted for label cleaning in Section 4.2).
+
+Per replay iteration the updated mini-batch gradient is the cached/estimated
+old-batch gradient plus a correction over ONLY the changed samples in B_t:
+
+    (1/|B_t|) Σ_{i in R∩B_t} [ 1·∇F(w, z_i^new) − γ·∇F(w, z_i^old) ]
+
+This kernel fuses the row gather (the r_max changed slots of the iteration,
+ids `ci` padded with 0, real entries flagged by `cm`) with ONE shared
+logits+softmax and both residual branches — the old/new label pair reuses
+p_i, so the whole correction is one [r, D]x[D, C] dot, one softmax, and one
+[C, r]x[r, D] dot.
+
+Bit-parity contract: same floating-point program as
+`deltagrad.replay_correction_reference` (see minibatch_grad.py for why that
+matters); ops.py keeps it unpadded in interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(ci_ref, cm_ref, x_ref, yo_ref, yn_ref, wo_ref, wn_ref, w_ref,
+            o_ref, *, batch_size: int, c_actual: int):
+    ci = ci_ref[...]
+    cm = cm_ref[...]
+    xb = jnp.take(x_ref[...], ci, axis=0)  # [r, D]
+    yo = jnp.take(yo_ref[...], ci, axis=0)  # [r, C] old probabilistic labels
+    yn = jnp.take(yn_ref[...], ci, axis=0)  # [r, C] cleaned labels
+    wo = jnp.take(wo_ref[...], ci, axis=0)  # [r] old per-sample weights (γ)
+    wn = jnp.take(wn_ref[...], ci, axis=0)  # [r] new per-sample weights (1)
+    w = w_ref[...]
+    z = xb @ w.T
+    lane = jax.lax.broadcasted_iota(jnp.int32, z.shape, 1)
+    z = jnp.where(lane < c_actual, z, -1e30)
+    p = jax.nn.softmax(z.astype(jnp.float32), axis=-1)
+    g_new = (p - yn) * (wn * cm)[:, None]
+    g_old = (p - yo) * (wo * cm)[:, None]
+    o_ref[...] = jnp.einsum("nc,nd->cd", g_new - g_old, xb) / batch_size
+
+
+def replay_correction_pallas(
+    w: jax.Array,  # [C, D]
+    Xa: jax.Array,  # [N, D]
+    Y_old: jax.Array,  # [N, C]
+    Y_new: jax.Array,  # [N, C]
+    w_old: jax.Array,  # [N]
+    w_new: jax.Array,  # [N]
+    ci: jax.Array,  # [r] int32 changed-sample ids (padded with 0)
+    cm: jax.Array,  # [r] f32 1 for real entries, 0 for padding
+    batch_size: int,
+    *,
+    c_actual: int | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused gather + correction; returns [C, D] f32. Padded slots (cm == 0)
+    contribute exactly zero, so ci row padding is free."""
+    C, D = w.shape
+    kernel = functools.partial(
+        _kernel, batch_size=int(batch_size), c_actual=int(c_actual or C)
+    )
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((C, D), jnp.float32),
+        interpret=interpret,
+    )(ci, cm, Xa, Y_old, Y_new, w_old, w_new, w)

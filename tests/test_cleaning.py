@@ -72,9 +72,22 @@ def test_kill_restore_bitwise_parity(ds, tmp_path, backend):
     session = CleaningSession.restore(tmp_path, ds, CFG, backend=backend)
     assert session.round == 1
     assert session.ledger.spent == 10
+    if backend == "pallas_sharded":
+        # the restored [T, C, d+1] trajectory cache comes back committed onto
+        # the row-sharded layout the constructor phase replays against
+        from repro.dist.sharding import trajectory_spec
+
+        spec = trajectory_spec(session.backend.mesh, session.traj[0].shape[0])
+        assert spec[0] is not None, "expected a row-sharded leading axis"
+        for t in session.traj:
+            assert t.sharding.spec == spec, t.sharding
     sched = make_scheduler(session, method="infl", selector="increm_tight",
                            constructor="deltagrad")
     res = sched.run()
+    if backend == "pallas_sharded":
+        # DeltaGrad rounds preserve the sharded-cache layout round to round
+        for t in session.traj:
+            assert t.sharding.spec == spec, t.sharding
 
     # identical selections (cleaned sets), labels, and weights — bit-for-bit
     np.testing.assert_array_equal(np.asarray(res.dataset.cleaned),

@@ -50,6 +50,25 @@ def test_correction_schedule_finds_all_occurrences():
     assert hits == [{1}, {5}, {1, 5}]
 
 
+@pytest.mark.parametrize("n_changed", [0, 1, 13])
+def test_correction_schedule_matches_loop_reference(rng, n_changed):
+    """The vectorized (np.isin + stable argsort) schedule builder must
+    reproduce the old per-row Python scan EXACTLY — same ids, same hit
+    ordering within each row (the correction sum order, and therefore replay
+    bit-parity, depends on it), same padding."""
+    from repro.core.deltagrad import _build_correction_schedule_loop
+
+    ks = jax.random.split(rng, 2)
+    sched = np.asarray(jax.random.randint(ks[0], (57, 13), 0, 90))
+    changed = np.asarray(
+        jax.random.choice(ks[1], 90, (n_changed,), replace=False))
+    ci_v, cm_v = build_correction_schedule(sched, changed)
+    ci_l, cm_l = _build_correction_schedule_loop(sched, changed)
+    np.testing.assert_array_equal(np.asarray(ci_v), np.asarray(ci_l))
+    np.testing.assert_array_equal(np.asarray(cm_v), np.asarray(cm_l))
+    assert ci_v.dtype == ci_l.dtype and cm_v.dtype == cm_l.dtype
+
+
 @pytest.mark.parametrize("b", [5, 20])
 def test_replay_close_to_retrain(rng, b):
     ds = make_dataset(rng, n_train=800, n_val=100, n_test=200, feature_dim=24)

@@ -46,6 +46,45 @@ def test_batch_axes(mesh):
     assert batch_axes(mesh) == ("data",)
 
 
+def test_elastic_target_shardings_session_trajectory():
+    """target_shardings on a CleaningSession-shaped state tree: the
+    [T, C, d+1] trajectory caches restore row-sharded (the layout
+    deltagrad_replay consumes), parameter/scalar leaves stay replicated, and
+    key-path `overrides` beat the default policy."""
+    from repro.dist.elastic import target_shardings
+
+    mesh = abstract_mesh((2, 1), ("data", "model"))
+    state = {
+        "w": np.zeros((2, 49)),
+        "traj_ws": np.zeros((500, 2, 49)),
+        "traj_gs": np.zeros((500, 2, 49)),
+        "round": np.int32(3),
+    }
+    sh = target_shardings(state, mesh)
+    assert sh["traj_ws"].spec == P("data", None, None)
+    assert sh["traj_gs"].spec == P("data", None, None)
+    assert sh["w"].spec == P()
+    assert sh["round"].spec == P()
+    # overrides: force the caches replicated (None) / a leaf sharded
+    sh = target_shardings(state, mesh, overrides={"traj_": None})
+    assert sh["traj_ws"].spec == P() and sh["traj_gs"].spec == P()
+    sh = target_shardings(state, mesh, overrides={"['w']": P("data", None)})
+    assert sh["w"].spec == P("data", None)
+
+
+def test_trajectory_spec_rule():
+    """dist.sharding.trajectory_spec: row-shard T over the data axes when it
+    splits evenly, replicate otherwise (divisibility fallback)."""
+    from repro.dist.sharding import trajectory_spec
+
+    mesh = abstract_mesh((4, 1), ("data", "model"))
+    assert trajectory_spec(mesh, 48) == P("data", None, None)
+    assert trajectory_spec(mesh, 50) == P()  # 50 % 4 != 0 -> replicate
+    assert trajectory_spec(mesh, 0) == P()
+    no_data = abstract_mesh((4,), ("model",))
+    assert trajectory_spec(no_data, 48) == P()
+
+
 def test_elastic_default_policy_batch_vs_params():
     """target_shardings' default policy must row-shard batch-leading leaves
     only: a small [C, d+1] head whose class count happens to divide the DP
