@@ -1,0 +1,149 @@
+"""Serving benchmark: Backend-dispatched prefill + decode per backend.
+
+For each backend this times a jitted prefill and the steady-state decode
+step on a reduced model, asserts the serving parity contract — prefill AND
+per-step decode logits BIT-IDENTICAL to the reference backend (exact
+equality, not allclose) — and records the committed sharding of the KV
+cache: on `pallas_sharded` the kv-head axis must be sharded over the mesh
+`model` axis (asserted, not just reported).
+
+On CPU the non-reference wall times measure interpret-mode Pallas (the
+Python-level kernel emulation) — the honest numbers are the reference column
+and the parity/sharding assertions; TPU runs produce real kernel timings.
+
+Emits CSV lines via `benchmarks.common.emit` AND writes a
+``BENCH_serving.json`` artifact (the CI serving-smoke job uploads it).
+
+Env knobs:
+  REPRO_BENCH_SERVING_ARCH     model config (default olmo-1b, reduced)
+  REPRO_BENCH_SERVING_BATCH    batch slots (default 4)
+  REPRO_BENCH_SERVING_PROMPT   prompt length (default 32)
+  REPRO_BENCH_SERVING_DECODE   decode steps timed/verified (default 8)
+  REPRO_BENCH_SERVING_OUT      output JSON path (BENCH_serving.json)
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import get_config, reduced
+from repro.core.backend import BACKENDS, get_backend
+from repro.dist.sharding import kv_cache_spec
+from repro.models import Model
+from repro.models.attention import KVCache, QuantKVCache
+from repro.serving import greedy
+from repro.utils.timing import time_fn
+
+
+def _assert_kv_sharded(cache, mesh) -> str:
+    """Every KVCache leaf must sit head-sharded over the mesh model axis
+    (the layout `Backend.shard_kv_cache` commits). Returns the spec str."""
+    specs = []
+
+    def walk(node):
+        if isinstance(node, (KVCache, QuantKVCache)):
+            want = kv_cache_spec(mesh, node.k.shape, node.k.ndim - 2)
+            assert want[node.k.ndim - 2] == "model", "expected a shardable head axis"
+            assert node.k.sharding.spec == want, (node.k.sharding, want)
+            assert node.v.sharding.spec == want, (node.v.sharding, want)
+            specs.append(str(want))
+            return
+        if isinstance(node, dict):
+            for x in node.values():
+                walk(x)
+        elif isinstance(node, tuple):
+            for x in node:
+                walk(x)
+
+    walk(cache)
+    assert specs, "no KV cache leaves found"
+    return specs[0]
+
+
+def run(backends=None, out_path=None) -> dict:
+    """Run the serving suite; returns (and writes) the benchmark record."""
+    arch = os.environ.get("REPRO_BENCH_SERVING_ARCH", "olmo-1b")
+    batch = int(os.environ.get("REPRO_BENCH_SERVING_BATCH", "4"))
+    prompt = int(os.environ.get("REPRO_BENCH_SERVING_PROMPT", "32"))
+    steps = int(os.environ.get("REPRO_BENCH_SERVING_DECODE", "8"))
+    if backends is None:
+        backends = list(BACKENDS)
+    # reference first: it is the parity oracle the other backends assert
+    # against (skipped if the caller excludes it)
+    backends = sorted(backends, key=lambda b: b != "reference")
+
+    cfg = reduced(get_config(arch))
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (batch, prompt), 0,
+                              cfg.vocab_size).astype(jnp.int32)
+    cache_len = prompt + steps
+    record = {
+        "bench": "serving",
+        "arch": cfg.name,
+        "batch": batch,
+        "prompt_len": prompt,
+        "decode_steps": steps,
+        "hw": jax.default_backend(),
+        "backends": {},
+    }
+    ref = {}
+    for name in backends:
+        bk = get_backend(name)
+        prefill = jax.jit(lambda p, t, bk=bk: model.prefill(
+            p, {"tokens": t}, cache_len=cache_len, backend=bk))
+        decode = jax.jit(lambda p, c, t, bk=bk: model.decode_step(
+            p, c, {"tokens": t}, backend=bk))
+
+        logits, cache = prefill(params, toks)
+        if name == "pallas_sharded":
+            cache = bk.shard_kv_cache(cache)
+            spec = _assert_kv_sharded(cache, bk.mesh)
+        else:
+            spec = "None"
+        nxt = greedy(logits)  # the engine's own next-token rule
+        dec_logits = []
+        for _ in range(steps):
+            logits, cache = decode(params, cache, nxt)
+            dec_logits.append(np.asarray(logits))
+            nxt = greedy(logits)
+
+        t_prefill = time_fn(lambda: prefill(params, toks)[0], iters=2, warmup=1)
+        c0 = prefill(params, toks)[1]
+        t_decode = time_fn(lambda: decode(params, c0, nxt)[0], iters=max(2, steps // 2),
+                           warmup=1)
+        if name == "reference":
+            ref = {"prefill": np.asarray(prefill(params, toks)[0]),
+                   "decode": dec_logits}
+        elif ref:
+            # serving parity contract: bit-identical logits, not allclose
+            assert np.array_equal(np.asarray(prefill(params, toks)[0]),
+                                  ref["prefill"]), name
+            for i, (a, b) in enumerate(zip(dec_logits, ref["decode"])):
+                assert np.array_equal(a, b), (name, f"decode step {i}")
+        record["backends"][name] = {
+            "t_prefill_s": t_prefill,
+            "t_decode_step_s": t_decode,
+            "decode_tok_per_s": batch / t_decode,
+            "kv_sharding": spec,
+        }
+        emit(f"serving_prefill_{name}", t_prefill,
+             f"arch={cfg.name};B={batch};S={prompt}")
+        emit(f"serving_decode_{name}", t_decode,
+             f"tok_s={batch / t_decode:.1f};kv_sharding={spec}")
+
+    out = out_path or os.environ.get("REPRO_BENCH_SERVING_OUT",
+                                     "BENCH_serving.json")
+    with open(out, "w") as f:
+        json.dump(record, f, indent=2)
+    emit("serving_artifact", 0.0, out)
+    return record
+
+
+if __name__ == "__main__":
+    run()

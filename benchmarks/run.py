@@ -12,6 +12,9 @@ Prints ``name,us_per_call,derived`` CSV lines.
                        bit-parity + trajectory-sharding asserts and the
                        correction-schedule micro-bench (writes the
                        BENCH_constructor.json artifact)
+  serving            — Backend-dispatched prefill/decode per backend, with
+                       bit-parity + KV-cache-sharding asserts (writes the
+                       BENCH_serving.json artifact)
   kern  (framework)  — kernel microbench
   roof  (assignment) — roofline table from the dry-run artifacts
 
@@ -29,7 +32,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma list: exp1,exp2,exp3,exp4,clean,constructor,"
-                         "kern,roof")
+                         "serving,kern,roof")
     ap.add_argument("--backend", default="all",
                     help="kern suite backends: 'all' or comma list of "
                          "reference,pallas,pallas_sharded")
@@ -40,6 +43,7 @@ def main() -> None:
         bench_cleaning,
         bench_constructor,
         bench_kernels,
+        bench_serving,
         exp1_quality,
         exp2_increm,
         exp3_deltagrad,
@@ -54,6 +58,7 @@ def main() -> None:
         ("exp1", exp1_quality.run),
         ("clean", bench_cleaning.run),
         ("constructor", bench_constructor.run),
+        ("serving", bench_serving.run),
         ("kern", lambda: bench_kernels.run(backend=args.backend)),
         ("roof", roofline_table.run),
     ]

@@ -1,7 +1,17 @@
 """Batched serving example: continuous-batching greedy decode through the
-ServeEngine for any assigned architecture.
+Backend-dispatched ServeEngine for any assigned architecture.
 
-    PYTHONPATH=src python examples/serve_model.py --arch recurrentgemma-9b
+    PYTHONPATH=src python examples/serve_model.py --arch recurrentgemma-9b \
+        --backend pallas
+
+`--backend` picks the attention implementation for prefill AND decode —
+`reference` (pure jnp, the oracle), `pallas` (fused flash/decode kernels),
+or `pallas_sharded` (kernels shard_mapped head-wise over the mesh model
+axis, KV cache sharded with them). It mirrors `ChefConfig.backend` and the
+benchmark CLIs' flag, and because the serving parity contract guarantees
+bit-identical logits across the three, changing it can never change the
+generated tokens — only the speed and the number of devices the cache
+spreads over.
 """
 import argparse
 
@@ -9,16 +19,20 @@ from repro.launch import serve as serve_mod
 
 
 def main():
+    """Parse args and run one request wave through the serve driver."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="olmo-1b")
     ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--backend", default="reference",
+                    help="reference | pallas | pallas_sharded")
     args = ap.parse_args()
     out = serve_mod.main([
         "--arch", args.arch, "--requests", str(args.requests),
+        "--backend", args.backend,
         "--batch", "4", "--prompt_len", "24", "--max_new", "8",
     ])
     print(f"served {out['requests']} requests / {out['tokens']} tokens "
-          f"in {out['wall_s']:.2f}s")
+          f"in {out['wall_s']:.2f}s on backend={out['backend']}")
 
 
 if __name__ == "__main__":

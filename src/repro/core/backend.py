@@ -56,6 +56,39 @@ Trajectory placement: `trajectory_sharding` / `constrain_trajectory` /
 data axes on pallas_sharded (rule: repro.dist.sharding.trajectory_spec),
 so the constructor phase scales with the selector phase instead of
 replicating T*C*(d+1) floats per device.
+
+Serving ops (the "serve the cleaned model" half of the north star — every
+attention call in `Model.prefill` / `Model.decode_step` and the ServeEngine
+dispatches through these):
+
+  flash_attention(q, k, v, qpos, kpos, spec)   -> [B, Sq, Hq, D]
+      prefill / full-sequence GQA attention (causal + sliding window +
+      logit softcap). reference = the pure-jnp blocked online-softmax
+      mirror of the Pallas kernel; pallas = the flash kernel;
+      pallas_sharded = the kernel shard_mapped HEAD-WISE over the mesh
+      `model` axis (each device owns Hkv/m kv heads and their G query
+      heads — exact, attention is per-head independent).
+  decode_attention(q, k, v, valid, spec)       -> [B, 1, Hq, D]
+      one new token against the ring-bounded KV cache (k, v [B, W, Hkv, D];
+      valid [W] from repro.models.attention.ring_valid). Same three forms;
+      on pallas_sharded the CACHE ITSELF stays head-sharded over `model`
+      (rule: repro.dist.sharding.kv_cache_spec, committed by
+      `shard_kv_cache`), so per-device cache memory — the resource that
+      caps continuous-batching concurrency — scales with devices.
+
+Serving parity contract: prefill AND decode logits are BIT-IDENTICAL across
+all three backends (exact equality, not allclose) — the reference forms run
+the same floating-point program as the interpret-mode kernels
+(kernels/flash_attention._kv_block_step, kernels/decode_attention
+._decode_cell are shared verbatim), and the head split is exact.
+tests/test_serving.py asserts it; `benchmarks.run --only serving`
+re-asserts it in CI (BENCH_serving.json).
+
+Which backend to pick: `reference` for debugging and as the oracle (always
+correct, XLA-fused, fastest off-TPU); `pallas` on a single TPU (fused
+kernels, no collective overhead); `pallas_sharded` when N (cleaning) or
+batch x cache (serving) exceeds one device — requires a mesh and pays
+psum/all-gather latency that only wins at scale.
 """
 from __future__ import annotations
 
@@ -93,8 +126,10 @@ def _gather_rows_psum(rows, idx, axes):
 
 
 @functools.lru_cache(maxsize=128)
-def _cached_sharded(backend: "Backend", op: str, static: float):
-    """One jitted shard_map callable per (Backend, op, static scalar).
+def _cached_sharded(backend: "Backend", op: str, static):
+    """One jitted shard_map callable per (Backend, op, static key) — the
+    static key is a scalar for the scoring/constructor ops and the (hashable)
+    AttnSpec for the serving ops.
 
     Building the closure + shard_map wrapper inline on every call would hand
     JAX a fresh function object each time — every eager invocation (each CG
@@ -121,6 +156,11 @@ class Backend:
 
     # ------------------------------------------------------------- dispatch
     def lr_grad(self, w, Xa, Y, weights, l2: float) -> jax.Array:
+        """Eq. 1 batch gradient of the weighted LR objective -> [C, d+1] f32.
+
+        reference = closed-form jnp; pallas = fused softmax+residual+matmul
+        kernel; pallas_sharded = per-shard partial sums psum'd over the data
+        axes (rows of Xa/Y/weights split across devices)."""
         if self.name == "reference":
             from repro.core import lr_head
 
@@ -132,6 +172,10 @@ class Backend:
         return self._sharded_reduce("lr_grad", (Xa, Y, weights), w, None, l2)
 
     def lr_hvp(self, w, v, Xa, weights, l2: float, P=None) -> jax.Array:
+        """Gauss-Newton (== CE Hessian) vector product H(w) v -> [C, d+1]
+        f32 — the CG / power-method inner loop. Same three forms as
+        `lr_grad`; P optionally carries precomputed probs (reference/pallas
+        recompute them fused when None)."""
         if self.name == "reference":
             from repro.core import lr_head
 
@@ -143,6 +187,9 @@ class Backend:
         return self._sharded_reduce("lr_hvp", (Xa, weights), w, v, l2)
 
     def infl_scores(self, v, Xa, P, Y, gamma: float) -> jax.Array:
+        """Eq. 6 INFL score matrix [N, C] — the selector-phase hot loop.
+        Prefer `probs_scores` when P is not already materialized: on the
+        sharded backend it saves a full-N pad + reshard per round."""
         if self.name == "reference":
             from repro.core.influence import infl_scores_reference
 
@@ -228,6 +275,99 @@ class Backend:
             _pad_rows(a, dp)[0] for a in (Xa, Y_old, Y_new, w_old, w_new))
         return _cached_sharded(self, "replay_correction", float(batch_size))(
             w, corr_idx.astype(jnp.int32), corr_mask, Xp, Yop, Ynp, wop, wnp)
+
+    # ---------------------------------------------------------- serving ops
+    def _model_axis_divides(self, n_kv_heads: int) -> bool:
+        """True when the mesh has a `model` axis whose size splits the kv
+        heads evenly — the precondition for the head-wise sharded serving
+        path (Hq = G*Hkv divides automatically). False -> fall back to the
+        unsharded kernel, mirroring the rulebook's divisibility fallback."""
+        size = dict(self.mesh.shape).get("model", 0) if self.mesh else 0
+        return size > 0 and n_kv_heads % size == 0
+
+    def flash_attention(self, q, k, v, qpos, kpos, spec) -> jax.Array:
+        """Prefill / full-sequence GQA attention (model layout: q [B,Sq,Hq,D];
+        k, v [B,Skv,Hkv,D]; qpos/kpos absolute positions) -> [B,Sq,Hq,D].
+
+        Bit-identical across backends (serving parity contract, module
+        docstring). On pallas_sharded the heads are split over the mesh
+        `model` axis; q/k/v arrive replicated or batch-sharded and leave in
+        the same layout the caller handed in."""
+        from repro.kernels import ops
+
+        if self.name == "reference":
+            return ops.flash_attention_ref(q, k, v, qpos, kpos, spec)
+        if self.name == "pallas" or not self._model_axis_divides(k.shape[2]):
+            return ops.flash_attention(q, k, v, qpos, kpos, spec)
+        return _cached_sharded(self, "flash_attention", spec)(
+            q, k, v, qpos.astype(jnp.int32), kpos.astype(jnp.int32))
+
+    def decode_attention(self, q, k, v, valid, spec) -> jax.Array:
+        """Single-token decode attention over the ring KV cache: q
+        [B,1,Hq,D]; k, v [B,W,Hkv,D] dense cache contents; valid [W] slot
+        mask (repro.models.attention.ring_valid — ring-bounded for
+        sliding-window archs) -> [B,1,Hq,D].
+
+        Bit-identical across backends. On pallas_sharded the cache stays
+        head-sharded over `model` (see `shard_kv_cache`) and each device
+        attends only its own heads — no cache collective on the decode
+        critical path."""
+        from repro.kernels import ops
+
+        if self.name == "reference":
+            return ops.decode_attention_ref(q, k, v, valid, spec)
+        if self.name == "pallas" or not self._model_axis_divides(k.shape[2]):
+            return ops.decode_attention(q, k, v, valid, spec)
+        return _cached_sharded(self, "decode_attention", spec)(q, k, v, valid)
+
+    # ------------------------------------------------ KV cache placement
+    def kv_cache_sharding(self, shape, head_axis: int):
+        """NamedSharding for one serving KV-cache leaf (kv heads over the
+        mesh `model` axis; rule: repro.dist.sharding.kv_cache_spec), or None
+        on unsharded backends."""
+        if self.name != "pallas_sharded":
+            return None
+        from jax.sharding import NamedSharding
+
+        from repro.dist.sharding import kv_cache_spec
+
+        return NamedSharding(self.mesh, kv_cache_spec(self.mesh, shape, head_axis))
+
+    def shard_kv_cache(self, cache):
+        """Outside-jit committed placement of a serving cache pytree: every
+        KVCache / QuantKVCache leaf goes head-sharded over the mesh `model`
+        axis (k/v: axis ndim-2; quant scales: axis ndim-1); recurrent state
+        (SSM / RG-LRU), cross-attention caches, and the pos counter stay
+        untouched. No-op on unsharded backends — call sites never branch on
+        the backend name. The ServeEngine commits the prefill cache through
+        this so continuous batching scales cache memory with devices."""
+        if self.name != "pallas_sharded" or cache is None:
+            return cache
+        from repro.models.attention import KVCache, QuantKVCache
+
+        def put(x, head_axis):
+            return jax.device_put(x, self.kv_cache_sharding(x.shape, head_axis))
+
+        def walk(node):
+            if isinstance(node, QuantKVCache):
+                return QuantKVCache(
+                    put(node.k, node.k.ndim - 2), put(node.v, node.v.ndim - 2),
+                    put(node.k_scale, node.k_scale.ndim - 1),
+                    put(node.v_scale, node.v_scale.ndim - 1))
+            if isinstance(node, KVCache):
+                return KVCache(put(node.k, node.k.ndim - 2),
+                               put(node.v, node.v.ndim - 2))
+            if isinstance(node, dict):
+                return {k: walk(v) for k, v in node.items()}
+            # recurse into PLAIN tuples only (the blocks/tail containers):
+            # isinstance(…, tuple) would also match the recurrent-state
+            # NamedTuples (RGLRUState, SSDState) and rebuild them as bare
+            # tuples, crashing the next decode's attribute access
+            if type(node) is tuple:
+                return tuple(walk(x) for x in node)
+            return node
+
+        return walk(cache)
 
     # ------------------------------------------- trajectory cache placement
     def trajectory_sharding(self, n_steps: int):
@@ -379,6 +519,25 @@ class Backend:
         rep2 = Pspec(None, None)
         row2 = Pspec(lead, None)
         row1 = Pspec(lead)
+
+        if op in ("flash_attention", "decode_attention"):
+            # serving ops shard the HEAD axis over `model` (not the data
+            # axes): each device runs the unsharded kernel on its own
+            # Hkv/m kv heads — exact, attention is per-head independent
+            heads4 = Pspec(None, None, "model", None)
+            if op == "flash_attention":
+                def local(qq, kk, vv, qp, kp):
+                    return ops.flash_attention(qq, kk, vv, qp, kp, static)
+
+                return shard_map_compat(
+                    local, self.mesh,
+                    (heads4, heads4, heads4, Pspec(None), Pspec(None)), heads4)
+
+            def local(qq, kk, vv, vm):
+                return ops.decode_attention(qq, kk, vv, vm, static)
+
+            return shard_map_compat(
+                local, self.mesh, (heads4, heads4, heads4, Pspec(None)), heads4)
 
         if op == "probs":
             def local(ww, xs):

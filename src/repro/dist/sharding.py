@@ -83,6 +83,25 @@ def trajectory_spec(mesh, n_steps: int) -> P:
     return P(lead, None, None)
 
 
+def kv_cache_spec(mesh, shape: Sequence[int], head_axis: int) -> P:
+    """Sharding rule for serving KV-cache leaves: shard the kv-head axis over
+    the mesh `model` axis so per-device cache memory — the resource that caps
+    continuous-batching concurrency — scales with tensor-parallel degree.
+
+    `shape` is the full leaf shape (possibly with a stacked leading layers
+    dim), `head_axis` the index of the kv-head dimension (ndim-2 for KVCache
+    k/v, ndim-1 for the QuantKVCache scales). Same divisibility fallback as
+    the rulebook: no `model` axis in the mesh, or a head count that does not
+    split evenly, resolves to replicated instead of failing (e.g. 3 kv heads
+    on a 2-wide model axis)."""
+    size = dict(mesh.shape).get("model", 0)
+    if size == 0 or shape[head_axis] % size:
+        return P()
+    parts = [None] * len(shape)
+    parts[head_axis] = "model"
+    return P(*parts)
+
+
 def make_resolver(mesh, *, fsdp: bool = True) -> Callable:
     """Returns resolve(axes, shape) -> PartitionSpec for `mesh`.
 

@@ -1,13 +1,18 @@
 """Pallas TPU kernels for the perf-critical compute:
 
-  infl_scores      — fused Eq. 6 INFL score matrix (sample-selector hot loop)
-  lr_grad          — fused LR-head batch gradient (training / CG rhs)
-  lr_hvp           — fused Hessian-vector product (CG / power-method inner loop)
-  flash_attention  — GQA flash attention forward (serving hot path)
+  infl_scores       — fused Eq. 6 INFL score matrix (sample-selector hot loop)
+  lr_grad           — fused LR-head batch gradient (training / CG rhs)
+  lr_hvp            — fused Hessian-vector product (CG / power-method inner loop)
+  minibatch_grad    — fused gather + mini-batch gradient (Eq. 4 left term)
+  replay_correction — fused DeltaGrad-L correction (Eq. 4 right term)
+  flash_attention   — GQA flash attention forward (serving prefill hot path)
+  decode_attention  — single-token ring-cache attention (serving decode hot path)
 
-Each kernel: <name>.py (pl.pallas_call + BlockSpec) with a pure-jnp oracle in
-ref.py and a jit'd padding/dispatch wrapper in ops.py. On CPU (this
-container) they run with interpret=True; on TPU they compile.
+Each kernel: <name>.py (pl.pallas_call + BlockSpec) with a pure-jnp oracle
+(ref.py, or an in-module `*_reference` mirror for the bit-parity ops) and a
+jit'd padding/dispatch wrapper in ops.py. On CPU (this container) they run
+with interpret=True; on TPU they compile. See README.md for the per-kernel
+shape/backend table.
 """
 from repro.kernels import ops, ref
 

@@ -12,7 +12,14 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.decode_attention import (
+    decode_attention_pallas,
+    decode_attention_reference,
+)
+from repro.kernels.flash_attention import (
+    flash_attention_pallas,
+    flash_attention_reference,
+)
 from repro.kernels.infl_scores import infl_scores_pallas
 from repro.kernels.lr_grad import lr_grad_pallas
 from repro.kernels.lr_hvp import lr_hvp_pallas
@@ -60,6 +67,7 @@ def _block_n_padded(n: int) -> int:
 
 @functools.partial(jax.jit, static_argnames=("gamma",))
 def infl_scores(v, Xa, P, Y, gamma: float):
+    """Fused Eq. 6 INFL score matrix [N, C] (pads to TPU tiles, slices back)."""
     C = v.shape[0]
     lane = 128 if not _interpret() else 8
     vp = _pad_dim(_pad_dim(v, 0, lane), 1, lane)
@@ -80,6 +88,7 @@ def infl_scores(v, Xa, P, Y, gamma: float):
 
 @functools.partial(jax.jit, static_argnames=("l2",))
 def lr_grad(w, Xa, Y, weights, l2: float):
+    """Fused Eq. 1 batch gradient [C, d+1] (padded rows carry weight 0)."""
     C = w.shape[0]
     N = Xa.shape[0]
     lane = 128 if not _interpret() else 8
@@ -99,6 +108,7 @@ def lr_grad(w, Xa, Y, weights, l2: float):
 
 @functools.partial(jax.jit, static_argnames=("l2",))
 def lr_hvp(w, v, Xa, weights, l2: float, P=None):
+    """Fused Hessian-vector product H(w) v -> [C, d+1] (CG inner loop)."""
     del P  # probs are recomputed inside the fused kernel
     C = w.shape[0]
     N = Xa.shape[0]
@@ -172,17 +182,98 @@ def replay_correction(w, Xa, Y_old, Y_new, w_old, w_new, ci, cm,
     return g[:C, : Xa.shape[1]]
 
 
-def flash_attention(q, k, v, qpos, kpos, spec):
-    """Model-layer adapter: q [B,S,H,D] -> kernel layout [B,H,S,D]."""
+def _attn_blocks(Sq: int, Skv: int) -> tuple:
+    """(block_q, block_k) for the flash kernel: the LARGEST divisor of the
+    sequence length <= 128. The old `128-or-1` rule degraded every
+    non-multiple-of-128 length over 128 (now routine: mid-stream join
+    prefills run at arbitrary widths) to 1-row blocks — tens of thousands
+    of grid cells per head; a divisor walk caps at 128 comparisons at trace
+    time and only primes still fall to 1. Shared by the pallas path and the
+    reference mirror so both walk the identical block decomposition — a
+    precondition of the serving bit-parity contract."""
+    def pick(S: int) -> int:
+        for b in range(min(128, S), 0, -1):
+            if S % b == 0:
+                return b
+        return 1
+
+    return pick(Sq), pick(Skv)
+
+
+def _flash_adapt(inner, q, k, v, qpos, kpos, spec, **extra):
+    """Shared model-layout adapter for both flash forms: q [B,S,H,D] ->
+    kernel layout [B,H,S,D], one block-size choice, one position cast. ONE
+    function on purpose — if the two forms adapted separately, an edit to
+    one side would silently break the bit-parity contract."""
     qt = q.transpose(0, 2, 1, 3)
     kt = k.transpose(0, 2, 1, 3)
     vt = v.transpose(0, 2, 1, 3)
-    Sq, Skv = qt.shape[2], kt.shape[2]
-    bq = min(128, Sq) if Sq % min(128, Sq) == 0 else 1
-    bk = min(128, Skv) if Skv % min(128, Skv) == 0 else 1
-    o = flash_attention_pallas(
+    bq, bk = _attn_blocks(qt.shape[2], kt.shape[2])
+    o = inner(
         qt, kt, vt, qpos.astype(jnp.int32), kpos.astype(jnp.int32),
-        causal=spec.causal, window=spec.window,
-        block_q=bq, block_k=bk, interpret=_interpret(),
+        causal=spec.causal, window=spec.window, softcap=spec.logit_softcap,
+        block_q=bq, block_k=bk, **extra,
     )
     return o.transpose(0, 2, 1, 3)
+
+
+def flash_attention(q, k, v, qpos, kpos, spec):
+    """Model-layer adapter around the Pallas flash kernel."""
+    return _flash_adapt(flash_attention_pallas, q, k, v, qpos, kpos, spec,
+                        interpret=_interpret())
+
+
+def flash_attention_ref(q, k, v, qpos, kpos, spec):
+    """Reference-backend form of `flash_attention`: the same adapter around
+    the pure-jnp blocked mirror (identical block sizes, same per-block
+    floating-point program — bit-identical to the kernel)."""
+    return _flash_adapt(flash_attention_reference, q, k, v, qpos, kpos, spec)
+
+
+def _decode_layout(q, k, v):
+    """Model layout -> decode-kernel layout: q [B,1,Hq,D] -> [B,Hkv,G,D];
+    k, v [B,W,Hkv,D] -> [B,Hkv,W,D]. Pure transposes/reshapes (exact)."""
+    B, _, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, D)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    return qg, kt, vt, G
+
+
+def decode_attention(q, k, v, valid, spec):
+    """Fused single-token decode attention over the ring KV cache.
+
+    q [B,1,Hq,D]; k, v [B,W,Hkv,D] (dense, RoPE/dequant already applied);
+    valid [W] slot mask (see `repro.models.attention.ring_valid`). Returns
+    [B,1,Hq,D]. Interpret mode runs the kernel unpadded — the same
+    floating-point program as `decode_attention_ref` — preserving the
+    serving bit-parity contract; on TPU, W pads to sublane multiples with
+    valid=False (exact no-ops) and the padded scale is pinned to the true
+    head dim."""
+    B, _, Hq, D = q.shape
+    qg, kt, vt, G = _decode_layout(q, k, v)
+    if _interpret():
+        o = decode_attention_pallas(qg, kt, vt, valid,
+                                    softcap=spec.logit_softcap, interpret=True)
+        return o.reshape(B, 1, Hq, D)
+    W = kt.shape[2]
+    scale = D**-0.5
+    qp = _pad_dim(_pad_dim(qg, 2, 8), 3, 128)
+    kp = _pad_dim(_pad_dim(kt, 2, 8), 3, 128)
+    vp = _pad_dim(_pad_dim(vt, 2, 8), 3, 128)
+    vm = jnp.pad(valid, (0, (-W) % 8))  # padded slots masked out
+    o = decode_attention_pallas(qp, kp, vp, vm, softcap=spec.logit_softcap,
+                                scale=scale, interpret=False)
+    return o[:, :, :G, :D].reshape(B, 1, Hq, D)
+
+
+def decode_attention_ref(q, k, v, valid, spec):
+    """Reference-backend form of `decode_attention`: the same layout adapter
+    around the vmapped `_decode_cell` (bit-identical to the kernel)."""
+    B, _, Hq, D = q.shape
+    qg, kt, vt, _ = _decode_layout(q, k, v)
+    o = decode_attention_reference(qg, kt, vt, valid,
+                                   softcap=spec.logit_softcap)
+    return o.reshape(B, 1, Hq, D)

@@ -1,7 +1,14 @@
 """Batched serving driver: loads (or inits) a model, runs a wave of batched
-greedy-decode requests through the ServeEngine.
+greedy-decode requests through the Backend-dispatched ServeEngine.
 
-  PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --requests 8
+  PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --requests 8 \
+      --backend pallas
+
+`--backend` selects the attention implementation for prefill AND decode
+(`reference` | `pallas` | `pallas_sharded` — same flag and semantics as the
+benchmark CLIs); outputs are bit-identical across the three, so the flag is
+purely a performance/scale choice. `pallas_sharded` additionally shards the
+KV cache head-wise over the mesh model axis.
 """
 from __future__ import annotations
 
@@ -12,6 +19,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_config, reduced
+from repro.core.backend import get_backend
 from repro.models import Model
 from repro.serving.engine import Request, ServeEngine
 from repro.utils import get_logger
@@ -20,12 +28,15 @@ log = get_logger("repro.serve")
 
 
 def main(argv=None) -> dict:
+    """CLI entry; returns a summary dict (also used by tests/examples)."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="olmo-1b")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt_len", type=int, default=32)
     ap.add_argument("--max_new", type=int, default=16)
+    ap.add_argument("--backend", default="reference",
+                    help="reference | pallas | pallas_sharded")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -33,7 +44,8 @@ def main(argv=None) -> dict:
     model = Model(cfg)
     params = model.init(jax.random.key(args.seed))
     engine = ServeEngine(model, params, batch_size=args.batch,
-                         max_len=args.prompt_len + args.max_new)
+                         max_len=args.prompt_len + args.max_new,
+                         backend=get_backend(args.backend))
 
     rng = np.random.default_rng(args.seed)
     reqs = [
@@ -45,9 +57,10 @@ def main(argv=None) -> dict:
     done = engine.run(reqs)
     dt = time.time() - t0
     n_tok = sum(len(r.out) for r in done)
-    log.info("served %d requests, %d tokens in %.2fs (%.1f tok/s)",
-             len(done), n_tok, dt, n_tok / dt)
-    return {"requests": len(done), "tokens": n_tok, "wall_s": dt}
+    log.info("served %d requests, %d tokens in %.2fs (%.1f tok/s, backend=%s)",
+             len(done), n_tok, dt, n_tok / dt, args.backend)
+    return {"requests": len(done), "tokens": n_tok, "wall_s": dt,
+            "backend": args.backend}
 
 
 if __name__ == "__main__":

@@ -24,6 +24,9 @@ NEG_INF = -1e30
 
 
 class AttnSpec(NamedTuple):
+    """Attention-pattern spec: causality, sliding window, logit softcap.
+    Hashable, so it keys the Backend's cached shard_map builds."""
+
     causal: bool = True
     window: int = 0  # 0 => unbounded (full attention)
     logit_softcap: float = 0.0
@@ -209,8 +212,18 @@ def chunked_attention(
     return _chunked_attention_vjp(q, k, v, qpos, kpos, spec, chunk_q, chunk_kv)
 
 
-def attention(q, k, v, qpos, kpos, spec: AttnSpec, impl: str = "auto", kv_valid=None):
-    """Dispatch on sequence length / implementation choice."""
+def attention(q, k, v, qpos, kpos, spec: AttnSpec, impl: str = "auto",
+              kv_valid=None, backend=None):
+    """Dispatch on sequence length / implementation choice.
+
+    When a `repro.core.backend.Backend` is supplied (the serving path),
+    the whole call routes through `Backend.flash_attention` — reference /
+    pallas / pallas_sharded forms with bit-identical outputs — and `impl`
+    is ignored. With backend=None (training) the legacy direct / chunked /
+    flash `impl` selection applies unchanged."""
+    if backend is not None:
+        assert kv_valid is None, "kv_valid is a legacy-path-only argument"
+        return backend.flash_attention(q, k, v, qpos, kpos, spec)
     Sq, Skv = q.shape[1], k.shape[1]
     if impl == "flash":
         from repro.kernels import ops as kops
@@ -231,6 +244,8 @@ def attention(q, k, v, qpos, kpos, spec: AttnSpec, impl: str = "auto", kv_valid=
 
 
 def init_attn(create, kg, cfg, layers: int, cross: bool = False) -> dict:
+    """Stacked attention-block parameters for `layers` layers (GQA q/k/v/o
+    projections + optional biases), tagged with logical sharding axes."""
     d, hd = cfg.d_model, cfg.resolved_head_dim
     nq, nkv = cfg.n_heads, cfg.n_kv_heads
     p = {
@@ -247,6 +262,7 @@ def init_attn(create, kg, cfg, layers: int, cross: bool = False) -> dict:
 
 
 def qkv_proj(cfg, p: dict, x: jax.Array):
+    """x [B,S,d] -> (q [B,S,Hq,D], k/v [B,S,Hkv,D]) with optional biases."""
     q = jnp.einsum("bsd,dhq->bshq", x, p["wq"])
     k = jnp.einsum("bsd,dhq->bshq", x, p["wk"])
     v = jnp.einsum("bsd,dhq->bshq", x, p["wv"])
@@ -258,6 +274,7 @@ def qkv_proj(cfg, p: dict, x: jax.Array):
 
 
 def out_proj(p: dict, o: jax.Array) -> jax.Array:
+    """Attention output projection: o [B,S,Hq,D] -> [B,S,d]."""
     return jnp.einsum("bshq,hqd->bsd", o, p["wo"])
 
 
@@ -267,11 +284,14 @@ def out_proj(p: dict, o: jax.Array) -> jax.Array:
 
 
 class KVCache(NamedTuple):
+    """Dense ring-buffer KV cache (capacity W slots per sequence)."""
+
     k: jax.Array  # [B, W, Hkv, D]  (RoPE pre-applied to k)
     v: jax.Array  # [B, W, Hkv, D]
 
     @property
     def capacity(self) -> int:
+        """Ring length W (== sliding window for sub-quadratic archs)."""
         return self.k.shape[1]
 
 
@@ -286,6 +306,7 @@ class QuantKVCache(NamedTuple):
 
     @property
     def capacity(self) -> int:
+        """Ring length W (== sliding window for sub-quadratic archs)."""
         return self.k.shape[1]
 
 
@@ -300,10 +321,13 @@ def quantize_kv(x: jax.Array):
 
 
 def dequantize_kv(q: jax.Array, scale: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+    """Inverse of `quantize_kv`: int8 values + per-slot scales -> dtype."""
     return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
 
 
 def init_kv_cache(cfg, batch: int, capacity: int, dtype=jnp.bfloat16):
+    """Zeroed ring KV cache [B, capacity, Hkv, D]; int8 dtype selects the
+    quantized variant (per-slot scales)."""
     hd = cfg.resolved_head_dim
     shape = (batch, capacity, cfg.n_kv_heads, hd)
     if dtype == jnp.int8:
@@ -318,6 +342,8 @@ def init_kv_cache(cfg, batch: int, capacity: int, dtype=jnp.bfloat16):
 
 def cache_update_decode(cache, k_new, v_new, pos: jax.Array):
     """Write one token at ring slot pos % capacity. k_new/v_new: [B,1,Hkv,D].
+    Exact and backend-independent (elementwise select), so the serving
+    parity contract reduces to the attention op itself.
 
     Implemented as a masked select rather than dynamic_update_slice: a DUS at
     a traced index on the (model-sharded) cache-length dim makes XLA SPMD
@@ -341,21 +367,36 @@ def cache_update_decode(cache, k_new, v_new, pos: jax.Array):
     return KVCache(k, v)
 
 
-def decode_attend(cfg, cache, q, pos: jax.Array, spec: AttnSpec):
-    """One-token attention over the ring cache. q: [B,1,Hq,D]; pos: scalar
-    absolute position of the new token (cache already updated at `pos`)."""
-    W = cache.capacity
-    slots = jnp.arange(W)
+def ring_valid(pos: jax.Array, capacity: int, spec: AttnSpec) -> jax.Array:
+    """[W] bool — which ring slots hold attendable tokens at decode position
+    `pos`: written (kpos <= pos), not overwritten (ring arithmetic), and
+    inside the sliding window when the arch has one. Computed once per
+    decode step and shared by every backend form of
+    `Backend.decode_attention`, so the position arithmetic can never drift
+    between backends."""
+    slots = jnp.arange(capacity)
     # absolute position stored in each slot: the most recent write to slot s
     # happened at the largest t <= pos with t % W == s.
-    kpos = pos - ((pos - slots) % W)
+    kpos = pos - ((pos - slots) % capacity)
     valid = kpos >= jnp.maximum(0, pos + 1 - (spec.window or (pos + 1)))
     valid &= kpos >= 0
     valid &= kpos <= pos
+    return valid
+
+
+def decode_attend(cfg, cache, q, pos: jax.Array, spec: AttnSpec, backend=None):
+    """One-token attention over the ring cache. q: [B,1,Hq,D]; pos: scalar
+    absolute position of the new token (cache already updated at `pos`).
+
+    With a `Backend` supplied, the attention math dispatches through
+    `Backend.decode_attention` (bit-identical across backends); the slot
+    validity mask and the int8 dequantization are computed here either way
+    — both are exact, so they sit outside the parity-sensitive kernel."""
+    W = cache.capacity
+    valid = ring_valid(pos, W, spec)
     B, _, Hq, D = q.shape
     Hkv = cache.k.shape[2]
     G = Hq // Hkv
-    qg = q.reshape(B, 1, Hkv, G, D).transpose(0, 2, 3, 1, 4)  # [B,Hk,G,1,D]
     if isinstance(cache, QuantKVCache):
         # barrier: stops XLA hoisting the int8->bf16 convert of the WHOLE
         # stacked cache out of the layer loop (observed +17 GiB of temps)
@@ -364,6 +405,9 @@ def decode_attend(cfg, cache, q, pos: jax.Array, spec: AttnSpec):
         cv = dequantize_kv(vq, cache.v_scale, q.dtype)
     else:
         ck, cv = cache.k, cache.v
+    if backend is not None:
+        return backend.decode_attention(q, ck, cv, valid, spec)
+    qg = q.reshape(B, 1, Hkv, G, D).transpose(0, 2, 3, 1, 4)  # [B,Hk,G,1,D]
     kk = ck.transpose(0, 2, 1, 3)
     vv = cv.transpose(0, 2, 1, 3)
     s = _scores(qg, kk, D**-0.5, spec)  # [B,Hk,G,1,W]

@@ -20,11 +20,18 @@ from repro.models import transformer as T
 
 
 class Model:
-    def __init__(self, cfg: ModelConfig, param_dtype=jnp.float32, impl: str = "auto", mesh=None):
+    def __init__(self, cfg: ModelConfig, param_dtype=jnp.float32, impl: str = "auto",
+                 mesh=None, backend=None):
         self.cfg = cfg
         self.param_dtype = param_dtype
         self.impl = impl
         self.mesh = mesh
+        # serving Backend (repro.core.backend): when set, prefill/decode
+        # attention dispatches through Backend.flash_attention /
+        # Backend.decode_attention instead of the legacy impl selection —
+        # logits are bit-identical across reference|pallas|pallas_sharded.
+        # None keeps every training path exactly as before.
+        self.backend = backend
         # jnp.int8 enables the quantized KV cache (serving memory halving)
         self.kv_dtype = None
         # pytree of NamedSharding matching params; when set, per-layer param
@@ -152,9 +159,13 @@ class Model:
 
     # ----------------------------------------------------------------- serve
     def prefill(self, params, batch: dict, *, cache_len: Optional[int] = None,
-                impl: Optional[str] = None):
+                impl: Optional[str] = None, backend=None):
+        """Full-prompt forward returning (last-position logits, populated KV
+        cache). `backend` (or the Model-level default) routes attention
+        through the Backend serving ops — see `__init__`."""
         cfg = self.cfg
         impl = impl or self.impl
+        backend = backend if backend is not None else self.backend
         tokens = batch["tokens"]
         B, S = tokens.shape
         cache = self.init_cache(B, cache_len or S, dtype=self.param_dtype)
@@ -163,22 +174,26 @@ class Model:
         out = T.run_stack(
             cfg, params, h, mode="prefill", cache=cache, pos=pos,
             pos3=batch.get("pos3"), enc_out=self._enc_out(params, batch, impl),
-            impl=impl, constrain=self._act_constrain,
+            impl=impl, backend=backend, constrain=self._act_constrain,
             slot_constrain=self._make_slot_constrain(params),
         )
         hid = L.apply_norm(cfg, params["final_norm"], out.hidden[:, -1:])
         logits = L.lm_logits(cfg, params["embed"], hid)
         return logits, out.cache
 
-    def decode_step(self, params, cache: dict, batch: dict, *, impl: Optional[str] = None):
-        """One decode step. batch: tokens [B,1] (+ optional pos3 [B,3,1])."""
+    def decode_step(self, params, cache: dict, batch: dict, *,
+                    impl: Optional[str] = None, backend=None):
+        """One decode step. batch: tokens [B,1] (+ optional pos3 [B,3,1]).
+        `backend` routes the cache attention through
+        `Backend.decode_attention` (see `__init__`)."""
         cfg = self.cfg
         impl = impl or self.impl
+        backend = backend if backend is not None else self.backend
         pos = cache["pos"]
         h = self._embed_in(params, batch, "decode", pos_offset=pos)
         out = T.run_stack(
             cfg, params, h, mode="decode", cache=cache, pos=pos,
-            pos3=batch.get("pos3"), enc_out=None, impl=impl,
+            pos3=batch.get("pos3"), enc_out=None, impl=impl, backend=backend,
             constrain=self._act_constrain,
         )
         hid = L.apply_norm(cfg, params["final_norm"], out.hidden)

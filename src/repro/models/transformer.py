@@ -178,6 +178,7 @@ def apply_block(
     pos3: Optional[jax.Array] = None,  # [B, 3, S] M-RoPE ids
     enc_out: Optional[jax.Array] = None,
     impl: str = "auto",
+    backend=None,
 ):
     aux = jnp.zeros((), jnp.float32)
     new_cache = cache
@@ -191,12 +192,13 @@ def apply_block(
             q = _rotate(cfg, q, pvec, pos3)
             k = _rotate(cfg, k, pvec, pos3)
             kv = attn_lib.cache_update_decode(cache["kv"], k, v, pos)
-            o = attn_lib.decode_attend(cfg, kv, q, pos, spec)
+            o = attn_lib.decode_attend(cfg, kv, q, pos, spec, backend=backend)
             new_cache = dict(cache, kv=kv)
         else:
             q = _rotate(cfg, q, pos, pos3)
             k = _rotate(cfg, k, pos, pos3)
-            o = attn_lib.attention(q, k, v, pos, pos, spec, impl=impl)
+            o = attn_lib.attention(q, k, v, pos, pos, spec, impl=impl,
+                                   backend=backend)
             if mode == "prefill":
                 W = cache["kv"].capacity
                 S = k.shape[1]
@@ -317,6 +319,7 @@ def run_stack(
     pos3: Optional[jax.Array] = None,
     enc_out: Optional[jax.Array] = None,
     impl: str = "auto",
+    backend=None,
     constrain=None,
     slot_constrain=None,
 ) -> StackOut:
@@ -334,7 +337,8 @@ def run_stack(
             c = None if slot_caches is None else slot_caches[j]
             h, nc, a = apply_block(
                 cfg, kind, slot_params[j], h,
-                mode=mode, cache=c, pos=pos, pos3=pos3, enc_out=enc_out, impl=impl,
+                mode=mode, cache=c, pos=pos, pos3=pos3, enc_out=enc_out,
+                impl=impl, backend=backend,
             )
             new_caches.append(nc)
             aux = aux + a
@@ -360,7 +364,8 @@ def run_stack(
         c = None if cache is None else cache["tail"][j]
         h, nc, a = apply_block(
             cfg, kind, params["tail"][j], h,
-            mode=mode, cache=c, pos=pos, pos3=pos3, enc_out=enc_out, impl=impl,
+            mode=mode, cache=c, pos=pos, pos3=pos3, enc_out=enc_out,
+            impl=impl, backend=backend,
         )
         new_tail.append(nc)
         aux0 = aux0 + a

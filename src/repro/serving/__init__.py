@@ -1,3 +1,12 @@
-from repro.serving.engine import make_prefill_step, make_decode_step, ServeEngine
+"""Backend-dispatched serving: jitted prefill/decode steps + the
+continuous-batching ServeEngine (see engine.py for the parity contract)."""
+from repro.serving.engine import (
+    Request,
+    ServeEngine,
+    greedy,
+    make_decode_step,
+    make_prefill_step,
+)
 
-__all__ = ["make_prefill_step", "make_decode_step", "ServeEngine"]
+__all__ = ["Request", "ServeEngine", "greedy", "make_prefill_step",
+           "make_decode_step"]

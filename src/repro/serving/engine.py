@@ -1,9 +1,33 @@
-"""Batched serving: jitted prefill / decode steps + a small continuous-batch
+"""Batched serving: jitted prefill / decode steps + a continuous-batching
 engine used by examples/serve_model.py and the serve driver.
+
+Every attention call dispatches through the one `repro.core.backend.Backend`
+object (`reference` | `pallas` | `pallas_sharded`) — the same dispatch layer
+the cleaning loop's scoring and constructor phases ride — with BIT-IDENTICAL
+logits across the three backends for both prefill and decode
+(tests/test_serving.py; re-asserted by `benchmarks.run --only serving`).
+On `pallas_sharded` the KV cache is committed head-sharded over the mesh
+`model` axis (`Backend.shard_kv_cache`), so the cache memory that caps
+batch-slot concurrency scales with devices.
 
 The decode step is what `decode_*` / `long_*` dry-run cells lower: one new
 token against a KV cache of `seq_len` (ring-bounded to the sliding window for
-sub-quadratic archs; O(1) recurrent state for SSM / RG-LRU)."""
+sub-quadratic archs; O(1) recurrent state for SSM / RG-LRU).
+
+Continuous batching: the engine keeps `batch_size` static slots; a slot whose
+request finishes is immediately refilled from the pending queue MID-STREAM —
+the joining prompt is prefilled left-padded to the batch's current position
+and its cache spliced into the freed slot, so the other slots never stall on
+a drained peer (the pattern at miniature scale; paged caches are the
+production extension).
+
+Left-pad caveat (inherited from the seed engine's wave padding, shared by
+every backend identically): pad tokens are ATTENDED — there is no pad mask —
+so a request's outputs depend on how far it was left-padded, i.e. a joined
+request decodes as if its prompt were preceded by pad context at the join
+position. Deterministic given the request stream, but not invariant to
+batching; the ROADMAP serving items (per-slot positions / pad masking) are
+the production fix."""
 from __future__ import annotations
 
 from dataclasses import dataclass, field
@@ -14,26 +38,34 @@ import jax.numpy as jnp
 import numpy as np
 
 
-def make_prefill_step(model):
+def make_prefill_step(model, backend=None, cache_len=None):
+    """Closure for jitting `model.prefill` (dry-run cells + the engine).
+    `cache_len` fixes the allocated KV capacity (the engine passes its
+    max_len so decode never wraps the ring); None allocates prompt-sized."""
     def prefill_step(params, batch):
-        return model.prefill(params, batch)
+        return model.prefill(params, batch, cache_len=cache_len,
+                             backend=backend)
 
     return prefill_step
 
 
-def make_decode_step(model):
+def make_decode_step(model, backend=None):
+    """Closure for jitting `model.decode_step` (cache donated by callers)."""
     def decode_step(params, cache, batch):
-        return model.decode_step(params, cache, batch)
+        return model.decode_step(params, cache, batch, backend=backend)
 
     return decode_step
 
 
 def greedy(logits: jax.Array) -> jax.Array:
+    """Greedy next-token ids [B, 1] from last-position logits."""
     return jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
 
 
 @dataclass
 class Request:
+    """One generation request: prompt token ids + a decode budget."""
+
     uid: int
     prompt: np.ndarray  # [S] int32
     max_new: int
@@ -41,37 +73,134 @@ class Request:
     done: bool = False
 
 
-class ServeEngine:
-    """Minimal batched greedy-decode engine (static batch slots, per-slot
-    request swapping — the continuous-batching pattern at miniature scale)."""
+def _splice_slot(dst: dict, src: dict, slot: int) -> dict:
+    """Copy batch slot `slot` of cache pytree `src` into `dst` (a mid-stream
+    join). Stacked super-block leaves carry batch on axis 1 (leading layers
+    dim), tail leaves on axis 0; the shared pos counter is equal on both
+    sides by construction (the join prefill is left-padded to it)."""
+    def sub(axis):
+        def f(a, b):
+            idx = [slice(None)] * a.ndim
+            idx[axis] = slot
+            return a.at[tuple(idx)].set(b[tuple(idx)])
 
-    def __init__(self, model, params, batch_size: int, max_len: int):
+        return f
+
+    return {
+        "blocks": jax.tree.map(sub(1), dst["blocks"], src["blocks"]),
+        "tail": jax.tree.map(sub(0), dst["tail"], src["tail"]),
+        "pos": dst["pos"],
+    }
+
+
+class ServeEngine:
+    """Continuous-batching greedy-decode engine over `batch_size` static
+    slots, Backend-dispatched end to end.
+
+    `max_len` is the KV-cache capacity every wave allocates (prompt plus
+    decode budget must fit, or the ring starts dropping context); the
+    `backend` spec resolves through `repro.core.backend.get_backend` and
+    selects the attention implementation for prefill AND decode."""
+
+    def __init__(self, model, params, batch_size: int, max_len: int,
+                 backend=None):
+        from repro.core.backend import get_backend
+
         self.model = model
         self.params = params
         self.B = batch_size
         self.max_len = max_len
-        self._prefill = jax.jit(make_prefill_step(model))
-        self._decode = jax.jit(make_decode_step(model), donate_argnums=(1,))
+        self.backend = get_backend(backend) if backend is not None else None
+        self._prefill = jax.jit(
+            make_prefill_step(model, self.backend, cache_len=max_len))
+        self._decode = jax.jit(make_decode_step(model, self.backend),
+                               donate_argnums=(1,))
 
-    def run(self, requests: list[Request]) -> list[Request]:
-        pending = list(requests)
-        out: list[Request] = []
+    def _commit_cache(self, cache):
+        """Pin KV leaves head-sharded over the mesh model axis (no-op off
+        pallas_sharded) so continuous batching scales cache with devices."""
+        if self.backend is None:
+            return cache
+        return self.backend.shard_kv_cache(cache)
+
+    def _try_join(self, pending: list, done: list, cache, nxt, active,
+                  remaining, slot):
+        """Fill freed `slot` from `pending` mid-stream: prefill the joining
+        prompt left-padded to the batch's current position, splice its cache
+        into the slot, and record its first generated token (the join
+        prefill's greedy pick — the analogue of the wave prefill's `nxt`).
+        Returns updated (cache, nxt) — unchanged when nothing fits (prompt
+        longer than the elapsed positions, or decode budget past cache
+        capacity).
+
+        Cost note: the join prefill runs at the full batch width and at
+        token length == the current position, so each distinct join position
+        traces a new prefill shape (fine at this engine's miniature scale;
+        per-slot positions + a paged cache — the ROADMAP serving items —
+        are what remove the recompile and the wasted B-1 rows)."""
+        while True:
+            cur = int(np.asarray(cache["pos"]))
+            j = next((r for r in pending
+                      if len(r.prompt) <= cur and cur + r.max_new <= self.max_len),
+                     None)
+            if j is None:
+                return cache, nxt
+            pending.remove(j)
+            toks = np.zeros((self.B, cur), np.int32)
+            toks[slot, cur - len(j.prompt):] = j.prompt
+            j_logits, j_cache = self._prefill(self.params,
+                                              {"tokens": jnp.asarray(toks)})
+            cache = self._commit_cache(_splice_slot(cache, j_cache, slot))
+            first = greedy(j_logits)
+            j.out.append(int(np.asarray(first)[slot, 0]))
+            if j.max_new == 1:  # drained on its own prefill; slot frees again
+                j.done = True
+                done.append(j)
+                continue
+            nxt = nxt.at[slot].set(first[slot])
+            active[slot] = j
+            remaining[slot] = j.max_new - 1
+            return cache, nxt
+
+    def run(self, requests: list) -> list:
+        """Serve `requests` to completion; returns them in finish order."""
+        pending, done = [], []
+        for r in requests:
+            # a zero-budget request never enters a slot: in a wave it would
+            # be dropped from the results, and as a mid-stream join it would
+            # set remaining = -1 and spin the decode loop forever
+            if r.max_new <= 0:
+                r.done = True
+                done.append(r)
+            else:
+                pending.append(r)
         while pending:
             wave = pending[: self.B]
-            pending = pending[self.B :]
+            pending = pending[self.B:]
             S = max(len(r.prompt) for r in wave)
             toks = np.zeros((self.B, S), np.int32)
             for i, r in enumerate(wave):
-                toks[i, S - len(r.prompt) :] = r.prompt  # left-pad
+                toks[i, S - len(r.prompt):] = r.prompt  # left-pad
             logits, cache = self._prefill(self.params, {"tokens": jnp.asarray(toks)})
+            cache = self._commit_cache(cache)
             nxt = greedy(logits)
-            for step in range(max(r.max_new for r in wave)):
-                for i, r in enumerate(wave):
-                    if step < r.max_new:
-                        r.out.append(int(np.asarray(nxt)[i, 0]))
+            active: list = list(wave) + [None] * (self.B - len(wave))
+            remaining = [r.max_new if r else 0 for r in active]
+            while True:
+                nxt_np = np.asarray(nxt)
+                for i, r in enumerate(active):
+                    if r is None or remaining[i] == 0:
+                        continue
+                    r.out.append(int(nxt_np[i, 0]))
+                    remaining[i] -= 1
+                    if remaining[i] == 0:
+                        r.done = True
+                        done.append(r)
+                        active[i] = None
+                        cache, nxt = self._try_join(
+                            pending, done, cache, nxt, active, remaining, i)
+                if not any(remaining):
+                    break
                 logits, cache = self._decode(self.params, cache, {"tokens": nxt})
                 nxt = greedy(logits)
-            for r in wave:
-                r.done = True
-                out.append(r)
-        return out
+        return done

@@ -1,0 +1,18 @@
+"""The docstring-coverage gate stays green: every public symbol of the
+covered modules (tools/check_docstrings.py COVERED list — the Backend API
+and the serving surface) has a docstring. The same script runs in CI, so
+this test keeps the gate itself from rotting locally."""
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).parents[1]
+
+
+def test_public_api_docstring_coverage():
+    """tools/check_docstrings.py exits 0 (100% public-API coverage)."""
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "tools" / "check_docstrings.py")],
+        capture_output=True, text=True,
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
