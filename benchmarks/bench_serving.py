@@ -1,24 +1,31 @@
-"""Serving benchmark: Backend-dispatched prefill + decode per backend.
+"""Serving benchmark: Backend-dispatched prefill + decode per backend, on
+BOTH cache disciplines (legacy ring and the paged block-table cache).
 
-For each backend this times a jitted prefill and the steady-state decode
-step on a reduced model, asserts the serving parity contract — prefill AND
-per-step decode logits BIT-IDENTICAL to the reference backend (exact
-equality, not allclose) — and records the committed sharding of the KV
-cache: on `pallas_sharded` the kv-head axis must be sharded over the mesh
-`model` axis (asserted, not just reported).
+For each backend this times a jitted prefill, the steady-state ring decode
+step, and the steady-state PAGED decode step (per-slot positions + block
+table through the paged-attention kernel) on a reduced model; asserts the
+serving parity contract — prefill AND per-step decode logits (ring and
+paged) BIT-IDENTICAL to the reference backend (exact equality, not
+allclose) — and records the committed sharding of the KV cache: on
+`pallas_sharded` the ring kv-head axis AND the paged page pools must be
+sharded over the mesh `model` axis (asserted, not just reported).
 
 On CPU the non-reference wall times measure interpret-mode Pallas (the
 Python-level kernel emulation) — the honest numbers are the reference column
 and the parity/sharding assertions; TPU runs produce real kernel timings.
 
 Emits CSV lines via `benchmarks.common.emit` AND writes a
-``BENCH_serving.json`` artifact (the CI serving-smoke job uploads it).
+``BENCH_serving.json`` artifact (the CI serving-smoke job uploads it and
+diffs decode throughput against the committed
+benchmarks/BENCH_serving_baseline.json via tools/check_bench_regression.py,
+warning on >20% regressions).
 
 Env knobs:
   REPRO_BENCH_SERVING_ARCH     model config (default olmo-1b, reduced)
   REPRO_BENCH_SERVING_BATCH    batch slots (default 4)
   REPRO_BENCH_SERVING_PROMPT   prompt length (default 32)
   REPRO_BENCH_SERVING_DECODE   decode steps timed/verified (default 8)
+  REPRO_BENCH_SERVING_PAGE     paged cache page size (default 8)
   REPRO_BENCH_SERVING_OUT      output JSON path (BENCH_serving.json)
 """
 from __future__ import annotations
@@ -33,21 +40,25 @@ import numpy as np
 from benchmarks.common import emit
 from repro.configs import get_config, reduced
 from repro.core.backend import BACKENDS, get_backend
-from repro.dist.sharding import kv_cache_spec
+from repro.dist.sharding import kv_cache_spec, page_pool_spec
 from repro.models import Model
-from repro.models.attention import KVCache, QuantKVCache
+from repro.models.attention import KVCache, PagedKVCache, QuantKVCache
 from repro.serving import greedy
 from repro.utils.timing import time_fn
 
 
 def _assert_kv_sharded(cache, mesh) -> str:
-    """Every KVCache leaf must sit head-sharded over the mesh model axis
-    (the layout `Backend.shard_kv_cache` commits). Returns the spec str."""
+    """Every KVCache / PagedKVCache leaf must sit head-sharded over the mesh
+    model axis (the layout `Backend.shard_kv_cache` commits; rules:
+    kv_cache_spec for ring leaves, page_pool_spec for page pools). Returns
+    the spec str."""
     specs = []
 
     def walk(node):
-        if isinstance(node, (KVCache, QuantKVCache)):
-            want = kv_cache_spec(mesh, node.k.shape, node.k.ndim - 2)
+        if isinstance(node, (KVCache, QuantKVCache, PagedKVCache)):
+            rule = (page_pool_spec if isinstance(node, PagedKVCache)
+                    else kv_cache_spec)
+            want = rule(mesh, node.k.shape, node.k.ndim - 2)
             assert want[node.k.ndim - 2] == "model", "expected a shardable head axis"
             assert node.k.sharding.spec == want, (node.k.sharding, want)
             assert node.v.sharding.spec == want, (node.v.sharding, want)
@@ -65,12 +76,32 @@ def _assert_kv_sharded(cache, mesh) -> str:
     return specs[0]
 
 
+def _paged_setup(model, params, bk, batch, prompt, steps, page):
+    """Build a decode-ready paged cache by admitting `batch` prompts through
+    the ServeEngine's REAL admission path (`_paged_init`: validation, pool
+    alloc, free-list pages, bucketed solo prefills, page commits) — no
+    re-implementation to drift from the engine. Returns (cache, nxt)."""
+    from repro.serving.engine import Request, ServeConfig, ServeEngine
+
+    eng = ServeEngine(model, params, backend=bk,
+                      config=ServeConfig(batch_size=batch,
+                                         max_len=prompt + steps + 1,
+                                         cache="paged", page_size=page))
+    rng = np.random.default_rng(0)
+    reqs = [Request(i, rng.integers(0, model.cfg.vocab_size, prompt)
+                    .astype(np.int32), steps + 1) for i in range(batch)]
+    cache, nxt, _, _, active, _ = eng._paged_init(reqs, [])
+    assert all(r is not None for r in active), "bench admission underfilled"
+    return cache, nxt
+
+
 def run(backends=None, out_path=None) -> dict:
     """Run the serving suite; returns (and writes) the benchmark record."""
     arch = os.environ.get("REPRO_BENCH_SERVING_ARCH", "olmo-1b")
     batch = int(os.environ.get("REPRO_BENCH_SERVING_BATCH", "4"))
     prompt = int(os.environ.get("REPRO_BENCH_SERVING_PROMPT", "32"))
     steps = int(os.environ.get("REPRO_BENCH_SERVING_DECODE", "8"))
+    page = int(os.environ.get("REPRO_BENCH_SERVING_PAGE", "8"))
     if backends is None:
         backends = list(BACKENDS)
     # reference first: it is the parity oracle the other backends assert
@@ -89,6 +120,7 @@ def run(backends=None, out_path=None) -> dict:
         "batch": batch,
         "prompt_len": prompt,
         "decode_steps": steps,
+        "page_size": page,
         "hw": jax.default_backend(),
         "backends": {},
     }
@@ -117,25 +149,56 @@ def run(backends=None, out_path=None) -> dict:
         c0 = prefill(params, toks)[1]
         t_decode = time_fn(lambda: decode(params, c0, nxt)[0], iters=max(2, steps // 2),
                            warmup=1)
+
+        # ---- paged cache: same model, per-slot positions + block table ----
+        pcache, pnxt = _paged_setup(model, params, bk, batch,
+                                    prompt, steps, page)
+        if name == "pallas_sharded":
+            pspec = _assert_kv_sharded(
+                {"blocks": pcache["blocks"], "tail": pcache["tail"]},
+                bk.mesh)
+        else:
+            pspec = "None"
+        # non-donating decode closure: the engine's jit donates the cache,
+        # which a repeat-timing loop cannot reuse
+        pdecode = jax.jit(lambda p, c, t, bk=bk: model.decode_step(
+            p, c, {"tokens": t}, backend=bk))
+        paged_logits = []
+        pc, pn = pcache, pnxt
+        for _ in range(steps):
+            lg, pc = pdecode(params, pc, pn)
+            paged_logits.append(np.asarray(lg))
+            pn = greedy(lg)
+        t_paged = time_fn(lambda: pdecode(params, pcache, pnxt)[0],
+                          iters=max(2, steps // 2), warmup=1)
+
+        logits_for_parity = np.asarray(prefill(params, toks)[0])
         if name == "reference":
-            ref = {"prefill": np.asarray(prefill(params, toks)[0]),
-                   "decode": dec_logits}
+            ref = {"prefill": logits_for_parity, "decode": dec_logits,
+                   "paged": paged_logits}
         elif ref:
-            # serving parity contract: bit-identical logits, not allclose
-            assert np.array_equal(np.asarray(prefill(params, toks)[0]),
-                                  ref["prefill"]), name
+            # serving parity contract: bit-identical logits, not allclose —
+            # on the ring AND paged decode paths
+            assert np.array_equal(logits_for_parity, ref["prefill"]), name
             for i, (a, b) in enumerate(zip(dec_logits, ref["decode"])):
                 assert np.array_equal(a, b), (name, f"decode step {i}")
+            for i, (a, b) in enumerate(zip(paged_logits, ref["paged"])):
+                assert np.array_equal(a, b), (name, f"paged decode step {i}")
         record["backends"][name] = {
             "t_prefill_s": t_prefill,
             "t_decode_step_s": t_decode,
             "decode_tok_per_s": batch / t_decode,
+            "t_paged_decode_step_s": t_paged,
+            "paged_decode_tok_per_s": batch / t_paged,
             "kv_sharding": spec,
+            "page_pool_sharding": pspec,
         }
         emit(f"serving_prefill_{name}", t_prefill,
              f"arch={cfg.name};B={batch};S={prompt}")
         emit(f"serving_decode_{name}", t_decode,
              f"tok_s={batch / t_decode:.1f};kv_sharding={spec}")
+        emit(f"serving_paged_decode_{name}", t_paged,
+             f"tok_s={batch / t_paged:.1f};page={page};pool_sharding={pspec}")
 
     out = out_path or os.environ.get("REPRO_BENCH_SERVING_OUT",
                                      "BENCH_serving.json")

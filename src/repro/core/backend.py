@@ -75,6 +75,15 @@ dispatches through these):
       (rule: repro.dist.sharding.kv_cache_spec, committed by
       `shard_kv_cache`), so per-device cache memory — the resource that
       caps continuous-batching concurrency — scales with devices.
+  paged_decode_attention(q, k_pages, v_pages, pages, pos, spec)
+      -> [B, 1, Hq, D]
+      one new token per slot against the PAGED KV cache (physical page
+      pools [N_pages, P, Hkv, D] indexed through a per-slot block table
+      [B, n_pages] with PER-SLOT positions [B]) — the production decode
+      op the ServeEngine's `paged` cache mode rides. The kernel streams
+      pages one per grid step (W-chunked online softmax), so cache size
+      never constrains VMEM; on pallas_sharded the pools stay head-sharded
+      over `model` (rule: repro.dist.sharding.page_pool_spec).
 
 Serving parity contract: prefill AND decode logits are BIT-IDENTICAL across
 all three backends (exact equality, not allclose) — the reference forms run
@@ -320,6 +329,41 @@ class Backend:
             return ops.decode_attention(q, k, v, valid, spec)
         return _cached_sharded(self, "decode_attention", spec)(q, k, v, valid)
 
+    def paged_decode_attention(self, q, k_pages, v_pages, pages, pos,
+                               spec) -> jax.Array:
+        """Single-token decode attention over the PAGED KV cache: q
+        [B,1,Hq,D]; k_pages, v_pages [N_pages, P, Hkv, D] physical page
+        pools; pages [B, n_pages] int32 per-slot block table; pos [B] int32
+        per-slot decode positions -> [B,1,Hq,D]. The kernel streams each
+        slot's pages one page per grid step through the scalar-prefetched
+        block table (W-chunked online softmax — cache size never constrains
+        VMEM), and per-slot validity is derived from the page-table position
+        arithmetic inside the shared cell program
+        (kernels/paged_attention._page_step).
+
+        Bit-identical across backends. On pallas_sharded the page pools
+        stay head-sharded over `model` (rule:
+        repro.dist.sharding.page_pool_spec, committed by `shard_kv_cache`);
+        the block table and positions are replicated host metadata, so no
+        page traffic lands on the decode critical path."""
+        from repro.kernels import ops
+
+        if self.name == "reference":
+            return ops.paged_decode_attention_ref(q, k_pages, v_pages, pages,
+                                                  pos, spec)
+        if self.name == "pallas" or not self._model_axis_divides(
+                k_pages.shape[2]):
+            return ops.paged_decode_attention(q, k_pages, v_pages, pages, pos,
+                                              spec)
+        # shard_map covers ONLY the per-page partials (per-head independent);
+        # the combine_pages merge runs here in the caller's context — the
+        # same context every other backend form merges in, which is what
+        # keeps the three-way equality exact (see ops.paged_decode_partials)
+        m, l, acc = _cached_sharded(self, "paged_decode_attention", spec)(
+            q, k_pages, v_pages, pages.astype(jnp.int32),
+            pos.astype(jnp.int32))
+        return ops.paged_decode_finish(m, l, acc, q)
+
     # ------------------------------------------------ KV cache placement
     def kv_cache_sharding(self, shape, head_axis: int):
         """NamedSharding for one serving KV-cache leaf (kv heads over the
@@ -333,20 +377,40 @@ class Backend:
 
         return NamedSharding(self.mesh, kv_cache_spec(self.mesh, shape, head_axis))
 
+    def page_pool_sharding(self, shape, head_axis: int):
+        """NamedSharding for one paged-KV page-pool leaf (kv heads over the
+        mesh `model` axis; rule: repro.dist.sharding.page_pool_spec), or
+        None on unsharded backends."""
+        if self.name != "pallas_sharded":
+            return None
+        from jax.sharding import NamedSharding
+
+        from repro.dist.sharding import page_pool_spec
+
+        return NamedSharding(self.mesh,
+                             page_pool_spec(self.mesh, shape, head_axis))
+
     def shard_kv_cache(self, cache):
         """Outside-jit committed placement of a serving cache pytree: every
-        KVCache / QuantKVCache leaf goes head-sharded over the mesh `model`
-        axis (k/v: axis ndim-2; quant scales: axis ndim-1); recurrent state
-        (SSM / RG-LRU), cross-attention caches, and the pos counter stay
-        untouched. No-op on unsharded backends — call sites never branch on
-        the backend name. The ServeEngine commits the prefill cache through
-        this so continuous batching scales cache memory with devices."""
+        KVCache / QuantKVCache / PagedKVCache leaf goes head-sharded over
+        the mesh `model` axis (ring k/v and page pools: axis ndim-2; quant
+        scales: axis ndim-1); recurrent state (SSM / RG-LRU),
+        cross-attention caches, the pos counter, and the paged block table
+        stay untouched. No-op on unsharded backends — call sites never
+        branch on the backend name. The ServeEngine commits the prefill
+        cache through this so continuous batching scales cache memory with
+        devices."""
         if self.name != "pallas_sharded" or cache is None:
             return cache
-        from repro.models.attention import KVCache, QuantKVCache
+        from repro.models.attention import (KVCache, PagedKVCache,
+                                            QuantKVCache)
 
         def put(x, head_axis):
             return jax.device_put(x, self.kv_cache_sharding(x.shape, head_axis))
+
+        def pput(x):
+            return jax.device_put(
+                x, self.page_pool_sharding(x.shape, x.ndim - 2))
 
         def walk(node):
             if isinstance(node, QuantKVCache):
@@ -354,6 +418,8 @@ class Backend:
                     put(node.k, node.k.ndim - 2), put(node.v, node.v.ndim - 2),
                     put(node.k_scale, node.k_scale.ndim - 1),
                     put(node.v_scale, node.v_scale.ndim - 1))
+            if isinstance(node, PagedKVCache):
+                return PagedKVCache(pput(node.k), pput(node.v))
             if isinstance(node, KVCache):
                 return KVCache(put(node.k, node.k.ndim - 2),
                                put(node.v, node.v.ndim - 2))
@@ -520,10 +586,14 @@ class Backend:
         row2 = Pspec(lead, None)
         row1 = Pspec(lead)
 
-        if op in ("flash_attention", "decode_attention"):
+        if op in ("flash_attention", "decode_attention",
+                  "paged_decode_attention"):
             # serving ops shard the HEAD axis over `model` (not the data
             # axes): each device runs the unsharded kernel on its own
-            # Hkv/m kv heads — exact, attention is per-head independent
+            # Hkv/m kv heads — exact, attention is per-head independent.
+            # heads4 covers q [B,1,Hq,D] (axis 2 = Hq) AND the paged pools
+            # [N_pages, P, Hkv, D] (axis 2 = Hkv): consecutive Hq blocks are
+            # exactly the G query heads of consecutive kv-head blocks.
             heads4 = Pspec(None, None, "model", None)
             if op == "flash_attention":
                 def local(qq, kk, vv, qp, kp):
@@ -532,6 +602,21 @@ class Backend:
                 return shard_map_compat(
                     local, self.mesh,
                     (heads4, heads4, heads4, Pspec(None), Pspec(None)), heads4)
+            if op == "paged_decode_attention":
+                # partials only — the merge happens outside the shard_map in
+                # the caller's context (Backend.paged_decode_attention);
+                # partial leaves carry heads on axis 1: m, l
+                # [B, Hkv, n_pages, G], acc [B, Hkv, n_pages, G, D]
+                def local(qq, kk, vv, pt, ps):
+                    return ops.paged_decode_partials(qq, kk, vv, pt, ps,
+                                                     static)
+
+                part4 = Pspec(None, "model", None, None)
+                part5 = Pspec(None, "model", None, None, None)
+                return shard_map_compat(
+                    local, self.mesh,
+                    (heads4, heads4, heads4, Pspec(None, None), Pspec(None)),
+                    (part4, part4, part5))
 
             def local(qq, kk, vv, vm):
                 return ops.decode_attention(qq, kk, vv, vm, static)

@@ -102,6 +102,20 @@ def kv_cache_spec(mesh, shape: Sequence[int], head_axis: int) -> P:
     return P(*parts)
 
 
+def page_pool_spec(mesh, shape: Sequence[int], head_axis: int) -> P:
+    """Sharding rule for paged-KV page pools ([N_pages, page_size, Hkv, D],
+    possibly with a stacked leading layers dim): shard the kv-head axis over
+    the mesh `model` axis, exactly like `kv_cache_spec` for the dense ring
+    cache. The pool deliberately has NO batch dimension — pages are shared
+    physical memory handed out by the engine's free-list allocator — so the
+    head axis is the only dimension that splits without putting page traffic
+    on the decode critical path (page ids are replicated host metadata; each
+    device streams only its own heads' slices of every page). Same
+    divisibility fallback as the rulebook: no `model` axis, or a head count
+    that does not split evenly, resolves to replicated instead of failing."""
+    return kv_cache_spec(mesh, shape, head_axis)
+
+
 def make_resolver(mesh, *, fsdp: bool = True) -> Callable:
     """Returns resolve(axes, shape) -> PartitionSpec for `mesh`.
 

@@ -21,6 +21,11 @@ from repro.kernels.flash_attention import (
     flash_attention_reference,
 )
 from repro.kernels.infl_scores import infl_scores_pallas
+from repro.kernels.paged_attention import (
+    combine_pages,
+    paged_attention_partials_pallas,
+    paged_attention_partials_reference,
+)
 from repro.kernels.lr_grad import lr_grad_pallas
 from repro.kernels.lr_hvp import lr_hvp_pallas
 from repro.kernels.minibatch_grad import minibatch_grad_pallas
@@ -277,3 +282,85 @@ def decode_attention_ref(q, k, v, valid, spec):
     o = decode_attention_reference(qg, kt, vt, valid,
                                    softcap=spec.logit_softcap)
     return o.reshape(B, 1, Hq, D)
+
+
+def _paged_layout(q, k_pages):
+    """Model layout -> paged-kernel layout: q [B,1,Hq,D] -> [B,Hkv,G,D].
+    The page pools already carry the kernel layout ([N_pages, P, Hkv, D] —
+    transposing the whole pool per decode step would copy the entire cache,
+    which is exactly what the page-table indexing exists to avoid)."""
+    B, _, Hq, D = q.shape
+    Hkv = k_pages.shape[2]
+    G = Hq // Hkv
+    return q.reshape(B, Hkv, G, D), G
+
+
+def paged_decode_partials(q, k_pages, v_pages, pages, pos, spec):
+    """Kernel half of the paged decode op: per-page partial softmaxes
+    (m, l [B, Hkv, n_pages, Gp]; acc [B, Hkv, n_pages, Gp, Dp] f32; Gp/Dp
+    padded on TPU) from the page-streaming Pallas kernel. Split from the
+    merge so `Backend`'s pallas_sharded form can shard_map ONLY this half:
+    the shared `combine_pages` merge must run in the CALLER's execution
+    context for every backend — a merge inside the jitted shard_map would
+    compile its transcendentals in a different fusion context than the
+    eager reference merge and drift by an ulp (the parity hazard the
+    split-softmax structure exists to avoid)."""
+    B, _, Hq, D = q.shape
+    qg, G = _paged_layout(q, k_pages)
+    pages = pages.astype(jnp.int32)
+    pos = pos.astype(jnp.int32)
+    if _interpret():
+        return paged_attention_partials_pallas(
+            qg, k_pages, v_pages, pages, pos, window=spec.window,
+            softcap=spec.logit_softcap, interpret=True)
+    assert k_pages.shape[1] % 8 == 0, "TPU paged cache needs page_size % 8 == 0"
+    scale = D**-0.5
+    qp = _pad_dim(_pad_dim(qg, 2, 8), 3, 128)
+    kp = _pad_dim(k_pages, 3, 128)
+    vp = _pad_dim(v_pages, 3, 128)
+    return paged_attention_partials_pallas(
+        qp, kp, vp, pages, pos, window=spec.window,
+        softcap=spec.logit_softcap, scale=scale, interpret=False)
+
+
+def paged_decode_finish(m, l, acc, q):
+    """Merge half of the paged decode op: the SHARED `combine_pages` over
+    the per-page partials, sliced back to the true head dims and restored
+    to model layout [B, 1, Hq, D]. Every backend form calls this in the
+    same (caller) context on bitwise-identical partials — which is what
+    makes the three-backend equality exact."""
+    B, _, Hq, D = q.shape
+    Hkv = m.shape[1]
+    G = Hq // Hkv
+    o = combine_pages(m, l, acc)[:, :, :G, :D]
+    return o.astype(q.dtype).reshape(B, 1, Hq, D)
+
+
+def paged_decode_attention(q, k_pages, v_pages, pages, pos, spec):
+    """Fused page-table-indexed decode attention over the paged KV cache.
+
+    q [B,1,Hq,D]; k_pages, v_pages [N_pages, P, Hkv, D] physical pools
+    (RoPE pre-applied); pages [B, n_pages] int32 block table; pos [B] int32
+    per-slot decode positions. Returns [B,1,Hq,D]: the kernel streams one
+    page per grid step into independent partial softmaxes
+    (`paged_decode_partials`), and the shared `combine_pages` merge
+    produces the output (`paged_decode_finish`). Interpret mode runs the
+    kernel unpadded — the same floating-point program as
+    `paged_decode_attention_ref` — preserving the serving bit-parity
+    contract; on TPU, G pads to sublanes and D to 128 lanes with the scale
+    pinned to the true head dim (page_size must be a sublane multiple —
+    `ServeEngine` validates that at config time; `paged_decode_partials`
+    carries the backstop assert for direct op callers)."""
+    m, l, acc = paged_decode_partials(q, k_pages, v_pages, pages, pos, spec)
+    return paged_decode_finish(m, l, acc, q)
+
+
+def paged_decode_attention_ref(q, k_pages, v_pages, pages, pos, spec):
+    """Reference-backend form of `paged_decode_attention`: the same layout
+    adapter around the mapped `_page_partial` mirror plus the SAME
+    `combine_pages` merge (bit-identical to the kernel)."""
+    qg, _ = _paged_layout(q, k_pages)
+    m, l, acc = paged_attention_partials_reference(
+        qg, k_pages, v_pages, pages.astype(jnp.int32), pos.astype(jnp.int32),
+        window=spec.window, softcap=spec.logit_softcap)
+    return paged_decode_finish(m, l, acc, q)

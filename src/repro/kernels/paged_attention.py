@@ -1,0 +1,228 @@
+"""Pallas kernel: single-token GQA decode attention over a PAGED KV cache.
+
+The production form of the serving decode op: each batch slot's KV history
+lives in fixed-size pages of a shared physical pool ([N_pages, P, Hkv, D]),
+indexed through a per-slot block table ([B, n_pages] physical page ids) —
+the vLLM layout at miniature scale. Per (batch, kv-head) cell the kernel
+STREAMS the slot's pages one page per grid step (W-chunking: only a single
+[P, D] page block is ever resident in VMEM, so caches far past VMEM work
+unchanged). The page id for each grid step comes from the block table via
+scalar-prefetch BlockSpec index maps, so the gather is a DMA schedule, not
+a materialized [B, W, Hkv, D] copy.
+
+Split-softmax structure (flash-decoding's split-K shape): the kernel writes
+an INDEPENDENT self-normalized partial softmax per page — (m_j, l_j, acc_j)
+= (row max, exp-sum, exp-weighted value sum) — and a separate SHARED jnp
+function, `combine_pages`, merges the partials into the final output. The
+cross-page merge deliberately lives OUTSIDE the kernel: an in-kernel
+online-softmax carry chains exp/mul/add across grid steps, and XLA's CPU
+codegen for such chains differs by an ulp between the grid interpreter and
+a scanned jnp mirror (fusion-context-dependent transcendental emitters), so
+a carried kernel can never honestly promise bit-parity off-TPU. Per-page
+partials are single-block programs — the regime where the repo's parity
+contract is engineered to hold — and `combine_pages` is executed verbatim
+by every backend form on bitwise-identical partials.
+
+Bit-parity contract: the per-page program is `_page_partial`, shared
+verbatim with `paged_attention_partials_reference` (which lax.map's the
+same function over the same page sequence) — the `reference` and `pallas`
+forms of `Backend.paged_decode_attention` therefore run identical
+floating-point programs, and the `pallas_sharded` form is exact because
+cells are per-head independent (pages head-sharded over the mesh `model`
+axis, `repro.dist.sharding.page_pool_spec`).
+
+Unlike the ring kernel (where validity is an input), per-slot validity here
+is DERIVED FROM THE PAGE TABLE POSITION ARITHMETIC inside the shared
+per-page program: page j of slot b covers absolute positions
+[j*P, (j+1)*P), valid iff kpos <= pos_b (written and attendable — a paged
+cache never wraps, so there is no ring aliasing) and inside the sliding
+window when the arch has one. Unallocated table entries point at the
+reserved trash page 0; their positions exceed pos_b, so they are masked —
+streamed but exact no-ops (their partials carry l_j = 0 and a merge weight
+of exp(NEG_INF - M) == 0).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _page_partial(q, k, v, kpos, pos_b, *, scale: float, window: int,
+                  softcap: float):
+    """Self-normalized partial softmax of ONE page: q [G, D]; k, v [P, D];
+    kpos [P] absolute positions covered by the page; pos_b scalar decode
+    position of the slot -> (m [G], l [G], acc [G, D]).
+
+    Shared verbatim by the kernel body and the mapped reference — any edit
+    here changes both sides of the bit-parity contract together. No
+    cross-page carry: a fully masked page yields (NEG_INF, 0, 0), which
+    `combine_pages` weighs to exactly zero."""
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # [G, P]
+    if softcap:
+        # reciprocal-multiply, not division: jit rewrites x / const to
+        # x * (1/const) while eager mode divides — the mul form is the one
+        # program both execution modes agree on bitwise
+        s = softcap * jnp.tanh(s * (1.0 / softcap))
+    valid = kpos <= pos_b
+    if window:
+        valid &= kpos > pos_b - window
+    s = jnp.where(valid[None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1)  # [G]
+    p = jnp.where(valid[None, :], jnp.exp(s - m[:, None]), 0.0)
+    l = jnp.sum(p, axis=-1)
+    acc = jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    return m, l, acc
+
+
+def combine_pages(m, l, acc):
+    """Merge per-page partial softmaxes into the final attention output:
+    m, l [..., n_pages, G]; acc [..., n_pages, G, D] -> [..., G, D].
+
+    Executed VERBATIM by every backend form of the paged op, outside the
+    kernel, on partials that are already bitwise identical across backends
+    — so backend parity holds for any deterministic merge. The inputs are
+    fenced with optimization_barrier to keep this subgraph structurally
+    identical in every enclosing program (no producer fusion reaching into
+    the merge), which pins its own codegen too. Fully masked pages arrive
+    as (NEG_INF, 0, 0) and get merge weight exp(NEG_INF - M) == 0."""
+    m, l, acc = jax.lax.optimization_barrier((m, l, acc))
+    M = jnp.max(m, axis=-2)  # [..., G]
+    w = jnp.exp(m - M[..., None, :])  # [..., n_pages, G]
+    l_tot = jnp.sum(l * w, axis=-2)  # [..., G]
+    acc_tot = jnp.sum(acc * w[..., None], axis=-3)  # [..., G, D]
+    return acc_tot / jnp.maximum(l_tot, 1e-30)[..., None]
+
+
+def _kernel(pt_ref, pos_ref, q_ref, k_ref, v_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, window: int, softcap: float, page_size: int):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    # absolute positions covered by logical page j of this slot (2D iota —
+    # 1D iota does not lower on TPU)
+    kpos = j * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, (1, page_size), 1)[0]
+    m, l, acc = _page_partial(
+        q_ref[0, 0].astype(jnp.float32),
+        k_ref[0, :, 0, :].astype(jnp.float32),
+        v_ref[0, :, 0, :].astype(jnp.float32),
+        kpos, pos_ref[b],
+        scale=scale, window=window, softcap=softcap,
+    )
+    m_ref[0, 0, 0] = m
+    l_ref[0, 0, 0] = l
+    acc_ref[0, 0, 0] = acc
+
+
+def paged_attention_partials_pallas(
+    q: jax.Array,           # [B, Hkv, G, D] grouped query (one token/slot)
+    k_pages: jax.Array,     # [N_pages, P, Hkv, D] physical key page pool
+    v_pages: jax.Array,     # [N_pages, P, Hkv, D] physical value page pool
+    page_table: jax.Array,  # [B, n_pages] int32 physical page ids per slot
+    pos: jax.Array,         # [B] int32 per-slot decode position
+    *,
+    window: int = 0,
+    softcap: float = 0.0,
+    scale: float = None,
+    interpret: bool = False,
+):
+    """Per-page partial softmaxes via the paged kernel: returns
+    (m [B, Hkv, n_pages, G], l [B, Hkv, n_pages, G],
+    acc [B, Hkv, n_pages, G, D]) in f32 — feed `combine_pages`.
+
+    Grid (B, Hkv, n_pages) with pages innermost: each step DMAs exactly one
+    [P, D] page per k/v (index-mapped through the scalar-prefetched block
+    table) and writes that page's independent partial — cache size never
+    constrains VMEM. `scale` overrides the D**-0.5 default when the caller
+    lane-padded D."""
+    B, Hkv, G, D = q.shape
+    P = k_pages.shape[1]
+    n_pages = page_table.shape[1]
+    kernel = functools.partial(
+        _kernel, scale=float(scale or D**-0.5), window=int(window),
+        softcap=float(softcap), page_size=P,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # page_table, pos feed the index maps
+        grid=(B, Hkv, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, j, pt, ps: (b, h, 0, 0)),
+            pl.BlockSpec((1, P, 1, D),
+                         lambda b, h, j, pt, ps: (pt[b, j], 0, h, 0)),
+            pl.BlockSpec((1, P, 1, D),
+                         lambda b, h, j, pt, ps: (pt[b, j], 0, h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, G), lambda b, h, j, pt, ps: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, 1, G), lambda b, h, j, pt, ps: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, 1, G, D),
+                         lambda b, h, j, pt, ps: (b, h, j, 0, 0)),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hkv, n_pages, G), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, n_pages, G), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, n_pages, G, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(page_table, pos, q, k_pages, v_pages)
+
+
+def paged_attention_partials_reference(
+    q: jax.Array,           # [B, Hkv, G, D]
+    k_pages: jax.Array,     # [N_pages, P, Hkv, D]
+    v_pages: jax.Array,     # [N_pages, P, Hkv, D]
+    page_table: jax.Array,  # [B, n_pages] int32
+    pos: jax.Array,         # [B] int32
+    *,
+    window: int = 0,
+    softcap: float = 0.0,
+):
+    """Pure-jnp form of `paged_attention_partials_pallas`: `_page_partial`
+    lax.map'd over the (B, Hkv, page) cells with per-step scalar `jnp.take`
+    page gathers — the identical floating-point program the kernel runs per
+    grid cell (bit-parity oracle for `Backend.paged_decode_attention`).
+
+    lax.map, NOT vmap: vmap batches the per-cell dots into one dot_general
+    whose XLA lowering can differ by an ulp for degenerate shapes (G == 1
+    MHA matvecs); and the page loop gathers one [P, D] page at a time,
+    mirroring the kernel's DMA schedule instead of materializing a
+    [B, n_pages, P, ...] copy."""
+    B, Hkv, G, D = q.shape
+    P = k_pages.shape[1]
+    n_pages = page_table.shape[1]
+    part = functools.partial(_page_partial, scale=float(D**-0.5),
+                             window=int(window), softcap=float(softcap))
+    kT = k_pages.astype(jnp.float32).transpose(2, 0, 1, 3)  # [Hkv, NP, P, D]
+    vT = v_pages.astype(jnp.float32).transpose(2, 0, 1, 3)
+
+    def slot_cell(t):
+        qb, ptb, pb = t  # [Hkv, G, D], [n_pages], scalar
+
+        def head_cell(th):
+            qh, kh, vh = th  # [G, D], [NP, P, D], [NP, P, D]
+
+            def page(j):
+                kj = jnp.take(kh, ptb[j], axis=0)  # [P, D]
+                vj = jnp.take(vh, ptb[j], axis=0)
+                kpos = j * P + jnp.arange(P, dtype=jnp.int32)
+                return part(qh, kj, vj, kpos, pb)
+
+            return jax.lax.map(page, jnp.arange(n_pages, dtype=jnp.int32))
+
+        return jax.lax.map(head_cell, (qb.astype(jnp.float32), kT, vT))
+
+    return jax.lax.map(
+        slot_cell, (q, page_table.astype(jnp.int32), pos.astype(jnp.int32)))

@@ -2,13 +2,20 @@
 greedy-decode requests through the Backend-dispatched ServeEngine.
 
   PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --requests 8 \
-      --backend pallas
+      --backend pallas --cache paged
 
 `--backend` selects the attention implementation for prefill AND decode
 (`reference` | `pallas` | `pallas_sharded` — same flag and semantics as the
 benchmark CLIs); outputs are bit-identical across the three, so the flag is
 purely a performance/scale choice. `pallas_sharded` additionally shards the
-KV cache head-wise over the mesh model axis.
+KV cache (ring leaves and paged page pools alike) head-wise over the mesh
+model axis.
+
+`--cache` selects the cache discipline: `paged` (block-table paged cache
+with per-slot decode positions — batching-invariant outputs), `ring` (the
+seed engine's shared-counter ring, kept as the differential oracle), or
+`auto` (paged where the arch supports it). `--page_size` sizes the paged
+pool's pages.
 """
 from __future__ import annotations
 
@@ -21,7 +28,7 @@ import numpy as np
 from repro.configs import get_config, reduced
 from repro.core.backend import get_backend
 from repro.models import Model
-from repro.serving.engine import Request, ServeEngine
+from repro.serving.engine import Request, ServeConfig, ServeEngine
 from repro.utils import get_logger
 
 log = get_logger("repro.serve")
@@ -37,15 +44,21 @@ def main(argv=None) -> dict:
     ap.add_argument("--max_new", type=int, default=16)
     ap.add_argument("--backend", default="reference",
                     help="reference | pallas | pallas_sharded")
+    ap.add_argument("--cache", default="auto",
+                    help="auto | paged | ring (see repro.serving.ServeConfig)")
+    ap.add_argument("--page_size", type=int, default=8,
+                    help="tokens per physical page (paged cache)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     cfg = reduced(get_config(args.arch))
     model = Model(cfg)
     params = model.init(jax.random.key(args.seed))
-    engine = ServeEngine(model, params, batch_size=args.batch,
-                         max_len=args.prompt_len + args.max_new,
-                         backend=get_backend(args.backend))
+    engine = ServeEngine(
+        model, params, backend=get_backend(args.backend),
+        config=ServeConfig(batch_size=args.batch,
+                           max_len=args.prompt_len + args.max_new,
+                           cache=args.cache, page_size=args.page_size))
 
     rng = np.random.default_rng(args.seed)
     reqs = [
@@ -57,10 +70,12 @@ def main(argv=None) -> dict:
     done = engine.run(reqs)
     dt = time.time() - t0
     n_tok = sum(len(r.out) for r in done)
-    log.info("served %d requests, %d tokens in %.2fs (%.1f tok/s, backend=%s)",
-             len(done), n_tok, dt, n_tok / dt, args.backend)
+    log.info("served %d requests, %d tokens in %.2fs "
+             "(%.1f tok/s, backend=%s, cache=%s)",
+             len(done), n_tok, dt, n_tok / dt, args.backend,
+             engine.cache_mode)
     return {"requests": len(done), "tokens": n_tok, "wall_s": dt,
-            "backend": args.backend}
+            "backend": args.backend, "cache": engine.cache_mode}
 
 
 if __name__ == "__main__":

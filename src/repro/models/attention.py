@@ -384,6 +384,125 @@ def ring_valid(pos: jax.Array, capacity: int, spec: AttnSpec) -> jax.Array:
     return valid
 
 
+# ----------------------------------------------------------------------------
+# Paged KV cache (block-table-indexed page pool; per-slot positions)
+# ----------------------------------------------------------------------------
+
+
+class PagedKVCache(NamedTuple):
+    """Paged KV cache: a pool of fixed-size physical pages shared by every
+    batch slot, indexed through a per-slot block table ([B, n_pages] int32
+    page ids owned by the ServeEngine's free-list allocator). Physical page
+    0 is RESERVED as the trash page: unallocated table entries point at it,
+    so junk writes from inactive slots and right-pad positions land in
+    memory no valid attention ever reads. Unlike the ring cache there is no
+    wrap-around — every written position stays resident — which is what
+    lets each slot carry its own decode position (`cache["pos"]` [B])
+    instead of the ring's one shared counter."""
+
+    k: jax.Array  # [N_pages, page_size, Hkv, D]  (RoPE pre-applied to k)
+    v: jax.Array  # [N_pages, page_size, Hkv, D]
+
+    @property
+    def page_size(self) -> int:
+        """Tokens per physical page (P)."""
+        return self.k.shape[1]
+
+    @property
+    def num_pages(self) -> int:
+        """Physical pages in the pool (page 0 is the reserved trash page)."""
+        return self.k.shape[0]
+
+
+def init_paged_kv_cache(cfg, num_pages: int, page_size: int,
+                        dtype=jnp.bfloat16) -> PagedKVCache:
+    """Zeroed page pool [num_pages, page_size, Hkv, D] (page 0 = trash)."""
+    hd = cfg.resolved_head_dim
+    shape = (num_pages, page_size, cfg.n_kv_heads, hd)
+    return PagedKVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def paged_update_decode(cache: PagedKVCache, k_new, v_new, pos: jax.Array,
+                        pages: jax.Array) -> PagedKVCache:
+    """Write one token per slot at its own position: k_new/v_new [B,1,Hkv,D];
+    pos [B] per-slot positions; pages [B, n_pages] block table. Slot b's
+    token lands in physical page pages[b, pos_b // P] at offset pos_b % P.
+    Inactive slots carry an all-trash table row, so their writes fall into
+    the reserved page 0 (never read — see PagedKVCache); the logical page
+    index is clipped so an idling slot whose position keeps counting past
+    its table stays on the trash row instead of indexing out of bounds.
+    Exact elementwise scatter on unsharded axes, so the head-sharded pool
+    layout partitions cleanly (same rationale as `cache_update_decode`)."""
+    P = cache.page_size
+    n_table = pages.shape[1]
+    pidx = jnp.clip(pos // P, 0, n_table - 1)
+    page_of = jnp.take_along_axis(pages, pidx[:, None], axis=1)[:, 0]  # [B]
+    off = pos % P
+    k = cache.k.at[page_of, off].set(k_new[:, 0].astype(cache.k.dtype))
+    v = cache.v.at[page_of, off].set(v_new[:, 0].astype(cache.v.dtype))
+    return PagedKVCache(k, v)
+
+
+def paged_commit(pool: PagedKVCache, dense, page_row: jax.Array,
+                 length: jax.Array, seq_len: int) -> PagedKVCache:
+    """Scatter a single-request dense prefill cache into the slot's pages.
+
+    `dense` is the KVCache a batch-1, `seq_len`-wide prefill populated with
+    `full_cache=True` (capacity == seq_len, token t at slot t — the full
+    allocation is what guarantees no position was ring-evicted before this
+    commit, including by right-pad writes on sliding-window archs);
+    `page_row` [n_pages] is the slot's block-table row; `length` the number
+    of REAL prompt tokens (the prefill was right-padded up to the
+    power-of-two bucket `seq_len`). Real positions scatter into their
+    allocated pages; pad positions (t >= length) are routed to the trash
+    page so a bucket wider than the slot's allocation can never corrupt a
+    neighbour page. Leaves may carry a stacked leading layers dim (handled
+    here so the engine's tree walk stays shape-agnostic)."""
+    # dims from the right: leaves may carry a stacked leading layers axis
+    # (dense [n_super, B, W, Hkv, D]; pool [n_super, NP, P, Hkv, D]), which
+    # shifts the positional shape[.] the NamedTuple properties read
+    W = dense.k.shape[-3]
+    assert W == seq_len, (
+        "paged_commit needs a full-capacity prefill cache "
+        f"(Model.prefill(full_cache=True)); got capacity {W} != {seq_len}")
+    P = pool.k.shape[-3]
+    n_table = page_row.shape[0]
+    t = jnp.arange(W)  # token t sits at slot t — no ring layout to invert
+    ok = t < length
+    pidx = jnp.clip(t // P, 0, n_table - 1)
+    page_of = jnp.where(ok, jnp.take(page_row, pidx), 0)  # junk -> trash page
+    off = t % P
+    stacked = pool.k.ndim == 5  # [n_super, N_pages, P, Hkv, D]
+
+    def scatter(dst, src):
+        if stacked:
+            return dst.at[:, page_of, off].set(src[:, 0].astype(dst.dtype))
+        return dst.at[page_of, off].set(src[0].astype(dst.dtype))
+
+    return PagedKVCache(scatter(pool.k, dense.k), scatter(pool.v, dense.v))
+
+
+def paged_decode_attend(cfg, cache: PagedKVCache, q, pos: jax.Array,
+                        pages: jax.Array, spec: AttnSpec, backend=None):
+    """One-token attention over the paged cache. q [B,1,Hq,D]; pos [B]
+    per-slot absolute positions (cache already updated at `pos`); pages
+    [B, n_pages] block table.
+
+    With a `Backend` supplied, dispatches through
+    `Backend.paged_decode_attention` (bit-identical across backends);
+    without one, the reference form runs directly. Per-slot validity is
+    derived from the page-table position arithmetic inside the shared cell
+    program (kernels/paged_attention._page_step), so it can never drift
+    between backends."""
+    if backend is not None:
+        return backend.paged_decode_attention(q, cache.k, cache.v, pages,
+                                              pos, spec)
+    from repro.kernels import ops
+
+    return ops.paged_decode_attention_ref(q, cache.k, cache.v, pages, pos,
+                                          spec)
+
+
 def decode_attend(cfg, cache, q, pos: jax.Array, spec: AttnSpec, backend=None):
     """One-token attention over the ring cache. q: [B,1,Hq,D]; pos: scalar
     absolute position of the new token (cache already updated at `pos`).

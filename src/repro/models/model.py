@@ -107,8 +107,22 @@ class Model:
         kg = L.KeyGen(0)
         return T.init_params(self.cfg, kg, create)
 
-    def init_cache(self, batch: int, seq_len: int, dtype=jnp.bfloat16) -> dict:
-        return T.init_cache(self.cfg, batch, seq_len, dtype, kv_dtype=self.kv_dtype)
+    def init_cache(self, batch: int, seq_len: int, dtype=jnp.bfloat16,
+                   full: bool = False) -> dict:
+        return T.init_cache(self.cfg, batch, seq_len, dtype,
+                            kv_dtype=self.kv_dtype, full=full)
+
+    def init_paged_cache(self, batch: int, num_pages: int, page_size: int,
+                         table_pages: int, dtype=None) -> dict:
+        """Paged serving cache (page pools + per-slot `pos`/`pages` state;
+        see transformer.init_paged_cache). Defaults to the model's param
+        dtype so committed prefill K/V round-trip bitwise — the paged
+        engine's joined==solo parity contract depends on that. The int8
+        quantized cache has no paged variant yet (ring covers it)."""
+        if self.kv_dtype == jnp.int8:
+            raise ValueError("paged KV cache has no int8 variant; use ring")
+        return T.init_paged_cache(self.cfg, batch, num_pages, page_size,
+                                  table_pages, dtype or self.param_dtype)
 
     # --------------------------------------------------------------- helpers
     def _embed_in(self, params, batch: dict, mode: str, pos_offset=0):
@@ -159,16 +173,33 @@ class Model:
 
     # ----------------------------------------------------------------- serve
     def prefill(self, params, batch: dict, *, cache_len: Optional[int] = None,
-                impl: Optional[str] = None, backend=None):
+                impl: Optional[str] = None, backend=None, last_pos=None,
+                full_cache: bool = False):
         """Full-prompt forward returning (last-position logits, populated KV
         cache). `backend` (or the Model-level default) routes attention
-        through the Backend serving ops — see `__init__`."""
+        through the Backend serving ops — see `__init__`.
+
+        `last_pos` ([B] int32) selects WHICH position's logits come back:
+        None keeps the seed behaviour (position -1 — correct for left-padded
+        prompts), while the paged engine's RIGHT-padded bucketed prefills
+        pass the per-request last real token index (prompt_len - 1). Right
+        padding plus the causal mask IS the prefill pad mask: pads sit at
+        positions >= prompt_len, so no real query ever attends one — which
+        is what makes a join prefill's logits independent of everything
+        else in the batch.
+
+        `full_cache` lifts the sliding-window ring bound on the returned
+        cache so EVERY position's K/V survives the prefill (the paged
+        engine's commit scatters them into pages; without it, right-pad
+        writes would ring-evict in-window real tokens on sliding-window
+        archs before the commit sees them)."""
         cfg = self.cfg
         impl = impl or self.impl
         backend = backend if backend is not None else self.backend
         tokens = batch["tokens"]
         B, S = tokens.shape
-        cache = self.init_cache(B, cache_len or S, dtype=self.param_dtype)
+        cache = self.init_cache(B, cache_len or S, dtype=self.param_dtype,
+                                full=full_cache)
         h = self._act_constrain(self._embed_in(params, batch, "prefill"))
         pos = jnp.arange(S)
         out = T.run_stack(
@@ -177,7 +208,12 @@ class Model:
             impl=impl, backend=backend, constrain=self._act_constrain,
             slot_constrain=self._make_slot_constrain(params),
         )
-        hid = L.apply_norm(cfg, params["final_norm"], out.hidden[:, -1:])
+        if last_pos is None:
+            h_last = out.hidden[:, -1:]
+        else:
+            h_last = jnp.take_along_axis(
+                out.hidden, last_pos.astype(jnp.int32)[:, None, None], axis=1)
+        hid = L.apply_norm(cfg, params["final_norm"], h_last)
         logits = L.lm_logits(cfg, params["embed"], hid)
         return logits, out.cache
 
@@ -190,7 +226,15 @@ class Model:
         impl = impl or self.impl
         backend = backend if backend is not None else self.backend
         pos = cache["pos"]
-        h = self._embed_in(params, batch, "decode", pos_offset=pos)
+        # pos is the ring cache's shared scalar counter or the paged cache's
+        # per-slot [B] vector; the sinusoidal pos_offset path (rope_kind ==
+        # "none") cannot take a vector, so paged_supported refuses those
+        # archs — asserted here so a future routing change fails loud
+        # instead of silently decoding at position 0
+        assert jnp.ndim(pos) == 0 or cfg.rope_kind != "none", (
+            "per-slot positions cannot feed the sinusoidal pos_offset path")
+        off = pos if jnp.ndim(pos) == 0 else 0
+        h = self._embed_in(params, batch, "decode", pos_offset=off)
         out = T.run_stack(
             cfg, params, h, mode="decode", cache=cache, pos=pos,
             pos3=batch.get("pos3"), enc_out=None, impl=impl, backend=backend,

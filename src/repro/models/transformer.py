@@ -102,18 +102,26 @@ def init_params(cfg, kg: L.KeyGen, create) -> dict:
 # ----------------------------------------------------------------------------
 
 
-def cache_capacity(cfg, kind: str, seq_len: int) -> int:
+def cache_capacity(cfg, kind: str, seq_len: int, full: bool = False) -> int:
+    """KV capacity for one block: the sliding window bounds it (ring cache)
+    unless `full` — the paged prefill path allocates the WHOLE sequence so
+    no position is ring-evicted before `paged_commit` scatters it into
+    pages (the paged cache never wraps; the window is enforced as a decode
+    -time validity mask instead)."""
     window = cfg.sliding_window
+    if full:
+        return seq_len
     if kind == "local" or (kind in ("attn", "attn_moe") and cfg.attn_kind == "sliding"):
         return min(window, seq_len) if window else seq_len
     return seq_len
 
 
 def init_block_cache(cfg, kind: str, batch: int, seq_len: int, dtype=jnp.bfloat16,
-                     kv_dtype=None):
+                     kv_dtype=None, full: bool = False):
     if kind in ("attn", "local", "attn_moe"):
         c: dict = {"kv": attn_lib.init_kv_cache(
-            cfg, batch, cache_capacity(cfg, kind, seq_len), kv_dtype or dtype)}
+            cfg, batch, cache_capacity(cfg, kind, seq_len, full=full),
+            kv_dtype or dtype)}
         if cfg.is_encoder_decoder:
             hd = cfg.resolved_head_dim
             shape = (batch, cfg.encoder_seq, cfg.n_kv_heads, hd)
@@ -127,22 +135,75 @@ def init_block_cache(cfg, kind: str, batch: int, seq_len: int, dtype=jnp.bfloat1
     raise ValueError(kind)
 
 
-def init_cache(cfg, batch: int, seq_len: int, dtype=jnp.bfloat16, kv_dtype=None) -> dict:
-    """Full-model cache pytree: stacked per super-block slot + tail + pos."""
+def init_cache(cfg, batch: int, seq_len: int, dtype=jnp.bfloat16, kv_dtype=None,
+               full: bool = False) -> dict:
+    """Full-model cache pytree: stacked per super-block slot + tail + pos.
+    `full` disables the sliding-window capacity bound (paged prefill)."""
     pattern = cfg.block_pattern
     n_super, rem = divmod(cfg.n_layers, len(pattern))
 
     def stacked(kind, n):
-        one = init_block_cache(cfg, kind, batch, seq_len, dtype, kv_dtype)
+        one = init_block_cache(cfg, kind, batch, seq_len, dtype, kv_dtype,
+                               full=full)
         return jax.tree.map(lambda x: jnp.broadcast_to(x, (n,) + x.shape), one)
 
     return {
         "blocks": tuple(stacked(kind, n_super) for kind in pattern) if n_super else (),
         "tail": tuple(
-            init_block_cache(cfg, kind, batch, seq_len, dtype, kv_dtype)
+            init_block_cache(cfg, kind, batch, seq_len, dtype, kv_dtype,
+                             full=full)
             for kind in pattern[:rem]
         ),
         "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def paged_supported(cfg) -> bool:
+    """Whether the paged serving cache can carry this architecture: every
+    block must be an attention kind (recurrent SSM / RG-LRU state is
+    per-slot already but their PREFILL scans would ingest the paged path's
+    right-padding, so they stay on the ring engine's seed semantics),
+    decoder-only (the cross-attention cache is static per request), and
+    rotary-positioned — absolute-sinusoidal archs (rope_kind "none") embed
+    the decode position through `pos_offset`, which is a scalar shared
+    counter; the paged cache's per-slot [B] positions cannot feed it, so
+    routing such an arch here would silently decode at position 0."""
+    return (all(k in ("attn", "local", "attn_moe") for k in cfg.block_pattern)
+            and not cfg.is_encoder_decoder
+            and cfg.rope_kind != "none")
+
+
+def init_paged_cache(cfg, batch: int, num_pages: int, page_size: int,
+                     table_pages: int, dtype=jnp.bfloat16) -> dict:
+    """Paged full-model cache pytree: one physical page pool per attention
+    layer slot (stacked over super-blocks like the dense cache), plus the
+    engine-owned PER-SLOT state — `pos` [batch] decode positions and
+    `pages` [batch, table_pages] block table (all-zero rows = every entry
+    on the reserved trash page, the parked state of an inactive slot). The
+    pool has no batch dimension: slots share physical pages through the
+    block table, which is what decouples cache memory from worst-case
+    per-slot provisioning."""
+    if not paged_supported(cfg):
+        raise ValueError(
+            f"paged KV cache needs an attention-only decoder arch; "
+            f"{cfg.name} has pattern {cfg.block_pattern} "
+            f"(enc-dec={cfg.is_encoder_decoder}) — use the ring cache")
+    pattern = cfg.block_pattern
+    n_super, rem = divmod(cfg.n_layers, len(pattern))
+
+    def one():
+        return {"kv": attn_lib.init_paged_kv_cache(cfg, num_pages, page_size,
+                                                   dtype)}
+
+    def stacked(n):
+        return jax.tree.map(lambda x: jnp.broadcast_to(x, (n,) + x.shape),
+                            one())
+
+    return {
+        "blocks": tuple(stacked(n_super) for _ in pattern) if n_super else (),
+        "tail": tuple(one() for _ in pattern[:rem]),
+        "pos": jnp.zeros((batch,), jnp.int32),
+        "pages": jnp.zeros((batch, table_pages), jnp.int32),
     }
 
 
@@ -179,6 +240,7 @@ def apply_block(
     enc_out: Optional[jax.Array] = None,
     impl: str = "auto",
     backend=None,
+    pages: Optional[jax.Array] = None,  # [B, n_pages] paged-decode block table
 ):
     aux = jnp.zeros((), jnp.float32)
     new_cache = cache
@@ -187,7 +249,18 @@ def apply_block(
         spec = _attn_spec(cfg, kind)
         x = L.apply_norm(cfg, p["norm1"], h)
         q, k, v = attn_lib.qkv_proj(cfg, p["attn"], x)
-        if mode == "decode":
+        if mode == "decode" and isinstance(cache["kv"], attn_lib.PagedKVCache):
+            # paged decode: PER-SLOT positions ([B]) rotate each slot at its
+            # own absolute position and index its own pages — no shared
+            # counter, so slots at divergent positions coexist in one batch
+            pvec = pos[:, None]  # [B, 1]
+            q = _rotate(cfg, q, pvec, pos3)
+            k = _rotate(cfg, k, pvec, pos3)
+            kv = attn_lib.paged_update_decode(cache["kv"], k, v, pos, pages)
+            o = attn_lib.paged_decode_attend(cfg, kv, q, pos, pages, spec,
+                                             backend=backend)
+            new_cache = dict(cache, kv=kv)
+        elif mode == "decode":
             pvec = pos[None] if pos.ndim == 0 else pos
             q = _rotate(cfg, q, pvec, pos3)
             k = _rotate(cfg, k, pvec, pos3)
@@ -325,6 +398,7 @@ def run_stack(
 ) -> StackOut:
     pattern = cfg.block_pattern
     n_super, rem = divmod(cfg.n_layers, len(pattern))
+    pages = cache.get("pages") if cache is not None else None
 
     def super_block(h_aux, slot_params, slot_caches):
         h, aux = h_aux
@@ -338,7 +412,7 @@ def run_stack(
             h, nc, a = apply_block(
                 cfg, kind, slot_params[j], h,
                 mode=mode, cache=c, pos=pos, pos3=pos3, enc_out=enc_out,
-                impl=impl, backend=backend,
+                impl=impl, backend=backend, pages=pages,
             )
             new_caches.append(nc)
             aux = aux + a
@@ -365,15 +439,19 @@ def run_stack(
         h, nc, a = apply_block(
             cfg, kind, params["tail"][j], h,
             mode=mode, cache=c, pos=pos, pos3=pos3, enc_out=enc_out,
-            impl=impl, backend=backend,
+            impl=impl, backend=backend, pages=pages,
         )
         new_tail.append(nc)
         aux0 = aux0 + a
 
     new_cache = None
     if cache is not None:
+        # scalar shared counter (ring) or per-slot [B] positions (paged) —
+        # both advance elementwise
         new_pos = cache["pos"] + (1 if mode == "decode" else h.shape[1])
         new_cache = {"blocks": new_block_caches, "tail": tuple(new_tail), "pos": new_pos}
+        if pages is not None:
+            new_cache["pages"] = pages
     return StackOut(h, new_cache, aux0)
 
 

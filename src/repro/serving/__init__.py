@@ -1,12 +1,15 @@
 """Backend-dispatched serving: jitted prefill/decode steps + the
-continuous-batching ServeEngine (see engine.py for the parity contract)."""
+continuous-batching ServeEngine over a paged (default) or legacy ring KV
+cache (see engine.py for the parity contract and cache disciplines)."""
 from repro.serving.engine import (
     Request,
+    ServeConfig,
     ServeEngine,
+    bucket_len,
     greedy,
     make_decode_step,
     make_prefill_step,
 )
 
-__all__ = ["Request", "ServeEngine", "greedy", "make_prefill_step",
-           "make_decode_step"]
+__all__ = ["Request", "ServeConfig", "ServeEngine", "bucket_len", "greedy",
+           "make_prefill_step", "make_decode_step"]

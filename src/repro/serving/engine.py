@@ -10,27 +10,38 @@ On `pallas_sharded` the KV cache is committed head-sharded over the mesh
 `model` axis (`Backend.shard_kv_cache`), so the cache memory that caps
 batch-slot concurrency scales with devices.
 
-The decode step is what `decode_*` / `long_*` dry-run cells lower: one new
-token against a KV cache of `seq_len` (ring-bounded to the sliding window for
-sub-quadratic archs; O(1) recurrent state for SSM / RG-LRU).
+Two cache disciplines, selected by `ServeConfig.cache`:
 
-Continuous batching: the engine keeps `batch_size` static slots; a slot whose
-request finishes is immediately refilled from the pending queue MID-STREAM —
-the joining prompt is prefilled left-padded to the batch's current position
-and its cache spliced into the freed slot, so the other slots never stall on
-a drained peer (the pattern at miniature scale; paged caches are the
-production extension).
+* ``paged`` (the default for attention-only decoder archs, sliding-window
+  included — the prefill keeps every position's K/V via
+  ``Model.prefill(full_cache=True)`` and the window is enforced as
+  decode-time page validity) — a block-table + free-list PAGED KV cache
+  with PER-SLOT decode positions. Each admitted request gets pages from a
+  shared physical pool for exactly ceil((prompt + budget) / page_size)
+  tokens, is prefilled SOLO at a power-of-two bucket of its own prompt
+  length (right-padded; the causal mask is the pad mask), and decodes at
+  its own absolute positions. A
+  request's token stream — and its logits, bitwise — is therefore
+  INDEPENDENT of batching: a mid-stream join decodes exactly like a solo
+  un-padded run (tests/test_serving.py asserts bitwise logit equality on
+  all three backends). Prefill widths are bucketed, so the set of traced
+  prefill shapes stays O(log max_len) no matter how requests stagger.
 
-Left-pad caveat (inherited from the seed engine's wave padding, shared by
-every backend identically): pad tokens are ATTENDED — there is no pad mask —
-so a request's outputs depend on how far it was left-padded, i.e. a joined
-request decodes as if its prompt were preceded by pad context at the join
-position. Deterministic given the request stream, but not invariant to
-batching; the ROADMAP serving items (per-slot positions / pad masking) are
-the production fix."""
+* ``ring`` — the seed engine's static ring cache with ONE shared position
+  counter, kept for one release as the differential-testing oracle. Joins
+  prefill the incoming prompt LEFT-padded to the batch's current position,
+  so pad tokens are attended and a joined request decodes under pad context
+  at the join position (deterministic given the request stream, but not
+  invariant to batching — the wart the paged path removes). Each distinct
+  join position also traces a fresh prefill shape; that recompile is
+  inherent to the shared counter and is likewise fixed only by `paged`.
+
+``cache="auto"`` resolves to `paged` when the arch supports it (attention
+-only decoder, no int8 KV quantization) and `ring` otherwise (SSM / RG-LRU
+recurrent state, enc-dec, quantized caches)."""
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Any, Optional
 
 import jax
@@ -62,22 +73,59 @@ def greedy(logits: jax.Array) -> jax.Array:
     return jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
 
 
+def bucket_len(n: int, lo: int = 8) -> int:
+    """Round `n` up to a power-of-two bucket (>= lo): the paged engine
+    prefills at bucketed widths so many staggered request lengths trace
+    only O(log max_len) distinct prefill shapes."""
+    w = max(int(lo), 1)
+    while w < n:
+        w *= 2
+    return w
+
+
+@dataclass
+class ServeConfig:
+    """ServeEngine configuration (see the module docstring for the cache
+    disciplines). `num_pages=0` sizes the pool to cover every slot's
+    worst case plus the reserved trash page — the memory-conservative
+    default; production deployments shrink it to oversubscribe slots
+    against observed request lengths (admission control blocks until
+    enough pages free up)."""
+
+    batch_size: int = 4
+    max_len: int = 256          # per-request prompt + decode budget bound
+    cache: str = "auto"         # "auto" | "paged" | "ring"
+    page_size: int = 8          # tokens per physical page (paged only)
+    num_pages: int = 0          # physical pool size; 0 = auto-size
+    bucket_min: int = 8         # smallest power-of-two prefill bucket
+    trace_logits: bool = False  # record per-request logits on Request.logits
+
+
 @dataclass
 class Request:
-    """One generation request: prompt token ids + a decode budget."""
+    """One generation request: prompt token ids + a decode budget.
+
+    The engine fills `out` (generated token ids), `entry_width` (the
+    prefill width the request entered at: its power-of-two prompt bucket on
+    `paged`, the wave/join width on `ring` — what the ring-oracle tests
+    replay), and, with `ServeConfig.trace_logits`, `logits` (one [V] row
+    per generated token — the bitwise joined==solo evidence)."""
 
     uid: int
     prompt: np.ndarray  # [S] int32
     max_new: int
     out: list = field(default_factory=list)
     done: bool = False
+    entry_width: int = -1
+    logits: list = field(default_factory=list)
 
 
 def _splice_slot(dst: dict, src: dict, slot: int) -> dict:
-    """Copy batch slot `slot` of cache pytree `src` into `dst` (a mid-stream
-    join). Stacked super-block leaves carry batch on axis 1 (leading layers
-    dim), tail leaves on axis 0; the shared pos counter is equal on both
-    sides by construction (the join prefill is left-padded to it)."""
+    """Copy batch slot `slot` of cache pytree `src` into `dst` (a ring-mode
+    mid-stream join). Stacked super-block leaves carry batch on axis 1
+    (leading layers dim), tail leaves on axis 0; the shared pos counter is
+    equal on both sides by construction (the join prefill is left-padded to
+    it)."""
     def sub(axis):
         def f(a, b):
             idx = [slice(None)] * a.ndim
@@ -97,70 +145,71 @@ class ServeEngine:
     """Continuous-batching greedy-decode engine over `batch_size` static
     slots, Backend-dispatched end to end.
 
-    `max_len` is the KV-cache capacity every wave allocates (prompt plus
-    decode budget must fit, or the ring starts dropping context); the
-    `backend` spec resolves through `repro.core.backend.get_backend` and
-    selects the attention implementation for prefill AND decode."""
+    `max_len` bounds each request's prompt + decode budget (and sizes the
+    ring capacity / paged block table); the `backend` spec resolves through
+    `repro.core.backend.get_backend` and selects the attention
+    implementation for prefill AND decode. Cache discipline (paged vs ring)
+    comes from `config` — see the module docstring."""
 
-    def __init__(self, model, params, batch_size: int, max_len: int,
-                 backend=None):
+    def __init__(self, model, params, batch_size: Optional[int] = None,
+                 max_len: Optional[int] = None, backend=None,
+                 config: Optional[ServeConfig] = None):
         from repro.core.backend import get_backend
+        from repro.models import transformer as T
 
+        cfg = config or ServeConfig()
+        if batch_size is not None:
+            cfg = replace(cfg, batch_size=batch_size)
+        if max_len is not None:
+            cfg = replace(cfg, max_len=max_len)
+        self.config = cfg
         self.model = model
         self.params = params
-        self.B = batch_size
-        self.max_len = max_len
+        self.B = cfg.batch_size
+        self.max_len = cfg.max_len
         self.backend = get_backend(backend) if backend is not None else None
-        self._prefill = jax.jit(
-            make_prefill_step(model, self.backend, cache_len=max_len))
+        paged_ok = (T.paged_supported(model.cfg)
+                    and model.kv_dtype != jnp.int8)
+        if cfg.cache == "auto":
+            self.cache_mode = "paged" if paged_ok else "ring"
+        elif cfg.cache == "paged" and not paged_ok:
+            raise ValueError(
+                f"cache='paged' unsupported for {model.cfg.name} "
+                "(recurrent blocks / enc-dec / int8 KV) — use 'ring' or 'auto'")
+        elif cfg.cache not in ("paged", "ring"):
+            raise ValueError(f"unknown cache mode {cfg.cache!r}")
+        else:
+            self.cache_mode = cfg.cache
+        self.prefill_widths: set = set()  # distinct traced prefill widths
         self._decode = jax.jit(make_decode_step(model, self.backend),
                                donate_argnums=(1,))
+        if self.cache_mode == "ring":
+            self._prefill = jax.jit(
+                make_prefill_step(model, self.backend, cache_len=cfg.max_len))
+        else:
+            if cfg.page_size < 1:
+                raise ValueError(f"page_size must be >= 1, got {cfg.page_size}")
+            if jax.default_backend() == "tpu" and cfg.page_size % 8:
+                # compiled pages are (page_size, D) sublane tiles; interpret
+                # mode (CPU) takes any size — fail at config time, not on
+                # the first decode step after admission+prefill work
+                raise ValueError(
+                    f"TPU paged cache needs page_size % 8 == 0, "
+                    f"got {cfg.page_size}")
+            self.table_pages = -(-cfg.max_len // cfg.page_size)
+            # auto pool: full per-slot coverage + the reserved trash page
+            self.num_pages = cfg.num_pages or (
+                1 + self.B * self.table_pages)
+            self._paged_prefill: dict = {}  # bucket width -> jitted prefill
+            self._paged_commit: dict = {}   # bucket width -> jitted commit
 
+    # ------------------------------------------------------------ shared bits
     def _commit_cache(self, cache):
         """Pin KV leaves head-sharded over the mesh model axis (no-op off
         pallas_sharded) so continuous batching scales cache with devices."""
         if self.backend is None:
             return cache
         return self.backend.shard_kv_cache(cache)
-
-    def _try_join(self, pending: list, done: list, cache, nxt, active,
-                  remaining, slot):
-        """Fill freed `slot` from `pending` mid-stream: prefill the joining
-        prompt left-padded to the batch's current position, splice its cache
-        into the slot, and record its first generated token (the join
-        prefill's greedy pick — the analogue of the wave prefill's `nxt`).
-        Returns updated (cache, nxt) — unchanged when nothing fits (prompt
-        longer than the elapsed positions, or decode budget past cache
-        capacity).
-
-        Cost note: the join prefill runs at the full batch width and at
-        token length == the current position, so each distinct join position
-        traces a new prefill shape (fine at this engine's miniature scale;
-        per-slot positions + a paged cache — the ROADMAP serving items —
-        are what remove the recompile and the wasted B-1 rows)."""
-        while True:
-            cur = int(np.asarray(cache["pos"]))
-            j = next((r for r in pending
-                      if len(r.prompt) <= cur and cur + r.max_new <= self.max_len),
-                     None)
-            if j is None:
-                return cache, nxt
-            pending.remove(j)
-            toks = np.zeros((self.B, cur), np.int32)
-            toks[slot, cur - len(j.prompt):] = j.prompt
-            j_logits, j_cache = self._prefill(self.params,
-                                              {"tokens": jnp.asarray(toks)})
-            cache = self._commit_cache(_splice_slot(cache, j_cache, slot))
-            first = greedy(j_logits)
-            j.out.append(int(np.asarray(first)[slot, 0]))
-            if j.max_new == 1:  # drained on its own prefill; slot frees again
-                j.done = True
-                done.append(j)
-                continue
-            nxt = nxt.at[slot].set(first[slot])
-            active[slot] = j
-            remaining[slot] = j.max_new - 1
-            return cache, nxt
 
     def run(self, requests: list) -> list:
         """Serve `requests` to completion; returns them in finish order."""
@@ -174,6 +223,232 @@ class ServeEngine:
                 done.append(r)
             else:
                 pending.append(r)
+        if self.cache_mode == "paged":
+            return self._run_paged(pending, done)
+        return self._run_ring(pending, done)
+
+    # ------------------------------------------------------------- paged path
+    def _bucket(self, n: int) -> int:
+        return bucket_len(n, self.config.bucket_min)
+
+    def _get_paged_prefill(self, width: int):
+        if width not in self._paged_prefill:
+            model, backend = self.model, self.backend
+
+            def prefill(params, toks, last_pos):
+                # full_cache: keep EVERY position's K/V (no sliding-window
+                # ring bound) so the page commit sees the whole prompt —
+                # the window is a decode-time validity mask on pages
+                return model.prefill(params, {"tokens": toks},
+                                     cache_len=width, backend=backend,
+                                     last_pos=last_pos, full_cache=True)
+
+            self._paged_prefill[width] = jax.jit(prefill)
+        return self._paged_prefill[width]
+
+    def _get_paged_commit(self, width: int):
+        if width not in self._paged_commit:
+            from repro.models import attention as attn_lib
+
+            def commit(cache, dense, page_row, length):
+                def walk(pool, dn):
+                    if isinstance(pool, attn_lib.PagedKVCache):
+                        return attn_lib.paged_commit(pool, dn, page_row,
+                                                     length, width)
+                    if isinstance(pool, dict):
+                        return {k: walk(pool[k], dn[k]) for k in pool}
+                    if type(pool) is tuple:
+                        return tuple(walk(a, b) for a, b in zip(pool, dn))
+                    return pool
+
+                new = dict(cache)
+                new["blocks"] = walk(cache["blocks"], dense["blocks"])
+                new["tail"] = walk(cache["tail"], dense["tail"])
+                return new
+
+            self._paged_commit[width] = jax.jit(commit)
+        return self._paged_commit[width]
+
+    def _paged_init(self, pending: list, done: list):
+        """Validate the request set, build the pool cache, and admit into
+        every slot — the decode-ready paged state. Split out of the run
+        loop so benchmarks can prime a realistic decode state through the
+        REAL admission path instead of re-implementing it. Returns
+        (cache, nxt, free, slot_pages, active, remaining)."""
+        P = self.config.page_size
+        for r in pending:
+            if len(r.prompt) + r.max_new > self.max_len:
+                raise ValueError(
+                    f"request {r.uid}: prompt {len(r.prompt)} + budget "
+                    f"{r.max_new} exceeds max_len {self.max_len}")
+            if len(r.prompt) == 0:
+                raise ValueError(f"request {r.uid}: empty prompt")
+        cache = self._commit_cache(self.model.init_paged_cache(
+            self.B, self.num_pages, P, self.table_pages))
+        free = list(range(1, self.num_pages))  # page 0 = reserved trash
+        slot_pages: list = [[] for _ in range(self.B)]
+        active: list = [None] * self.B
+        remaining = [0] * self.B
+        nxt = jnp.zeros((self.B, 1), jnp.int32)
+        cache, nxt = self._admit_idle_slots(pending, done, cache, nxt,
+                                            active, remaining, free,
+                                            slot_pages)
+        return cache, nxt, free, slot_pages, active, remaining
+
+    def _admit_idle_slots(self, pending, done, cache, nxt, active, remaining,
+                          free, slot_pages):
+        """Offer admission to EVERY idle slot — not just the one that
+        triggered it. A slot that found nothing admittable earlier (pool
+        exhausted by its peers) must be retried whenever pages free up, or
+        it idles for the engine's whole lifetime and concurrency silently
+        shrinks."""
+        for i in range(self.B):
+            if active[i] is None:
+                cache, nxt = self._try_admit(pending, done, cache, nxt,
+                                             active, remaining, free,
+                                             slot_pages, i)
+        return cache, nxt
+
+    def _run_paged(self, pending: list, done: list) -> list:
+        cache, nxt, free, slot_pages, active, remaining = self._paged_init(
+            pending, done)
+        while any(r is not None for r in active):
+            logits, cache = self._decode(self.params, cache, {"tokens": nxt})
+            nxt = greedy(logits)
+            nxt_np = np.asarray(nxt)
+            log_np = (np.asarray(logits)
+                      if self.config.trace_logits else None)
+            freed = False
+            for i, r in enumerate(active):
+                if r is None:
+                    continue
+                r.out.append(int(nxt_np[i, 0]))
+                if log_np is not None:
+                    r.logits.append(log_np[i, 0].copy())
+                remaining[i] -= 1
+                if remaining[i] == 0:
+                    r.done = True
+                    done.append(r)
+                    active[i] = None
+                    cache = self._release_slot(cache, free, slot_pages, i)
+                    freed = True
+            if freed:
+                cache, nxt = self._admit_idle_slots(pending, done, cache, nxt,
+                                                    active, remaining, free,
+                                                    slot_pages)
+        if pending:
+            # cannot happen with the auto-sized pool (B full tables + trash
+            # always admit an empty batch) — but a hand-shrunk num_pages
+            # could leave requests no slot can ever hold; fail loud
+            raise RuntimeError(
+                f"{len(pending)} requests unadmittable with "
+                f"{len(free)}/{self.num_pages - 1} pages free")
+        return done
+
+    def _release_slot(self, cache, free: list, slot_pages: list, slot: int):
+        """Return a finished slot's pages to the free list and park the slot
+        (all-trash table row, pos 0) so its junk decode writes land in the
+        reserved trash page."""
+        free.extend(slot_pages[slot])
+        slot_pages[slot] = []
+        cache["pages"] = cache["pages"].at[slot].set(0)
+        cache["pos"] = cache["pos"].at[slot].set(0)
+        return cache
+
+    def _try_admit(self, pending: list, done: list, cache, nxt, active,
+                   remaining, free: list, slot_pages: list, slot: int):
+        """Admit the first pending request whose page need fits the free
+        list into `slot`: allocate pages, prefill the prompt SOLO at its
+        power-of-two bucket width (right-padded — batch-independent by
+        construction), scatter the dense prefill K/V into the allocated
+        pages, and record the first generated token (the prefill's greedy
+        pick at the last real position). Returns updated (cache, nxt)."""
+        P = self.config.page_size
+        while True:
+            j = next((r for r in pending
+                      if -(-(len(r.prompt) + r.max_new) // P) <= len(free)),
+                     None)
+            if j is None:
+                return cache, nxt
+            pending.remove(j)
+            L = len(j.prompt)
+            need = -(-(L + j.max_new) // P)
+            pages = [free.pop() for _ in range(need)]
+            slot_pages[slot] = pages
+            row = np.zeros(self.table_pages, np.int32)
+            row[:need] = pages
+            width = self._bucket(L)
+            j.entry_width = width
+            self.prefill_widths.add(width)
+            toks = np.zeros((1, width), np.int32)
+            toks[0, :L] = j.prompt  # RIGHT-pad: pads sit past the causal mask
+            logits, dense = self._get_paged_prefill(width)(
+                self.params, jnp.asarray(toks),
+                jnp.asarray([L - 1], jnp.int32))
+            cache = self._commit_cache(self._get_paged_commit(width)(
+                cache, dense, jnp.asarray(row),
+                jnp.asarray(L, jnp.int32)))
+            cache["pages"] = cache["pages"].at[slot].set(jnp.asarray(row))
+            cache["pos"] = cache["pos"].at[slot].set(L)
+            first = greedy(logits)
+            j.out.append(int(np.asarray(first)[0, 0]))
+            if self.config.trace_logits:
+                j.logits.append(np.asarray(logits)[0, 0].copy())
+            if j.max_new == 1:  # drained on its own prefill; slot frees again
+                j.done = True
+                done.append(j)
+                cache = self._release_slot(cache, free, slot_pages, slot)
+                continue
+            nxt = nxt.at[slot].set(first[0])
+            active[slot] = j
+            remaining[slot] = j.max_new - 1
+            return cache, nxt
+
+    # -------------------------------------------------------------- ring path
+    def _try_join(self, pending: list, done: list, cache, nxt, active,
+                  remaining, slot):
+        """Fill freed `slot` from `pending` mid-stream: prefill the joining
+        prompt left-padded to the batch's current position, splice its cache
+        into the slot, and record its first generated token (the join
+        prefill's greedy pick — the analogue of the wave prefill's `nxt`).
+        Returns updated (cache, nxt) — unchanged when nothing fits (prompt
+        longer than the elapsed positions, or decode budget past cache
+        capacity).
+
+        Cost note: the join prefill runs at the full batch width and at
+        token length == the current position, so each distinct join position
+        traces a new prefill shape — inherent to the ring cache's shared
+        counter; the paged path is what removes the recompile and the
+        wasted B-1 rows."""
+        while True:
+            cur = int(np.asarray(cache["pos"]))
+            j = next((r for r in pending
+                      if len(r.prompt) <= cur and cur + r.max_new <= self.max_len),
+                     None)
+            if j is None:
+                return cache, nxt
+            pending.remove(j)
+            toks = np.zeros((self.B, cur), np.int32)
+            toks[slot, cur - len(j.prompt):] = j.prompt
+            j.entry_width = cur
+            self.prefill_widths.add(cur)
+            j_logits, j_cache = self._prefill(self.params,
+                                              {"tokens": jnp.asarray(toks)})
+            cache = self._commit_cache(_splice_slot(cache, j_cache, slot))
+            first = greedy(j_logits)
+            j.out.append(int(np.asarray(first)[slot, 0]))
+            if self.config.trace_logits:
+                j.logits.append(np.asarray(j_logits)[slot, -1].copy())
+            if j.max_new == 1:  # drained on its own prefill; slot frees again
+                j.done = True
+                done.append(j)
+                continue
+            nxt = nxt.at[slot].set(first[slot])
+            active[slot] = j
+            remaining[slot] = j.max_new - 1
+            return cache, nxt
+
+    def _run_ring(self, pending: list, done: list) -> list:
         while pending:
             wave = pending[: self.B]
             pending = pending[self.B:]
@@ -181,9 +456,15 @@ class ServeEngine:
             toks = np.zeros((self.B, S), np.int32)
             for i, r in enumerate(wave):
                 toks[i, S - len(r.prompt):] = r.prompt  # left-pad
+                r.entry_width = S
+            self.prefill_widths.add(S)
             logits, cache = self._prefill(self.params, {"tokens": jnp.asarray(toks)})
             cache = self._commit_cache(cache)
             nxt = greedy(logits)
+            if self.config.trace_logits:
+                log_np = np.asarray(logits)
+                for i, r in enumerate(wave):
+                    r.logits.append(log_np[i, -1].copy())
             active: list = list(wave) + [None] * (self.B - len(wave))
             remaining = [r.max_new if r else 0 for r in active]
             while True:
@@ -203,4 +484,9 @@ class ServeEngine:
                     break
                 logits, cache = self._decode(self.params, cache, {"tokens": nxt})
                 nxt = greedy(logits)
+                if self.config.trace_logits:
+                    log_np = np.asarray(logits)
+                    for i, r in enumerate(active):
+                        if r is not None and remaining[i] > 0:
+                            r.logits.append(log_np[i, 0].copy())
         return done

@@ -1,8 +1,18 @@
-"""Serving parity contract: prefill + decode dispatch through Backend with
-BIT-IDENTICAL logits across reference | pallas | pallas_sharded (exact
-equality, not allclose), the KV cache lands head-sharded over the mesh model
-axis on pallas_sharded, and the continuous-batching ServeEngine survives a
-mid-stream batch join."""
+"""Serving parity contract: prefill + decode (ring AND paged) dispatch
+through Backend with BIT-IDENTICAL logits across reference | pallas |
+pallas_sharded (exact equality, not allclose), the KV cache — ring leaves
+and paged page pools — lands head-sharded over the mesh model axis on
+pallas_sharded, the continuous-batching ServeEngine survives mid-stream
+batch joins, and on the paged cache a joined request's tokens AND logits
+are bitwise identical to a solo un-padded run (batching invariance; the
+ring cache keeps the seed's left-pad join semantics as the differential
+oracle).
+
+`REPRO_TEST_BACKENDS` (comma-separated) restricts which non-reference
+backends the parity tests sweep — the CI backend-matrix job sets it to run
+one backend per matrix leg; unset means all."""
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -11,10 +21,26 @@ import pytest
 from repro.configs import get_config, reduced
 from repro.core.backend import BACKENDS, get_backend
 from repro.models import Model
-from repro.models.attention import AttnSpec, KVCache, QuantKVCache, ring_valid
-from repro.serving.engine import Request, ServeEngine
+from repro.models.attention import (AttnSpec, KVCache, PagedKVCache,
+                                    QuantKVCache, ring_valid)
+from repro.serving.engine import Request, ServeConfig, ServeEngine
 
-NONREF = [b for b in BACKENDS if b != "reference"]
+_SEL = [b.strip() for b in os.environ.get(
+    "REPRO_TEST_BACKENDS", ",".join(BACKENDS)).split(",") if b.strip()]
+NONREF = [b for b in _SEL if b != "reference"]
+# tests that exercise pallas_sharded BY NAME (sharding-layout asserts etc.)
+# only belong on matrix legs that include it
+needs_sharded = pytest.mark.skipif(
+    "pallas_sharded" not in _SEL,
+    reason="pallas_sharded excluded by REPRO_TEST_BACKENDS")
+
+
+def _require_selected(backend: str):
+    """Honest matrix rows: a leg that excluded `backend` SKIPS its tests
+    (visible in the report) instead of silently substituting another
+    backend."""
+    if backend not in _SEL:
+        pytest.skip(f"{backend} excluded by REPRO_TEST_BACKENDS")
 
 
 def _qkv(key, B, S, Hq, Hkv, D):
@@ -97,6 +123,7 @@ def test_model_logits_bitwise_across_backends(arch, rng):
             np.testing.assert_array_equal(a, b, err_msg=f"{name} step {i}")
 
 
+@needs_sharded
 def test_kv_cache_sharded_layout(rng):
     """On pallas_sharded, `Backend.shard_kv_cache` commits every KVCache leaf
     head-sharded over the mesh model axis (kv_cache_spec rule); the helpers
@@ -151,16 +178,21 @@ def test_kv_cache_spec_divisibility_fallback():
 
 
 @pytest.mark.parametrize("backend", ["reference", "pallas_sharded"])
-def test_serve_engine_midstream_join(backend, rng):
-    """Continuous batching survives a mid-stream batch join: a request from
-    the pending queue fills a freed slot while the other slot keeps
-    decoding, every request gets its full decode budget, and the joined
-    request's tokens exactly match a solo run with the same left-padding."""
+def test_serve_engine_midstream_join_ring(backend, rng):
+    """RING cache (the seed-semantics differential oracle): continuous
+    batching survives a mid-stream batch join, every request gets its full
+    decode budget, and the joined request's tokens exactly match a solo run
+    with the same LEFT-padding (the seed's join-position-dependent
+    semantics, preserved verbatim behind ServeConfig.cache='ring')."""
+    _require_selected(backend)
     cfg = reduced(get_config("olmo-1b"))
     model = Model(cfg)
     params = model.init(rng)
     bk = get_backend(backend)
-    eng = ServeEngine(model, params, batch_size=2, max_len=48, backend=bk)
+    ring = ServeConfig(cache="ring")
+    eng = ServeEngine(model, params, batch_size=2, max_len=48, backend=bk,
+                      config=ring)
+    assert eng.cache_mode == "ring"
     rng_np = np.random.default_rng(0)
     reqs = [
         Request(0, rng_np.integers(0, cfg.vocab_size, 8).astype(np.int32), 3),
@@ -173,14 +205,17 @@ def test_serve_engine_midstream_join(backend, rng):
     # request 2 joined when slot 0 drained after its prefill token + 2
     # decode steps, i.e. at position 8 + 2 = 10 -> the join is exactly a
     # solo request left-padded to 10 (greedy decode is deterministic)
-    solo_eng = ServeEngine(model, params, batch_size=1, max_len=48, backend=bk)
+    solo_eng = ServeEngine(model, params, batch_size=1, max_len=48, backend=bk,
+                           config=ring)
     solo_prompt = np.concatenate(
         [np.zeros(4, np.int32), reqs[2].prompt]).astype(np.int32)
     solo = solo_eng.run([Request(9, solo_prompt, 5)])[0]
     joined = next(r for r in done if r.uid == 2)
+    assert joined.entry_width == 10
     assert joined.out == solo.out
 
 
+@needs_sharded
 @pytest.mark.parametrize("arch", ["recurrentgemma-9b", "mamba2-370m"])
 def test_serve_engine_sharded_recurrent_state_survives(arch, rng):
     """shard_kv_cache must leave recurrent-state NamedTuples (RGLRUState /
@@ -217,7 +252,8 @@ def test_serve_engine_zero_budget_request(rng):
 
 def test_serve_engine_backend_logits_identical(rng):
     """The engine produces identical token streams under every backend —
-    the serving parity contract observed end to end."""
+    the serving parity contract observed end to end (on the default paged
+    cache for olmo: 'auto' resolves to 'paged' for attention-only archs)."""
     cfg = reduced(get_config("olmo-1b"))
     model = Model(cfg)
     params = model.init(rng)
@@ -225,11 +261,278 @@ def test_serve_engine_backend_logits_identical(rng):
     prompts = [rng_np.integers(0, cfg.vocab_size, 8).astype(np.int32)
                for _ in range(3)]
     outs = {}
-    for name in BACKENDS:
+    for name in ["reference"] + NONREF:
         eng = ServeEngine(model, params, batch_size=2, max_len=24,
                           backend=get_backend(name))
+        assert eng.cache_mode == "paged"  # auto resolves paged for olmo
         reqs = [Request(i, p.copy(), 4) for i, p in enumerate(prompts)]
         done = eng.run(reqs)
         outs[name] = {r.uid: r.out for r in done}
     for name in NONREF:
         assert outs[name] == outs["reference"], name
+
+
+# ----------------------------------------------------------------------------
+# Paged cache: op parity, pool sharding, batching invariance, bucketing
+# ----------------------------------------------------------------------------
+
+
+def _paged_inputs(rng, B, Hq, Hkv, D, P, n_table, n_pool, pos_list):
+    ks = jax.random.split(rng, 4)
+    q = jax.random.normal(ks[0], (B, 1, Hq, D))
+    kp = jax.random.normal(ks[1], (n_pool, P, Hkv, D))
+    vp = jax.random.normal(ks[2], (n_pool, P, Hkv, D))
+    pt = jax.random.randint(ks[3], (B, n_table), 0, n_pool).astype(jnp.int32)
+    pos = jnp.asarray(pos_list, jnp.int32)
+    return q, kp, vp, pt, pos
+
+
+@pytest.mark.parametrize("spec", [
+    AttnSpec(True, 0), AttnSpec(True, 5), AttnSpec(True, 0, 30.0),
+])
+@pytest.mark.parametrize("hkv", [2, 4])  # GQA and MHA (G == 1 matvec path)
+def test_paged_decode_attention_op_bitwise(spec, hkv, rng):
+    """Backend.paged_decode_attention over a page pool + block table:
+    bit-identical across backends, including windowed validity derived from
+    the page-table position arithmetic and multi-page softmax merges."""
+    q, kp, vp, pt, pos = _paged_inputs(rng, 2, 4, hkv, 16, 4, 3, 9, [10, 3])
+    want = np.asarray(get_backend("reference").paged_decode_attention(
+        q, kp, vp, pt, pos, spec))
+    assert np.all(np.isfinite(want))
+    for name in NONREF:
+        got = np.asarray(get_backend(name).paged_decode_attention(
+            q, kp, vp, pt, pos, spec))
+        np.testing.assert_array_equal(got, want, err_msg=f"{name} {spec}")
+
+
+@pytest.mark.parametrize("spec", [
+    AttnSpec(True, 0), AttnSpec(True, 7), AttnSpec(True, 0, 30.0),
+])
+def test_paged_matches_ring_decode(spec, rng):
+    """Differential oracle: the paged op on a paged layout of some cache
+    contents agrees with the ring op on the dense layout of the SAME
+    contents (allclose — the two run different softmax programs: split-page
+    merge vs single-block)."""
+    B, Hq, Hkv, D, P, NT = 2, 4, 2, 8, 4, 3
+    W = NT * P
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (B, 1, Hq, D))
+    kd = jax.random.normal(ks[1], (B, W, Hkv, D))
+    vd = jax.random.normal(ks[2], (B, W, Hkv, D))
+    # paged layout: slot b's page j is physical page 1 + b*NT + j
+    kp = jnp.zeros((1 + B * NT, P, Hkv, D))
+    vp = jnp.zeros((1 + B * NT, P, Hkv, D))
+    pt = np.zeros((B, NT), np.int32)
+    for b in range(B):
+        for j in range(NT):
+            pid = 1 + b * NT + j
+            kp = kp.at[pid].set(kd[b, j * P:(j + 1) * P])
+            vp = vp.at[pid].set(vd[b, j * P:(j + 1) * P])
+            pt[b, j] = pid
+    pos_v = W - 2  # same position for every slot so ring_valid applies
+    bk = get_backend("reference")
+    paged = np.asarray(bk.paged_decode_attention(
+        q, kp, vp, jnp.asarray(pt), jnp.full((B,), pos_v, jnp.int32), spec))
+    ring = np.asarray(bk.decode_attention(
+        q, kd, vd, ring_valid(jnp.asarray(pos_v), W, spec), spec))
+    np.testing.assert_allclose(paged, ring, rtol=2e-5, atol=2e-6)
+
+
+@needs_sharded
+def test_paged_pool_sharded_layout(rng):
+    """On pallas_sharded, `Backend.shard_kv_cache` commits every PagedKVCache
+    pool head-sharded over the mesh model axis (page_pool_spec rule); the
+    block table and per-slot positions stay untouched."""
+    from repro.dist.sharding import page_pool_spec
+
+    bk = get_backend("pallas_sharded")
+    cfg = reduced(get_config("olmo-1b"))
+    model = Model(cfg)
+    cache = model.init_paged_cache(batch=2, num_pages=9, page_size=8,
+                                   table_pages=4)
+    cache = bk.shard_kv_cache(cache)
+
+    found = []
+
+    def walk(node):
+        if isinstance(node, PagedKVCache):
+            found.append(node)
+            return
+        if isinstance(node, dict):
+            for x in node.values():
+                walk(x)
+        elif isinstance(node, tuple):
+            for x in node:
+                walk(x)
+
+    walk(cache)
+    assert found, "no page pools in the cache"
+    for pool in found:
+        want = page_pool_spec(bk.mesh, pool.k.shape, pool.k.ndim - 2)
+        assert want[pool.k.ndim - 2] == "model"  # genuinely head-sharded rule
+        assert pool.k.sharding.spec == want, pool.k.sharding
+        assert pool.v.sharding.spec == want, pool.v.sharding
+    # reference backend: everything passes through untouched
+    assert get_backend("reference").shard_kv_cache(cache) is cache
+    assert get_backend("reference").page_pool_sharding((9, 8, 4, 16), 2) is None
+
+
+@pytest.mark.parametrize("backend", list(BACKENDS))
+def test_serve_engine_paged_join_matches_solo_unpadded(backend, rng):
+    """THE paged upgrade over the seed semantics: a request joining
+    mid-stream produces tokens AND logits bitwise identical to the same
+    request run solo and un-padded — outputs are invariant to batching
+    (per-slot positions + right-pad-causal pad masking), not merely
+    deterministic given the request stream like the ring path."""
+    _require_selected(backend)
+    cfg = reduced(get_config("olmo-1b"))
+    model = Model(cfg)
+    params = model.init(rng)
+    bk = get_backend(backend)
+    paged = ServeConfig(batch_size=2, max_len=48, cache="paged", page_size=8,
+                        trace_logits=True)
+    eng = ServeEngine(model, params, backend=bk, config=paged)
+    rng_np = np.random.default_rng(0)
+    prompts = [rng_np.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in (8, 8, 6)]
+    budgets = [3, 10, 5]
+    done = eng.run([Request(i, p.copy(), b)
+                    for i, (p, b) in enumerate(zip(prompts, budgets))])
+    assert len(done) == 3 and all(r.done for r in done)
+    assert [len(r.out) for r in sorted(done, key=lambda r: r.uid)] == budgets
+    solo_cfg = ServeConfig(batch_size=1, max_len=48, cache="paged",
+                           page_size=8, trace_logits=True)
+    for r in sorted(done, key=lambda r: r.uid):
+        solo_eng = ServeEngine(model, params, backend=bk, config=solo_cfg)
+        solo = solo_eng.run(
+            [Request(9, prompts[r.uid].copy(), budgets[r.uid])])[0]
+        assert solo.out == r.out, (backend, r.uid)
+        assert len(solo.logits) == len(r.logits) == len(r.out)
+        for k, (a, b) in enumerate(zip(solo.logits, r.logits)):
+            np.testing.assert_array_equal(
+                a, b, err_msg=f"{backend} uid={r.uid} token {k}")
+
+
+def test_serve_engine_paged_sliding_window_join_matches_solo(rng):
+    """Sliding-window archs on the paged cache: the bucketed prefill keeps
+    EVERY position's K/V (Model.prefill(full_cache=True) — no ring
+    eviction by right-pad writes), the window is enforced as decode-time
+    page validity, and the joined==solo bitwise contract holds. Regression
+    guard for the eviction bug: starcoder2's reduced window (32) is smaller
+    than the 40-token prompts' 64-wide bucket, so any ring bound on the
+    prefill cache would zero out in-window positions and break parity."""
+    cfg = reduced(get_config("starcoder2-3b"))
+    assert cfg.attn_kind == "sliding" and cfg.sliding_window == 32
+    model = Model(cfg)
+    params = model.init(rng)
+    bk = get_backend("reference")
+    paged = ServeConfig(batch_size=2, max_len=48, cache="paged", page_size=8,
+                        trace_logits=True)
+    eng = ServeEngine(model, params, backend=bk, config=paged)
+    assert eng.cache_mode == "paged"
+    rng_np = np.random.default_rng(1)
+    prompts = [rng_np.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in (40, 8, 40)]  # 40 > window=32, buckets to 64
+    budgets = [4, 9, 5]
+    done = eng.run([Request(i, p.copy(), b)
+                    for i, (p, b) in enumerate(zip(prompts, budgets))])
+    assert [len(r.out) for r in sorted(done, key=lambda r: r.uid)] == budgets
+    solo_cfg = ServeConfig(batch_size=1, max_len=48, cache="paged",
+                           page_size=8, trace_logits=True)
+    for r in sorted(done, key=lambda r: r.uid):
+        solo_eng = ServeEngine(model, params, backend=bk, config=solo_cfg)
+        solo = solo_eng.run(
+            [Request(9, prompts[r.uid].copy(), budgets[r.uid])])[0]
+        assert solo.out == r.out, r.uid
+        for k, (a, b) in enumerate(zip(solo.logits, r.logits)):
+            np.testing.assert_array_equal(a, b, err_msg=f"uid={r.uid} tok {k}")
+    # the window actually bites: with full attention instead, the first
+    # decode LOGITS on the >window prompt must differ (otherwise this test
+    # would prove nothing about windowed page validity)
+    import dataclasses
+
+    nowin = Model(dataclasses.replace(cfg, attn_kind="full"))
+    nw = ServeEngine(nowin, params, backend=bk, config=solo_cfg)
+    other = nw.run([Request(9, prompts[0].copy(), budgets[0])])[0]
+    win_logits = next(r for r in done if r.uid == 0).logits
+    assert not all(np.array_equal(a, b)
+                   for a, b in zip(other.logits, win_logits))
+
+
+def test_paged_prefill_shapes_bucketed(rng):
+    """Under many staggered joins with scattered prompt lengths, the paged
+    engine traces only O(log max_len) distinct prefill widths (power-of-two
+    buckets) — the ring engine's per-join-position recompile is gone."""
+    import math
+
+    cfg = reduced(get_config("olmo-1b"))
+    model = Model(cfg)
+    params = model.init(rng)
+    max_len = 64
+    eng = ServeEngine(model, params, backend=get_backend("reference"),
+                      config=ServeConfig(batch_size=2, max_len=max_len,
+                                         cache="paged", page_size=8))
+    rng_np = np.random.default_rng(4)
+    lens = [int(rng_np.integers(1, 40)) for _ in range(12)]
+    reqs = [Request(i, rng_np.integers(0, cfg.vocab_size, n).astype(np.int32),
+                    int(rng_np.integers(1, 5))) for i, n in enumerate(lens)]
+    done = eng.run(reqs)
+    assert len(done) == len(reqs)
+    bound = int(math.log2(max_len)) + 1
+    assert len(eng.prefill_widths) <= bound, (eng.prefill_widths, bound)
+    assert all(w & (w - 1) == 0 for w in eng.prefill_widths), eng.prefill_widths
+
+
+@pytest.mark.parametrize("cache_mode", ["paged", "ring"])
+def test_serve_engine_randomized_schedule_oracle(cache_mode, rng):
+    """Engine oracle under randomized arrival/finish schedules: every
+    request's stream must equal its solo-run oracle. On `paged` the oracle
+    is the request run SOLO, UN-padded (batching invariance — the pad
+    -attention wart is gone); on `ring` it is the seed semantics oracle —
+    the request left-padded with zeros to the width it entered the batch at
+    (wave width or join position, recorded as Request.entry_width)."""
+    cfg = reduced(get_config("olmo-1b"))
+    model = Model(cfg)
+    params = model.init(rng)
+    bk = get_backend("reference")
+    conf = ServeConfig(batch_size=2, max_len=48, cache=cache_mode, page_size=8)
+    eng = ServeEngine(model, params, backend=bk, config=conf)
+    assert eng.cache_mode == cache_mode
+    rng_np = np.random.default_rng(7)
+    reqs = [Request(i,
+                    rng_np.integers(0, cfg.vocab_size,
+                                    int(rng_np.integers(2, 12))).astype(np.int32),
+                    int(rng_np.integers(1, 7)))
+            for i in range(7)]
+    prompts = {r.uid: r.prompt.copy() for r in reqs}
+    budgets = {r.uid: r.max_new for r in reqs}
+    done = eng.run(reqs)
+    assert len(done) == len(reqs) and all(r.done for r in done)
+    solo_conf = ServeConfig(batch_size=1, max_len=48, cache=cache_mode,
+                            page_size=8)
+    for r in done:
+        if cache_mode == "paged":
+            solo_prompt = prompts[r.uid]
+        else:  # seed semantics: left-pad to the recorded entry width
+            pad = r.entry_width - len(prompts[r.uid])
+            assert pad >= 0
+            solo_prompt = np.concatenate(
+                [np.zeros(pad, np.int32), prompts[r.uid]]).astype(np.int32)
+        solo_eng = ServeEngine(model, params, backend=bk, config=solo_conf)
+        solo = solo_eng.run([Request(99, solo_prompt, budgets[r.uid])])[0]
+        assert solo.out == r.out, (cache_mode, r.uid)
+
+
+def test_paged_cache_rejects_unsupported_arch(rng):
+    """cache='paged' on a recurrent arch fails loud; 'auto' falls back to
+    ring so sub-quadratic archs keep serving on seed semantics."""
+    cfg = reduced(get_config("recurrentgemma-9b"))
+    model = Model(cfg)
+    params = model.init(rng)
+    with pytest.raises(ValueError, match="paged"):
+        ServeEngine(model, params, batch_size=2, max_len=16,
+                    backend=get_backend("reference"),
+                    config=ServeConfig(cache="paged"))
+    eng = ServeEngine(model, params, batch_size=2, max_len=16,
+                      backend=get_backend("reference"))
+    assert eng.cache_mode == "ring"

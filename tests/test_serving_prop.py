@@ -1,0 +1,190 @@
+"""Property-based serving parity fuzz (hypothesis): the three-backend
+bitwise-equality contract for the serving attention ops, randomized over
+head counts (GQA and MHA), odd sequence/cache lengths, logit softcap on and
+off, sliding windows, page sizes, block tables, and per-slot positions —
+the dimensions along which the fixed-seed suites in tests/test_serving.py
+cannot sweep. The paged op additionally fuzzes against the ring op as a
+differential oracle (same cache contents, different layout — allclose, the
+two softmax programs differ) and over jit/eager execution modes.
+
+Importorskip-guarded like the other hypothesis suites; `REPRO_TEST_BACKENDS`
+(comma-separated) restricts the swept backends for the CI backend-matrix
+job."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.backend import BACKENDS, get_backend
+from repro.models.attention import AttnSpec, ring_valid
+
+_SEL = [b.strip() for b in os.environ.get(
+    "REPRO_TEST_BACKENDS", ",".join(BACKENDS)).split(",") if b.strip()]
+NONREF = [b for b in _SEL if b != "reference"]
+
+
+def _paged_case(seed, B, hkv, g, d, page, n_table, window, softcap):
+    """Randomized paged-op inputs: pool with 2 spare pages past the table."""
+    n_pool = B * n_table + 2
+    ks = jax.random.split(jax.random.key(seed), 5)
+    q = jax.random.normal(ks[0], (B, 1, hkv * g, d))
+    kp = jax.random.normal(ks[1], (n_pool, page, hkv, d))
+    vp = jax.random.normal(ks[2], (n_pool, page, hkv, d))
+    pt = jax.random.randint(ks[3], (B, n_table), 0, n_pool).astype(jnp.int32)
+    pos = jax.random.randint(ks[4], (B,), 0, n_table * page).astype(jnp.int32)
+    return q, kp, vp, pt, pos, AttnSpec(True, window, softcap)
+
+
+@settings(deadline=None, max_examples=200)
+@given(
+    seed=st.integers(0, 10_000),
+    hkv=st.sampled_from([1, 2, 3]),
+    g=st.sampled_from([1, 2]),
+    d=st.sampled_from([4, 8]),
+    page=st.sampled_from([2, 4, 8]),
+    n_table=st.integers(1, 4),
+    window=st.sampled_from([0, 3, 9]),
+    softcap=st.sampled_from([0.0, 15.0]),
+)
+def test_paged_decode_parity_bitwise(seed, hkv, g, d, page, n_table, window,
+                                     softcap):
+    """Backend.paged_decode_attention: reference == pallas == pallas_sharded
+    to the BIT over randomized pools, block tables (including repeated and
+    trash pages), per-slot positions, windows, and softcap."""
+    q, kp, vp, pt, pos, spec = _paged_case(
+        seed, 2, hkv, g, d, page, n_table, window, softcap)
+    want = np.asarray(get_backend("reference").paged_decode_attention(
+        q, kp, vp, pt, pos, spec))
+    assert np.all(np.isfinite(want))
+    for name in NONREF:
+        got = np.asarray(get_backend(name).paged_decode_attention(
+            q, kp, vp, pt, pos, spec))
+        np.testing.assert_array_equal(got, want, err_msg=f"{name} {spec}")
+
+
+@settings(deadline=None, max_examples=200)
+@given(
+    seed=st.integers(0, 10_000),
+    hkv=st.sampled_from([1, 2, 4]),
+    g=st.sampled_from([1, 2]),
+    w=st.integers(3, 33),  # odd/awkward cache capacities included
+    posfrac=st.floats(0.0, 1.0),
+    window=st.sampled_from([0, 5, 16]),
+    softcap=st.sampled_from([0.0, 30.0]),
+)
+def test_ring_decode_parity_bitwise(seed, hkv, g, w, posfrac, window, softcap):
+    """Backend.decode_attention over the ring cache: bitwise parity fuzzed
+    over odd capacities, ring positions (wrapped and not), windows, and
+    softcap — the fixed-case suite only pins W=24, pos=11."""
+    spec = AttnSpec(True, window, softcap)
+    ks = jax.random.split(jax.random.key(seed), 3)
+    B, d = 2, 8
+    q = jax.random.normal(ks[0], (B, 1, hkv * g, d))
+    k = jax.random.normal(ks[1], (B, w, hkv, d))
+    v = jax.random.normal(ks[2], (B, w, hkv, d))
+    pos = int(posfrac * (2 * w - 1))
+    valid = ring_valid(jnp.asarray(pos), w, spec)
+    want = np.asarray(get_backend("reference").decode_attention(
+        q, k, v, valid, spec))
+    assert np.all(np.isfinite(want))
+    for name in NONREF:
+        got = np.asarray(get_backend(name).decode_attention(
+            q, k, v, valid, spec))
+        np.testing.assert_array_equal(got, want, err_msg=f"{name} {spec}")
+
+
+@settings(deadline=None, max_examples=40)
+@given(
+    seed=st.integers(0, 10_000),
+    hkv=st.sampled_from([1, 2]),
+    g=st.sampled_from([1, 2]),
+    s=st.integers(3, 17),  # odd lengths degrade flash blocks; primes hit 1
+    window=st.sampled_from([0, 5]),
+    softcap=st.sampled_from([0.0, 30.0]),
+)
+def test_flash_prefill_parity_bitwise(seed, hkv, g, s, window, softcap):
+    """Backend.flash_attention: bitwise parity fuzzed over odd sequence
+    lengths (block_q degrades toward 1 on primes), GQA groupings, windows,
+    and softcap. Few examples: interpret-mode flash walks every grid cell
+    in Python, so each odd-length case is orders slower than decode."""
+    spec = AttnSpec(True, window, softcap)
+    ks = jax.random.split(jax.random.key(seed), 3)
+    B, d = 1, 8
+    q = jax.random.normal(ks[0], (B, s, hkv * g, d))
+    k = jax.random.normal(ks[1], (B, s, hkv, d))
+    v = jax.random.normal(ks[2], (B, s, hkv, d))
+    pos = jnp.arange(s)
+    want = np.asarray(get_backend("reference").flash_attention(
+        q, k, v, pos, pos, spec))
+    assert np.all(np.isfinite(want))
+    for name in NONREF:
+        got = np.asarray(get_backend(name).flash_attention(
+            q, k, v, pos, pos, spec))
+        np.testing.assert_array_equal(got, want, err_msg=f"{name} {spec}")
+
+
+@settings(deadline=None, max_examples=60)
+@given(
+    seed=st.integers(0, 10_000),
+    hkv=st.sampled_from([1, 2]),
+    g=st.sampled_from([1, 2]),
+    page=st.sampled_from([2, 4, 8]),
+    n_table=st.integers(1, 3),
+    window=st.sampled_from([0, 7]),
+    softcap=st.sampled_from([0.0, 20.0]),
+)
+def test_paged_matches_ring_differential(seed, hkv, g, page, n_table, window,
+                                         softcap):
+    """Differential oracle: densify a random paged layout and compare the
+    paged op against the legacy ring op on the same contents (allclose —
+    split-page merge vs single-block softmax round differently)."""
+    spec = AttnSpec(True, window, softcap)
+    B, d = 2, 8
+    W = n_table * page
+    ks = jax.random.split(jax.random.key(seed), 4)
+    q = jax.random.normal(ks[0], (B, 1, hkv * g, d))
+    kd = jax.random.normal(ks[1], (B, W, hkv, d))
+    vd = jax.random.normal(ks[2], (B, W, hkv, d))
+    kp = jnp.zeros((1 + B * n_table, page, hkv, d))
+    vp = jnp.zeros((1 + B * n_table, page, hkv, d))
+    pt = np.zeros((B, n_table), np.int32)
+    for b in range(B):
+        for j in range(n_table):
+            pid = 1 + b * n_table + j
+            kp = kp.at[pid].set(kd[b, j * page:(j + 1) * page])
+            vp = vp.at[pid].set(vd[b, j * page:(j + 1) * page])
+            pt[b, j] = pid
+    pos_v = W - 1  # shared position so the ring's one valid mask applies
+    bk = get_backend("reference")
+    paged = np.asarray(bk.paged_decode_attention(
+        q, kp, vp, jnp.asarray(pt), jnp.full((B,), pos_v, jnp.int32), spec))
+    ring = np.asarray(bk.decode_attention(
+        q, kd, vd, ring_valid(jnp.asarray(pos_v), W, spec), spec))
+    np.testing.assert_allclose(paged, ring, rtol=2e-5, atol=2e-6)
+
+
+@settings(deadline=None, max_examples=15)
+@given(
+    seed=st.integers(0, 10_000),
+    window=st.sampled_from([0, 9]),
+    softcap=st.sampled_from([0.0, 15.0]),
+)
+def test_paged_parity_under_jit(seed, window, softcap):
+    """The paged parity contract also holds with every form jitted — the
+    execution regime the ServeEngine actually runs (fusion decisions differ
+    from eager; the split-softmax structure keeps both regimes exact)."""
+    q, kp, vp, pt, pos, spec = _paged_case(seed, 2, 2, 2, 8, 4, 3, window,
+                                           softcap)
+    ref = np.asarray(jax.jit(
+        lambda *a: get_backend("reference").paged_decode_attention(*a, spec)
+    )(q, kp, vp, pt, pos))
+    for name in NONREF:
+        got = np.asarray(jax.jit(
+            lambda *a: get_backend(name).paged_decode_attention(*a, spec)
+        )(q, kp, vp, pt, pos))
+        np.testing.assert_array_equal(got, ref, err_msg=name)

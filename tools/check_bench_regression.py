@@ -1,0 +1,74 @@
+"""Diff a fresh BENCH_serving.json against the committed baseline and warn
+on decode-throughput regressions.
+
+  python tools/check_bench_regression.py BENCH_serving.json \
+      benchmarks/BENCH_serving_baseline.json --warn-pct 20
+
+Compares every ``*_tok_per_s`` metric per backend. A metric more than
+``--warn-pct`` percent BELOW the baseline prints a GitHub Actions
+``::warning::`` annotation (visible on the job summary) — it does NOT fail
+the job by default, because CI runners are shared machines and CPU
+interpret-mode wall times are noisy; ``--strict`` turns warnings into a
+nonzero exit for hardware-pinned runners. Missing backends or metrics on
+either side are reported but never fatal (the baseline may predate a new
+backend column)."""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def compare(current: dict, baseline: dict, warn_pct: float):
+    """Yield (backend, metric, cur, base, pct_change) for every regression
+    beyond warn_pct; pct_change is negative for slower-than-baseline."""
+    regressions = []
+    cur_b = current.get("backends", {})
+    base_b = baseline.get("backends", {})
+    for name, base_rec in base_b.items():
+        cur_rec = cur_b.get(name)
+        if cur_rec is None:
+            print(f"note: backend {name!r} in baseline but not in current run")
+            continue
+        for metric, base_val in base_rec.items():
+            if not metric.endswith("_tok_per_s"):
+                continue
+            cur_val = cur_rec.get(metric)
+            if not isinstance(cur_val, (int, float)) or not base_val:
+                print(f"note: metric {name}/{metric} missing or zero")
+                continue
+            pct = 100.0 * (cur_val - base_val) / base_val
+            if pct < -warn_pct:
+                regressions.append((name, metric, cur_val, base_val, pct))
+    return regressions
+
+
+def main(argv=None) -> int:
+    """CLI entry; returns the process exit code."""
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", help="fresh BENCH_serving.json")
+    ap.add_argument("baseline", help="committed baseline json")
+    ap.add_argument("--warn-pct", type=float, default=20.0,
+                    help="warn when a tok/s metric drops more than this %%")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit nonzero on regressions (hardware-pinned CI)")
+    args = ap.parse_args(argv)
+
+    with open(args.current) as f:
+        current = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+
+    regressions = compare(current, baseline, args.warn_pct)
+    for name, metric, cur, base, pct in regressions:
+        print(f"::warning title=serving decode regression::"
+              f"{name}/{metric}: {cur:.2f} tok/s vs baseline {base:.2f} "
+              f"({pct:+.1f}%)")
+    if not regressions:
+        print(f"decode throughput within {args.warn_pct:.0f}% of baseline "
+              f"for all backends")
+    return 1 if (regressions and args.strict) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
