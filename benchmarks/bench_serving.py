@@ -10,6 +10,14 @@ allclose) — and records the committed sharding of the KV cache: on
 `pallas_sharded` the ring kv-head axis AND the paged page pools must be
 sharded over the mesh `model` axis (asserted, not just reported).
 
+A `prefix_share` scenario additionally serves a batch of requests whose
+prompts share a block-aligned prefix, with prefix sharing on vs off, and
+records the prefix hit rate plus the engine-counted prefill work: with
+sharing, prefill tokens scale ~O(B * tail + S) instead of O(B * prompt)
+(`work_ratio` > 1 is the saved re-prefill work), while the served tokens
+are asserted identical either way — the sharing parity contract observed
+from the benchmark harness too.
+
 On CPU the non-reference wall times measure interpret-mode Pallas (the
 Python-level kernel emulation) — the honest numbers are the reference column
 and the parity/sharding assertions; TPU runs produce real kernel timings.
@@ -76,6 +84,50 @@ def _assert_kv_sharded(cache, mesh) -> str:
     return specs[0]
 
 
+def _prefix_share_case(model, params, bk, batch, prompt, page, steps):
+    """Prefix-sharing admission scenario: `batch` requests whose prompts
+    share a block-aligned prefix of ~half the prompt length, served once
+    with sharing on and once off through the REAL engine. Returns per
+    -backend metrics: the prefill-work model (engine-counted prefill
+    tokens — with sharing ~O(B * tail + S) instead of O(B * prompt)), the
+    prefix hit rate, and admission+serve wall throughput (second run, jit
+    warm). Asserts the sharing parity contract: identical tokens either
+    way."""
+    from repro.serving.engine import Request, ServeConfig, ServeEngine
+
+    S = (prompt // 2) // page * page  # block-aligned shared prefix
+    rng = np.random.default_rng(0)
+    pref = rng.integers(0, model.cfg.vocab_size, S)
+
+    def reqs():
+        r2 = np.random.default_rng(1)
+        return [Request(i, np.concatenate(
+            [pref, r2.integers(0, model.cfg.vocab_size, prompt - S)])
+            .astype(np.int32), steps) for i in range(batch)]
+
+    out, toks = {}, {}
+    for label, share in (("shared", True), ("solo", False)):
+        eng = ServeEngine(model, params, backend=bk,
+                          config=ServeConfig(batch_size=batch,
+                                             max_len=prompt + steps,
+                                             cache="paged", page_size=page,
+                                             share_prefix=share))
+        eng.run(reqs())  # warm the jit caches through the real paths
+        t = time_fn(lambda: eng.run(reqs()), iters=2, warmup=0)
+        toks[label] = {r.uid: r.out for r in eng.run(reqs())}
+        out[f"prefill_tokens_{label}"] = eng.stats["prefill_tokens"]
+        if share:
+            hit = eng.stats["prefix_hit_tokens"] / max(
+                eng.stats["prompt_tokens"], 1)
+            out["hit_rate"] = hit
+            out["t_serve_s"] = t
+            out["serve_tok_per_s"] = batch * prompt / t
+    assert toks["shared"] == toks["solo"], "prefix sharing changed tokens"
+    out["work_ratio"] = (out["prefill_tokens_solo"]
+                         / max(out["prefill_tokens_shared"], 1))
+    return out
+
+
 def _paged_setup(model, params, bk, batch, prompt, steps, page):
     """Build a decode-ready paged cache by admitting `batch` prompts through
     the ServeEngine's REAL admission path (`_paged_init`: validation, pool
@@ -123,6 +175,12 @@ def run(backends=None, out_path=None) -> dict:
         "page_size": page,
         "hw": jax.default_backend(),
         "backends": {},
+        "prefix_share": {
+            "requests": batch,
+            "prompt_len": prompt,
+            "shared_prefix": (prompt // 2) // page * page,
+            "backends": {},
+        },
     }
     ref = {}
     for name in backends:
@@ -184,8 +242,12 @@ def run(backends=None, out_path=None) -> dict:
                 assert np.array_equal(a, b), (name, f"decode step {i}")
             for i, (a, b) in enumerate(zip(paged_logits, ref["paged"])):
                 assert np.array_equal(a, b), (name, f"paged decode step {i}")
+        share = _prefix_share_case(model, params, bk, batch, prompt, page,
+                                   steps)
+        record["prefix_share"]["backends"][name] = share
         record["backends"][name] = {
             "t_prefill_s": t_prefill,
+            "prefill_tok_per_s": batch * prompt / t_prefill,
             "t_decode_step_s": t_decode,
             "decode_tok_per_s": batch / t_decode,
             "t_paged_decode_step_s": t_paged,
@@ -194,11 +256,16 @@ def run(backends=None, out_path=None) -> dict:
             "page_pool_sharding": pspec,
         }
         emit(f"serving_prefill_{name}", t_prefill,
-             f"arch={cfg.name};B={batch};S={prompt}")
+             f"arch={cfg.name};B={batch};S={prompt};"
+             f"tok_s={batch * prompt / t_prefill:.1f}")
         emit(f"serving_decode_{name}", t_decode,
              f"tok_s={batch / t_decode:.1f};kv_sharding={spec}")
         emit(f"serving_paged_decode_{name}", t_paged,
              f"tok_s={batch / t_paged:.1f};page={page};pool_sharding={pspec}")
+        emit(f"serving_prefix_share_{name}", share["t_serve_s"],
+             f"hit_rate={share['hit_rate']:.2f};"
+             f"work_ratio={share['work_ratio']:.2f};"
+             f"serve_tok_s={share['serve_tok_per_s']:.1f}")
 
     out = out_path or os.environ.get("REPRO_BENCH_SERVING_OUT",
                                      "BENCH_serving.json")

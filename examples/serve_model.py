@@ -11,7 +11,10 @@ axis, KV cache sharded with them). It mirrors `ChefConfig.backend` and the
 benchmark CLIs' flag, and because the serving parity contract guarantees
 bit-identical logits across the three, changing it can never change the
 generated tokens — only the speed and the number of devices the cache
-spreads over.
+spreads over. The same is true of `--share_prefix` (paged prefix sharing —
+the prompts here share a 16-token prefix, so the printed hit rate is
+nonzero) and `--spec_k` (speculative multi-token decode): both are pure
+performance knobs, outputs stay bitwise identical.
 """
 import argparse
 
@@ -25,14 +28,21 @@ def main():
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--backend", default="reference",
                     help="reference | pallas | pallas_sharded")
+    ap.add_argument("--share_prefix", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="alias block-aligned shared prompt prefixes (paged)")
+    ap.add_argument("--spec_k", type=int, default=0,
+                    help="speculative decode rows per step (<=1 = off)")
     args = ap.parse_args()
     out = serve_mod.main([
         "--arch", args.arch, "--requests", str(args.requests),
         "--backend", args.backend,
         "--batch", "4", "--prompt_len", "24", "--max_new", "8",
-    ])
+        "--prefix_len", "16", "--spec_k", str(args.spec_k),
+    ] + ([] if args.share_prefix else ["--no-share_prefix"]))
     print(f"served {out['requests']} requests / {out['tokens']} tokens "
-          f"in {out['wall_s']:.2f}s on backend={out['backend']}")
+          f"in {out['wall_s']:.2f}s on backend={out['backend']} "
+          f"(prefix_hit_rate={out['prefix_hit_rate']:.2f})")
 
 
 if __name__ == "__main__":

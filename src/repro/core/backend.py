@@ -83,7 +83,11 @@ dispatches through these):
       op the ServeEngine's `paged` cache mode rides. The kernel streams
       pages one per grid step (W-chunked online softmax), so cache size
       never constrains VMEM; on pallas_sharded the pools stay head-sharded
-      over `model` (rule: repro.dist.sharding.page_pool_spec).
+      over `model` (rule: repro.dist.sharding.page_pool_spec). Prefix
+      sharing rides the same op unchanged: aliased pages are ordinary block
+      -table entries, and speculative verification is just this op with the
+      k draft rows as the batch dimension (per-row positions mask each row
+      to its own causal extent).
 
 Serving parity contract: prefill AND decode logits are BIT-IDENTICAL across
 all three backends (exact equality, not allclose) — the reference forms run
@@ -395,11 +399,13 @@ class Backend:
         KVCache / QuantKVCache / PagedKVCache leaf goes head-sharded over
         the mesh `model` axis (ring k/v and page pools: axis ndim-2; quant
         scales: axis ndim-1); recurrent state (SSM / RG-LRU),
-        cross-attention caches, the pos counter, and the paged block table
-        stay untouched. No-op on unsharded backends — call sites never
-        branch on the backend name. The ServeEngine commits the prefill
-        cache through this so continuous batching scales cache memory with
-        devices."""
+        cross-attention caches, the pos counter, the paged block table,
+        and the paged `refcount` mirror stay untouched — refcounts are
+        tiny host-authoritative metadata and remain replicated (rule:
+        repro.dist.sharding.refcount_spec). No-op on unsharded backends —
+        call sites never branch on the backend name. The ServeEngine
+        commits the prefill cache through this so continuous batching
+        scales cache memory with devices."""
         if self.name != "pallas_sharded" or cache is None:
             return cache
         from repro.models.attention import (KVCache, PagedKVCache,

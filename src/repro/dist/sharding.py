@@ -116,6 +116,18 @@ def page_pool_spec(mesh, shape: Sequence[int], head_axis: int) -> P:
     return kv_cache_spec(mesh, shape, head_axis)
 
 
+def refcount_spec(mesh) -> P:
+    """Sharding rule for the paged cache's `refcount` leaf ([num_pages]
+    int32): always replicated. Refcounts are tiny host-authoritative
+    allocator metadata (the engine's numpy array is the source of truth;
+    the device copy exists so jitted serving steps can thread it through
+    donated cache pytrees without a host round-trip) — sharding a few KiB
+    of int32 would buy nothing and put an all-gather on the decode path
+    the first time a kernel consulted it."""
+    del mesh  # replicated on every layout by design
+    return P()
+
+
 def make_resolver(mesh, *, fsdp: bool = True) -> Callable:
     """Returns resolve(axes, shape) -> PartitionSpec for `mesh`.
 

@@ -36,10 +36,20 @@ is DERIVED FROM THE PAGE TABLE POSITION ARITHMETIC inside the shared
 per-page program: page j of slot b covers absolute positions
 [j*P, (j+1)*P), valid iff kpos <= pos_b (written and attendable — a paged
 cache never wraps, so there is no ring aliasing) and inside the sliding
-window when the arch has one. Unallocated table entries point at the
-reserved trash page 0; their positions exceed pos_b, so they are masked —
-streamed but exact no-ops (their partials carry l_j = 0 and a merge weight
-of exp(NEG_INF - M) == 0).
+window when the arch has one.
+
+Trash-page grid steps are SKIPPED, not masked: a table entry equal to the
+reserved trash page 0 means "no data here by construction" (unallocated
+slots, right-pad positions, table rows past a slot's allocation), so the
+kernel guards the whole per-page program behind `pl.when(page_id != 0)` and
+the else-branch writes the neutral partial (m = -inf, l = 0, acc = 0)
+directly — no page DMA is issued for the step (consecutive steps whose
+index maps resolve to the same page 0 block are also deduplicated by the
+pipeline, so a mostly-empty table costs almost nothing). `combine_pages`
+weighs the neutral partial to exactly zero, the same value a masked
+streamed page produced before, and the reference mirror applies the
+identical page_id == 0 -> neutral rule with `jnp.where` — see kernel rule 5
+in the package README for why this preserves bit-parity.
 """
 from __future__ import annotations
 
@@ -107,20 +117,32 @@ def _kernel(pt_ref, pos_ref, q_ref, k_ref, v_ref, m_ref, l_ref, acc_ref, *,
             scale: float, window: int, softcap: float, page_size: int):
     b = pl.program_id(0)
     j = pl.program_id(2)
-    # absolute positions covered by logical page j of this slot (2D iota —
-    # 1D iota does not lower on TPU)
-    kpos = j * page_size + jax.lax.broadcasted_iota(
-        jnp.int32, (1, page_size), 1)[0]
-    m, l, acc = _page_partial(
-        q_ref[0, 0].astype(jnp.float32),
-        k_ref[0, :, 0, :].astype(jnp.float32),
-        v_ref[0, :, 0, :].astype(jnp.float32),
-        kpos, pos_ref[b],
-        scale=scale, window=window, softcap=softcap,
-    )
-    m_ref[0, 0, 0] = m
-    l_ref[0, 0, 0] = l
-    acc_ref[0, 0, 0] = acc
+    G, D = q_ref.shape[2], q_ref.shape[3]
+
+    @pl.when(pt_ref[b, j] != 0)
+    def _compute():
+        # absolute positions covered by logical page j of this slot (2D iota
+        # — 1D iota does not lower on TPU)
+        kpos = j * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, (1, page_size), 1)[0]
+        m, l, acc = _page_partial(
+            q_ref[0, 0].astype(jnp.float32),
+            k_ref[0, :, 0, :].astype(jnp.float32),
+            v_ref[0, :, 0, :].astype(jnp.float32),
+            kpos, pos_ref[b],
+            scale=scale, window=window, softcap=softcap,
+        )
+        m_ref[0, 0, 0] = m
+        l_ref[0, 0, 0] = l
+        acc_ref[0, 0, 0] = acc
+
+    @pl.when(pt_ref[b, j] == 0)
+    def _neutral():
+        # trash page: no data by construction — emit the neutral partial
+        # without touching k/v (combine_pages weighs it to exactly 0)
+        m_ref[0, 0, 0] = jnp.full((G,), NEG_INF, jnp.float32)
+        l_ref[0, 0, 0] = jnp.zeros((G,), jnp.float32)
+        acc_ref[0, 0, 0] = jnp.zeros((G, D), jnp.float32)
 
 
 def paged_attention_partials_pallas(
@@ -199,7 +221,10 @@ def paged_attention_partials_reference(
     whose XLA lowering can differ by an ulp for degenerate shapes (G == 1
     MHA matvecs); and the page loop gathers one [P, D] page at a time,
     mirroring the kernel's DMA schedule instead of materializing a
-    [B, n_pages, P, ...] copy."""
+    [B, n_pages, P, ...] copy. Trash entries (page id 0) are forced to the
+    neutral partial with `jnp.where`, mirroring the kernel's `pl.when` skip:
+    `where(False, neutral, partial)` returns the computed partial bitwise,
+    `where(True, neutral, …)` the exact constants the kernel writes."""
     B, Hkv, G, D = q.shape
     P = k_pages.shape[1]
     n_pages = page_table.shape[1]
@@ -218,7 +243,11 @@ def paged_attention_partials_reference(
                 kj = jnp.take(kh, ptb[j], axis=0)  # [P, D]
                 vj = jnp.take(vh, ptb[j], axis=0)
                 kpos = j * P + jnp.arange(P, dtype=jnp.int32)
-                return part(qh, kj, vj, kpos, pb)
+                m, l, acc = part(qh, kj, vj, kpos, pb)
+                trash = ptb[j] == 0
+                return (jnp.where(trash, NEG_INF, m),
+                        jnp.where(trash, 0.0, l),
+                        jnp.where(trash, jnp.zeros_like(acc), acc))
 
             return jax.lax.map(page, jnp.arange(n_pages, dtype=jnp.int32))
 

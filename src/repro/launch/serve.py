@@ -16,6 +16,12 @@ with per-slot decode positions — batching-invariant outputs), `ring` (the
 seed engine's shared-counter ring, kept as the differential oracle), or
 `auto` (paged where the arch supports it). `--page_size` sizes the paged
 pool's pages.
+
+Paged-mode extras (both leave outputs bitwise unchanged — see the engine
+module docstring): `--share_prefix` / `--no-share_prefix` toggles prefix
+sharing (on by default; `--prefix_len N` gives every request the same
+N-token prompt prefix so the sharing actually has something to hit), and
+`--spec_k K` turns on speculative decode with K rows per verify step.
 """
 from __future__ import annotations
 
@@ -48,6 +54,14 @@ def main(argv=None) -> dict:
                     help="auto | paged | ring (see repro.serving.ServeConfig)")
     ap.add_argument("--page_size", type=int, default=8,
                     help="tokens per physical page (paged cache)")
+    ap.add_argument("--share_prefix", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="alias block-aligned shared prompt prefixes (paged)")
+    ap.add_argument("--prefix_len", type=int, default=0,
+                    help="common prompt prefix length across requests "
+                         "(0 = fully independent prompts)")
+    ap.add_argument("--spec_k", type=int, default=0,
+                    help="speculative decode rows per step (<=1 = off)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -58,24 +72,33 @@ def main(argv=None) -> dict:
         model, params, backend=get_backend(args.backend),
         config=ServeConfig(batch_size=args.batch,
                            max_len=args.prompt_len + args.max_new,
-                           cache=args.cache, page_size=args.page_size))
+                           cache=args.cache, page_size=args.page_size,
+                           share_prefix=args.share_prefix,
+                           spec_k=args.spec_k))
 
     rng = np.random.default_rng(args.seed)
+    pl = min(args.prefix_len, args.prompt_len)
+    shared = rng.integers(0, cfg.vocab_size, pl)
     reqs = [
-        Request(uid=i, prompt=rng.integers(0, cfg.vocab_size, args.prompt_len),
-                max_new=args.max_new)
+        Request(uid=i, prompt=np.concatenate([
+            shared, rng.integers(0, cfg.vocab_size, args.prompt_len - pl),
+        ]).astype(np.int64), max_new=args.max_new)
         for i in range(args.requests)
     ]
     t0 = time.time()
     done = engine.run(reqs)
     dt = time.time() - t0
     n_tok = sum(len(r.out) for r in done)
+    stats = getattr(engine, "stats", {}) or {}
+    hit_rate = (stats.get("prefix_hit_tokens", 0)
+                / max(stats.get("prompt_tokens", 0), 1))
     log.info("served %d requests, %d tokens in %.2fs "
-             "(%.1f tok/s, backend=%s, cache=%s)",
+             "(%.1f tok/s, backend=%s, cache=%s, prefix_hit_rate=%.2f)",
              len(done), n_tok, dt, n_tok / dt, args.backend,
-             engine.cache_mode)
+             engine.cache_mode, hit_rate)
     return {"requests": len(done), "tokens": n_tok, "wall_s": dt,
-            "backend": args.backend, "cache": engine.cache_mode}
+            "backend": args.backend, "cache": engine.cache_mode,
+            "prefix_hit_rate": hit_rate, "stats": dict(stats)}
 
 
 if __name__ == "__main__":

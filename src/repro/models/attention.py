@@ -398,7 +398,18 @@ class PagedKVCache(NamedTuple):
     memory no valid attention ever reads. Unlike the ring cache there is no
     wrap-around — every written position stays resident — which is what
     lets each slot carry its own decode position (`cache["pos"]` [B])
-    instead of the ring's one shared counter."""
+    instead of the ring's one shared counter.
+
+    With prefix sharing, a physical page may appear in SEVERAL slots' table
+    rows at once (requests whose prompts share a block-aligned prefix alias
+    the donor's pages instead of re-prefilling them). Ownership is tracked
+    by the engine's host-side refcount array (mirrored on device as
+    `cache["refcount"]`, replicated — see dist.sharding.refcount_spec); a
+    page is writable only at refcount 1, and the engine copy-on-writes
+    (`paged_copy_page` + table-row redirect) before any write that would
+    land on a shared page. The normal write paths never do: aliased pages
+    cover only positions before the shared prefix boundary, while tail
+    commits and decode writes target positions at or past it."""
 
     k: jax.Array  # [N_pages, page_size, Hkv, D]  (RoPE pre-applied to k)
     v: jax.Array  # [N_pages, page_size, Hkv, D]
@@ -480,6 +491,98 @@ def paged_commit(pool: PagedKVCache, dense, page_row: jax.Array,
         return dst.at[page_of, off].set(src[0].astype(dst.dtype))
 
     return PagedKVCache(scatter(pool.k, dense.k), scatter(pool.v, dense.v))
+
+
+def paged_commit_tail(pool: PagedKVCache, dense, page_row: jax.Array,
+                      start: jax.Array, length: jax.Array,
+                      tail_len: int) -> PagedKVCache:
+    """Scatter a TAIL-ONLY prefill cache into the slot's pages at an offset.
+
+    The prefix-sharing admission path prefills only the unshared tail of a
+    prompt (`Model.prefill_tail`): `dense` holds K/V for tail token t at
+    slot t, whose ABSOLUTE position is `start + t` (`start` = shared-prefix
+    length, a page multiple). Real tail positions (start + t < `length`,
+    the full prompt length) scatter into their pages through `page_row`;
+    right-pad rows route to the trash page, exactly like `paged_commit`.
+    Because start is at or past the shared-prefix boundary, this write can
+    never touch an aliased page — the invariant the engine's copy-on-write
+    guard enforces. `tail_len` is the static tail bucket width."""
+    W = dense.k.shape[-3]
+    assert W == tail_len, (
+        f"paged_commit_tail needs a full-capacity tail cache; "
+        f"got capacity {W} != {tail_len}")
+    P = pool.k.shape[-3]
+    n_table = page_row.shape[0]
+    apos = start + jnp.arange(W)  # absolute position of tail slot t
+    ok = apos < length
+    pidx = jnp.clip(apos // P, 0, n_table - 1)
+    page_of = jnp.where(ok, jnp.take(page_row, pidx), 0)  # pads -> trash
+    off = apos % P
+    stacked = pool.k.ndim == 5  # [n_super, N_pages, P, Hkv, D]
+
+    def scatter(dst, src):
+        if stacked:
+            return dst.at[:, page_of, off].set(src[:, 0].astype(dst.dtype))
+        return dst.at[page_of, off].set(src[0].astype(dst.dtype))
+
+    return PagedKVCache(scatter(pool.k, dense.k), scatter(pool.v, dense.v))
+
+
+def paged_gather_prefix(pool: PagedKVCache, page_row: jax.Array,
+                        n_share: int):
+    """Densify the first `n_share` pages of a slot's block table:
+    -> (k, v) [1, n_share * P, Hkv, D] — the shared-prefix K/V rows exactly
+    as the donor's prefill committed them (the pool dtype defaults to the
+    param dtype, so the round-trip is bitwise). `n_share` is static (it
+    keys the tail-prefill trace)."""
+    ids = page_row[:n_share]  # static slice: n_share is a Python int
+    P, Hkv, D = pool.k.shape[1:]
+    k = jnp.take(pool.k, ids, axis=0).reshape(1, n_share * P, Hkv, D)
+    v = jnp.take(pool.v, ids, axis=0).reshape(1, n_share * P, Hkv, D)
+    return k, v
+
+
+def paged_prefix_concat(pool: PagedKVCache, page_row: jax.Array,
+                        n_share: int, k_tail: jax.Array, v_tail: jax.Array,
+                        kv_len: int):
+    """Assemble the FULL-WIDTH attention K/V for a tail-only prefill:
+    [shared-prefix rows gathered from pages | fresh tail rows | zero pad]
+    -> (k, v) [1, kv_len, Hkv, D], where `kv_len` is the solo run's
+    power-of-two prompt bucket.
+
+    Building the kv operand at exactly the solo width is what makes the
+    tail prefill bitwise-reproduce the solo run: the flash kernel's kv
+    block decomposition (`ops._attn_blocks`) depends only on Skv, so both
+    runs execute identical per-block programs, and every row past the real
+    prompt is causally masked to an exact zero — zeros here, computed
+    pad-token K/V in the solo run, bitwise irrelevant either way. Tail
+    rows whose position would exceed kv_len (over-wide tail buckets near
+    the boundary) are dropped — they are pad rows by construction."""
+    Ls = n_share * pool.page_size
+    kp, vp = paged_gather_prefix(pool, page_row, n_share)
+    B, Wt, Hkv, D = k_tail.shape
+    m = min(Wt, kv_len - Ls)  # tail rows that fit the solo kv width
+    parts_k = [kp.astype(k_tail.dtype), k_tail[:, :m]]
+    parts_v = [vp.astype(v_tail.dtype), v_tail[:, :m]]
+    pad = kv_len - Ls - m
+    if pad:
+        parts_k.append(jnp.zeros((B, pad, Hkv, D), k_tail.dtype))
+        parts_v.append(jnp.zeros((B, pad, Hkv, D), v_tail.dtype))
+    return jnp.concatenate(parts_k, axis=1), jnp.concatenate(parts_v, axis=1)
+
+
+def paged_copy_page(pool: PagedKVCache, src: jax.Array,
+                    dst: jax.Array) -> PagedKVCache:
+    """Copy physical page `src` onto `dst` (both scalar page ids) — the
+    device half of the engine's copy-on-write: a write aimed at a page with
+    refcount > 1 first duplicates it onto a fresh free-list page and
+    redirects the slot's table row, so sharers keep the original bytes.
+    Handles the stacked leading layers dim like `paged_commit`."""
+    if pool.k.ndim == 5:  # [n_super, N_pages, P, Hkv, D]
+        return PagedKVCache(pool.k.at[:, dst].set(pool.k[:, src]),
+                            pool.v.at[:, dst].set(pool.v[:, src]))
+    return PagedKVCache(pool.k.at[dst].set(pool.k[src]),
+                        pool.v.at[dst].set(pool.v[src]))
 
 
 def paged_decode_attend(cfg, cache: PagedKVCache, q, pos: jax.Array,

@@ -217,6 +217,64 @@ class Model:
         logits = L.lm_logits(cfg, params["embed"], hid)
         return logits, out.cache
 
+    def prefill_tail(self, params, batch: dict, paged_cache: dict, *,
+                     page_row, share_pages: int, kv_len: int,
+                     last_pos, impl: Optional[str] = None, backend=None):
+        """Tail-only prefill for prefix-sharing admission: run ONLY the
+        unshared tail of a prompt (batch tokens [1, W_t], right-padded),
+        attending over the shared-prefix K/V already resident in
+        `paged_cache`'s page pools, and return (last-real-token logits,
+        dense tail KV cache) — bitwise identical to the corresponding rows
+        of a solo `prefill` at the `kv_len` bucket.
+
+        `page_row` [n_table] is the slot's block table row whose first
+        `share_pages` entries alias the donor's pages; `kv_len` is the solo
+        run's power-of-two prompt bucket (static — it pins the attention kv
+        extent to the solo program); `last_pos` [1] indexes the last real
+        TAIL row (prompt length - shared prefix - 1). The returned cache
+        holds only the dense tail K/V (capacity W_t, token t at slot t) —
+        commit it with `attention.paged_commit_tail` at offset
+        share_pages * page_size."""
+        cfg = self.cfg
+        impl = impl or self.impl
+        backend = backend if backend is not None else self.backend
+        tokens = batch["tokens"]
+        B, W_t = tokens.shape
+        assert B == 1, "tail prefill is per-slot (batch 1)"
+        # absolute positions need rope (paged_supported already gates this)
+        assert cfg.rope_kind != "none", "tail prefill needs rotary positions"
+        dense = self.init_cache(B, W_t, dtype=self.param_dtype, full=True)
+
+        def graft(dn_grp, pl_grp):
+            return {"kv": dn_grp["kv"], "pool": pl_grp["kv"]}
+
+        cache = {
+            "blocks": tuple(graft(d, p) for d, p in
+                            zip(dense["blocks"], paged_cache["blocks"])),
+            "tail": tuple(graft(d, p) for d, p in
+                          zip(dense["tail"], paged_cache["tail"])),
+            "pos": jnp.zeros((), jnp.int32),
+            "pages": page_row.astype(jnp.int32)[None],
+        }
+        # page size off an (unstacked or stacked) pool leaf: dims from the
+        # right, mirroring paged_commit
+        first_pool = (paged_cache["blocks"] or paged_cache["tail"])[0]["kv"]
+        P = first_pool.k.shape[-3]
+        pos = share_pages * P + jnp.arange(W_t)
+        h = self._act_constrain(self._embed_in(params, batch, "prefill"))
+        out = T.run_stack(
+            cfg, params, h, mode="tail", cache=cache, pos=pos,
+            pos3=batch.get("pos3"), enc_out=None, impl=impl, backend=backend,
+            constrain=self._act_constrain,
+            slot_constrain=self._make_slot_constrain(params),
+            share_pages=share_pages, kv_len=kv_len,
+        )
+        h_last = jnp.take_along_axis(
+            out.hidden, last_pos.astype(jnp.int32)[:, None, None], axis=1)
+        hid = L.apply_norm(cfg, params["final_norm"], h_last)
+        logits = L.lm_logits(cfg, params["embed"], hid)
+        return logits, out.cache
+
     def decode_step(self, params, cache: dict, batch: dict, *,
                     impl: Optional[str] = None, backend=None):
         """One decode step. batch: tokens [B,1] (+ optional pos3 [B,3,1]).

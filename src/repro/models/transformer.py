@@ -12,6 +12,12 @@ Modes:
 * ``prefill`` — full sequence, returns populated caches (ring-rolled for
   sliding-window attention).
 * ``decode``  — single token, cache read/update, O(1) state for SSM/RG-LRU.
+* ``tail``    — prefix-sharing tail prefill: only a prompt's unshared tail
+  tokens run, attending over [shared-prefix K/V gathered from paged-cache
+  pages | fresh tail K/V | zero pad] at the solo run's bucket width, so the
+  result is bitwise the solo prefill's (see `apply_block`). Per-layer cache
+  dicts carry both the dense tail write cache ("kv") and the read-only page
+  pool ("pool").
 """
 from __future__ import annotations
 
@@ -179,7 +185,10 @@ def init_paged_cache(cfg, batch: int, num_pages: int, page_size: int,
     layer slot (stacked over super-blocks like the dense cache), plus the
     engine-owned PER-SLOT state — `pos` [batch] decode positions and
     `pages` [batch, table_pages] block table (all-zero rows = every entry
-    on the reserved trash page, the parked state of an inactive slot). The
+    on the reserved trash page, the parked state of an inactive slot), and
+    `refcount` [num_pages], the device mirror of the engine's host-side
+    page refcounts (how many table rows / prefix-cache entries reference
+    each physical page — prefix sharing aliases pages across slots). The
     pool has no batch dimension: slots share physical pages through the
     block table, which is what decouples cache memory from worst-case
     per-slot provisioning."""
@@ -204,6 +213,7 @@ def init_paged_cache(cfg, batch: int, num_pages: int, page_size: int,
         "tail": tuple(one() for _ in pattern[:rem]),
         "pos": jnp.zeros((batch,), jnp.int32),
         "pages": jnp.zeros((batch, table_pages), jnp.int32),
+        "refcount": jnp.zeros((num_pages,), jnp.int32),
     }
 
 
@@ -241,6 +251,8 @@ def apply_block(
     impl: str = "auto",
     backend=None,
     pages: Optional[jax.Array] = None,  # [B, n_pages] paged-decode block table
+    share_pages: int = 0,  # mode="tail": pages aliased from a shared prefix
+    kv_len: int = 0,       # mode="tail": solo prompt-bucket kv width
 ):
     aux = jnp.zeros((), jnp.float32)
     new_cache = cache
@@ -249,7 +261,28 @@ def apply_block(
         spec = _attn_spec(cfg, kind)
         x = L.apply_norm(cfg, p["norm1"], h)
         q, k, v = attn_lib.qkv_proj(cfg, p["attn"], x)
-        if mode == "decode" and isinstance(cache["kv"], attn_lib.PagedKVCache):
+        if mode == "tail":
+            # tail-only prefill under prefix sharing: q/k are the UNSHARED
+            # tail tokens rotated at their absolute positions (`pos` = [W_t]
+            # starting at the shared boundary); the attention kv operand is
+            # [prefix gathered from the shared pages | tail | zero pad] at
+            # exactly the solo run's bucket width, so the flash block
+            # decomposition — and therefore every tail row's output — is
+            # bitwise the solo prefill's (see paged_prefix_concat). The
+            # fresh tail K/V land in a dense capacity-W_t cache the engine
+            # commits into the slot's own pages (paged_commit_tail).
+            q = _rotate(cfg, q, pos, pos3)
+            k = _rotate(cfg, k, pos, pos3)
+            kf, vf = attn_lib.paged_prefix_concat(
+                cache["pool"], pages[0], share_pages, k, v, kv_len)
+            o = attn_lib.attention(q, kf, vf, pos, jnp.arange(kv_len), spec,
+                                   impl=impl, backend=backend)
+            kv = attn_lib.KVCache(k.astype(cache["kv"].k.dtype),
+                                  v.astype(cache["kv"].v.dtype))
+            # the pool is read-only here; returning only the dense tail
+            # cache keeps the scan from restacking the whole page pool
+            new_cache = {"kv": kv}
+        elif mode == "decode" and isinstance(cache["kv"], attn_lib.PagedKVCache):
             # paged decode: PER-SLOT positions ([B]) rotate each slot at its
             # own absolute position and index its own pages — no shared
             # counter, so slots at divergent positions coexist in one batch
@@ -395,6 +428,8 @@ def run_stack(
     backend=None,
     constrain=None,
     slot_constrain=None,
+    share_pages: int = 0,
+    kv_len: int = 0,
 ) -> StackOut:
     pattern = cfg.block_pattern
     n_super, rem = divmod(cfg.n_layers, len(pattern))
@@ -413,6 +448,7 @@ def run_stack(
                 cfg, kind, slot_params[j], h,
                 mode=mode, cache=c, pos=pos, pos3=pos3, enc_out=enc_out,
                 impl=impl, backend=backend, pages=pages,
+                share_pages=share_pages, kv_len=kv_len,
             )
             new_caches.append(nc)
             aux = aux + a
@@ -440,6 +476,7 @@ def run_stack(
             cfg, kind, params["tail"][j], h,
             mode=mode, cache=c, pos=pos, pos3=pos3, enc_out=enc_out,
             impl=impl, backend=backend, pages=pages,
+            share_pages=share_pages, kv_len=kv_len,
         )
         new_tail.append(nc)
         aux0 = aux0 + a
@@ -447,11 +484,14 @@ def run_stack(
     new_cache = None
     if cache is not None:
         # scalar shared counter (ring) or per-slot [B] positions (paged) —
-        # both advance elementwise
+        # both advance elementwise; mode="tail" positions are engine-owned
+        # (the admission path sets pos to the full prompt length itself)
         new_pos = cache["pos"] + (1 if mode == "decode" else h.shape[1])
         new_cache = {"blocks": new_block_caches, "tail": tuple(new_tail), "pos": new_pos}
         if pages is not None:
             new_cache["pages"] = pages
+        if "refcount" in cache:  # replicated device mirror: pure passthrough
+            new_cache["refcount"] = cache["refcount"]
     return StackOut(h, new_cache, aux0)
 
 

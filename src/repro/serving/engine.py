@@ -38,9 +38,45 @@ Two cache disciplines, selected by `ServeConfig.cache`:
 
 ``cache="auto"`` resolves to `paged` when the arch supports it (attention
 -only decoder, no int8 KV quantization) and `ring` otherwise (SSM / RG-LRU
-recurrent state, enc-dec, quantized caches)."""
+recurrent state, enc-dec, quantized caches).
+
+On top of the paged discipline, two production optimizations (both OFF the
+parity hook — outputs stay bitwise identical to the plain paged run):
+
+* **Prefix sharing** (``ServeConfig.share_prefix``, default on): admission
+  keys every FULL page a committed prompt covers in a prefix index (exact
+  token bytes, no hash collisions possible). A later request whose prompt
+  extends an indexed block-aligned prefix ALIASES those physical pages in
+  its block table instead of re-prefilling them — only the unshared tail
+  runs (`Model.prefill_tail`, at the solo run's kv bucket so the logits are
+  bitwise the solo prefill's), so prefill work for a batch of B requests
+  sharing an S-token prefix is ~O(B * tail + S) instead of O(B * (S+tail)).
+  Page ownership is a host-side refcount array (device mirror
+  ``cache["refcount"]``, replicated): index entries and table rows each
+  hold a reference, pages free only at refcount zero, and a write aimed at
+  a page with refcount > 1 first COPIES it onto a fresh page and redirects
+  the slot's table row (copy-on-write — never triggered by the normal
+  write paths, which only touch positions past the shared boundary; the
+  guard is what makes that an invariant rather than an accident). Index
+  entries are evicted LIFO on pool pressure, deepest-page-first, so a
+  chain never strands a pinned continuation. Sharing is restricted to
+  prompts whose kv bucket falls in the same flash block class (both <= 128
+  or both > 128) — the validated bitwise-stability envelope.
+
+* **Speculative multi-token decode** (``ServeConfig.spec_k`` > 1): each
+  step drafts k-1 continuation tokens by prompt-lookup (most recent
+  earlier occurrence of the current token in the request's own context),
+  then verifies draft+current in ONE paged decode call with the k rows as
+  the batch dimension — every row shares the slot's block table and
+  carries its own position, so the per-row causal masks make the single
+  call an exact multi-token decode. The greedy acceptance rule keeps the
+  longest prefix of drafts matching the verified argmaxes (>= 1 token
+  always emitted); rejected rows' K/V writes are rolled back by pure
+  position truncation (stale rows are masked, then overwritten). Emitted
+  tokens AND logits are bitwise identical to plain decode."""
 from __future__ import annotations
 
+from collections import OrderedDict
 from dataclasses import dataclass, field, replace
 from typing import Any, Optional
 
@@ -99,6 +135,8 @@ class ServeConfig:
     num_pages: int = 0          # physical pool size; 0 = auto-size
     bucket_min: int = 8         # smallest power-of-two prefill bucket
     trace_logits: bool = False  # record per-request logits on Request.logits
+    share_prefix: bool = True   # alias block-aligned shared prompt prefixes
+    spec_k: int = 0             # speculative rows per decode step (<=1 = off)
 
 
 @dataclass
@@ -202,6 +240,16 @@ class ServeEngine:
                 1 + self.B * self.table_pages)
             self._paged_prefill: dict = {}  # bucket width -> jitted prefill
             self._paged_commit: dict = {}   # bucket width -> jitted commit
+            self._tail_prefill: dict = {}   # (tail_w, n_share, kv_len) -> jit
+            self._tail_commit: dict = {}    # tail bucket width -> jitted
+            self._copy_page = None          # jitted CoW page duplication
+            # per-run allocator state, (re)built by _paged_init:
+            self.page_refs = np.zeros(self.num_pages, np.int32)
+            self._prefix_index: "OrderedDict" = OrderedDict()
+            self._slot_rows: list = [None] * self.B
+            self.stats: dict = {}
+        if cfg.spec_k > 1 and self.cache_mode != "paged":
+            raise ValueError("spec_k needs the paged cache discipline")
 
     # ------------------------------------------------------------ shared bits
     def _commit_cache(self, cache):
@@ -224,6 +272,8 @@ class ServeEngine:
             else:
                 pending.append(r)
         if self.cache_mode == "paged":
+            if self.config.spec_k > 1:
+                return self._run_paged_spec(pending, done)
             return self._run_paged(pending, done)
         return self._run_ring(pending, done)
 
@@ -269,6 +319,181 @@ class ServeEngine:
             self._paged_commit[width] = jax.jit(commit)
         return self._paged_commit[width]
 
+    def _get_tail_prefill(self, tail_w: int, n_share: int, kv_len: int):
+        """Jitted tail-only prefill, keyed on (tail bucket, shared pages,
+        solo kv bucket) — all three are static trace parameters: the tail
+        bucket shapes the token batch, `n_share` slices the block table,
+        and `kv_len` pins the attention kv width to the solo program (the
+        bitwise-parity anchor; see Model.prefill_tail)."""
+        key = (tail_w, n_share, kv_len)
+        if key not in self._tail_prefill:
+            model, backend = self.model, self.backend
+
+            def prefill(params, toks, cache, page_row, last_pos):
+                return model.prefill_tail(
+                    params, {"tokens": toks}, cache, page_row=page_row,
+                    share_pages=n_share, kv_len=kv_len, last_pos=last_pos,
+                    backend=backend)
+
+            self._tail_prefill[key] = jax.jit(prefill)
+        return self._tail_prefill[key]
+
+    def _get_tail_commit(self, tail_w: int):
+        """Jitted scatter of a tail-only prefill cache into the slot's pages
+        at a dynamic offset (`start` = shared-prefix length): the tail
+        analogue of `_get_paged_commit`."""
+        if tail_w not in self._tail_commit:
+            from repro.models import attention as attn_lib
+
+            def commit(cache, dense, page_row, start, length):
+                def walk(pool, dn):
+                    if isinstance(pool, attn_lib.PagedKVCache):
+                        return attn_lib.paged_commit_tail(
+                            pool, dn, page_row, start, length, tail_w)
+                    if isinstance(pool, dict):
+                        return {k: walk(pool[k], dn[k]) for k in pool}
+                    if type(pool) is tuple:
+                        return tuple(walk(a, b) for a, b in zip(pool, dn))
+                    return pool
+
+                new = dict(cache)
+                new["blocks"] = walk(cache["blocks"], dense["blocks"])
+                new["tail"] = walk(cache["tail"], dense["tail"])
+                return new
+
+            self._tail_commit[tail_w] = jax.jit(commit)
+        return self._tail_commit[tail_w]
+
+    def _get_copy_page(self):
+        """Jitted physical page duplication across every layer pool — the
+        device half of copy-on-write (`attention.paged_copy_page`)."""
+        if self._copy_page is None:
+            from repro.models import attention as attn_lib
+
+            def copy(cache, src, dst):
+                def walk(pool):
+                    if isinstance(pool, attn_lib.PagedKVCache):
+                        return attn_lib.paged_copy_page(pool, src, dst)
+                    if isinstance(pool, dict):
+                        return {k: walk(v) for k, v in pool.items()}
+                    if type(pool) is tuple:
+                        return tuple(walk(x) for x in pool)
+                    return pool
+
+                new = dict(cache)
+                new["blocks"] = walk(cache["blocks"])
+                new["tail"] = walk(cache["tail"])
+                return new
+
+            self._copy_page = jax.jit(copy)
+        return self._copy_page
+
+    # ----------------------------------------------- prefix index + refcounts
+    def _class_bit(self, bucket: int) -> bool:
+        """Flash kv block class of a prompt bucket. The kernel's kv block
+        size is min(width, 128) for power-of-two widths, so K/V rows are
+        bitwise width-stable WITHIN each class (<= 128: validated directly;
+        > 128: every width runs the same 128-wide blocks and the extra
+        blocks are masked exact no-ops) but not across the boundary —
+        prefix sharing therefore never crosses it."""
+        return bucket > 128
+
+    def _prefix_match(self, prompt, bucket: int):
+        """Longest indexed block-aligned prefix of `prompt` (same block
+        class): -> (n_share, aliased page ids). Capped at (L-1)//P so at
+        least one prompt token always remains for the tail prefill (whose
+        last-position logits are the request's first output)."""
+        if not self.config.share_prefix:
+            return 0, []
+        P = self.config.page_size
+        pb = np.asarray(prompt, np.int32)
+        cls = self._class_bit(bucket)
+        ids = []
+        for j in range((len(pb) - 1) // P):
+            page = self._prefix_index.get((cls, pb[:(j + 1) * P].tobytes()))
+            if page is None:
+                break
+            ids.append(page)
+        return len(ids), ids
+
+    def _register_prefix(self, prompt, bucket: int, row: np.ndarray):
+        """Index every FULL page the admitted prompt covers (exact token
+        bytes as the key — collisions are impossible). Each NEW entry pins
+        its page with one refcount, keeping it alive for future sharers
+        after the owning slot releases; existing entries (the aliased
+        prefix, or a deeper donor chain this admission stopped short of)
+        are left untouched."""
+        if not self.config.share_prefix:
+            return
+        P = self.config.page_size
+        pb = np.asarray(prompt, np.int32)
+        cls = self._class_bit(bucket)
+        for j in range(len(pb) // P):
+            key = (cls, pb[:(j + 1) * P].tobytes())
+            if key not in self._prefix_index:
+                pg = int(row[j])
+                self._prefix_index[key] = pg
+                self.page_refs[pg] += 1
+
+    def _evict_one(self, free: list) -> bool:
+        """Drop the most recently indexed prefix entry (LIFO): chains are
+        inserted shallow-to-deep, so the deepest page of the newest chain
+        goes first and an evicted entry can never strand a still-pinned
+        continuation behind a broken walk. Frees the page iff the pin was
+        its last reference."""
+        if not self._prefix_index:
+            return False
+        _, pg = self._prefix_index.popitem(last=True)
+        self.page_refs[pg] -= 1
+        if self.page_refs[pg] == 0:
+            free.append(pg)
+        return True
+
+    def _sync_refcount(self, cache):
+        """Refresh the device refcount mirror from the host-authoritative
+        array (shape/dtype-stable, so jitted steps never retrace)."""
+        cache["refcount"] = jnp.asarray(self.page_refs)
+        return cache
+
+    def _cow_page(self, cache, free: list, slot_pages: list, slot: int,
+                  pidx: int):
+        """Copy-on-write one block-table entry of `slot`: duplicate the
+        shared physical page onto a fresh one, drop this slot's reference
+        to the original, and redirect the table row. Sharers keep the
+        original bytes untouched."""
+        row = self._slot_rows[slot]
+        old = int(row[pidx])
+        while not free:
+            if not self._evict_one(free):
+                raise RuntimeError(
+                    "copy-on-write found no free page and nothing evictable")
+        new = free.pop()
+        cache = self._get_copy_page()(
+            cache, jnp.asarray(old, jnp.int32), jnp.asarray(new, jnp.int32))
+        self.page_refs[old] -= 1
+        self.page_refs[new] = 1
+        row[pidx] = new
+        slot_pages[slot][slot_pages[slot].index(old)] = new
+        cache["pages"] = cache["pages"].at[slot, pidx].set(new)
+        self.stats["cow_copies"] += 1
+        return self._sync_refcount(cache)
+
+    def _cow_guard(self, cache, free: list, slot_pages: list, slot: int,
+                   wpos: int, count: int = 1):
+        """Make the pages behind write positions [wpos, wpos + count) of
+        `slot` exclusively owned (refcount 1) before a decode writes them.
+        The normal flow never trips this — aliased pages cover only
+        positions BEFORE the shared boundary and decode writes only
+        positions past the prompt — so the guard is the invariant's
+        enforcement point, not a hot path."""
+        P = self.config.page_size
+        row = self._slot_rows[slot]
+        for pidx in range(wpos // P, (wpos + count - 1) // P + 1):
+            pg = int(row[pidx])
+            if pg != 0 and self.page_refs[pg] > 1:
+                cache = self._cow_page(cache, free, slot_pages, slot, pidx)
+        return cache
+
     def _paged_init(self, pending: list, done: list):
         """Validate the request set, build the pool cache, and admit into
         every slot — the decode-ready paged state. Split out of the run
@@ -289,6 +514,16 @@ class ServeEngine:
         slot_pages: list = [[] for _ in range(self.B)]
         active: list = [None] * self.B
         remaining = [0] * self.B
+        # fresh per-run allocator state: host-authoritative page refcounts
+        # (page usable iff 0 == free, writable iff 1), the prefix index, the
+        # host block-table mirror, and the run's work counters
+        self.page_refs = np.zeros(self.num_pages, np.int32)
+        self._prefix_index = OrderedDict()
+        self._slot_rows = [None] * self.B
+        self.stats = {"prompt_tokens": 0, "prefill_tokens": 0,
+                      "prefix_hit_tokens": 0, "prefix_hits": 0,
+                      "spec_proposed": 0, "spec_accepted": 0,
+                      "cow_copies": 0}
         nxt = jnp.zeros((self.B, 1), jnp.int32)
         cache, nxt = self._admit_idle_slots(pending, done, cache, nxt,
                                             active, remaining, free,
@@ -313,6 +548,11 @@ class ServeEngine:
         cache, nxt, free, slot_pages, active, remaining = self._paged_init(
             pending, done)
         while any(r is not None for r in active):
+            for i, r in enumerate(active):
+                if r is not None:  # CoW any still-shared write-target page
+                    cache = self._cow_guard(
+                        cache, free, slot_pages, i,
+                        len(r.prompt) + len(r.out) - 1)
             logits, cache = self._decode(self.params, cache, {"tokens": nxt})
             nxt = greedy(logits)
             nxt_np = np.asarray(nxt)
@@ -345,51 +585,197 @@ class ServeEngine:
                 f"{len(free)}/{self.num_pages - 1} pages free")
         return done
 
+    # ------------------------------------------------------ speculative path
+    def _draft(self, r, n: int) -> np.ndarray:
+        """Prompt-lookup draft: propose the continuation of the most recent
+        EARLIER occurrence of the request's current last token in its own
+        context (prompt + generated so far), zero-padded to exactly `n`
+        proposals so the verify batch shape is static. A wrong draft costs
+        only the rejected rows' compute — acceptance is exact-match greedy,
+        so output never depends on draft quality."""
+        out = np.zeros((n,), np.int32)
+        if n == 0:
+            return out
+        ctx = np.concatenate([np.asarray(r.prompt, np.int32),
+                              np.asarray(r.out, np.int32)])
+        hits = np.nonzero(ctx[:-1] == ctx[-1])[0]
+        if hits.size:
+            cont = ctx[int(hits[-1]) + 1:int(hits[-1]) + 1 + n]
+            out[:cont.size] = cont
+        return out
+
+    def _run_paged_spec(self, pending: list, done: list) -> list:
+        """Speculative multi-token decode loop (spec_k rows per step, one
+        slot at a time): verify the current token plus k-1 drafted
+        continuations in ONE paged decode call with the rows as the batch
+        dimension — all rows share the slot's block table, each carries its
+        own position, and `paged_update_decode` writes every row's K/V at a
+        distinct (page, offset) BEFORE attention reads it, so the per-row
+        causal masks make the single call an exact multi-token decode.
+
+        Acceptance keeps the longest draft prefix matching the verified
+        argmaxes (row 0 is the plain decode step, so >= 1 token is always
+        emitted and the worst case degenerates to plain decode one slot at
+        a time). Rejected rows need no undo beyond POSITION TRUNCATION:
+        their writes sit past the slot's committed position, masked out of
+        every later read until overwritten. Rows past the slot's remaining
+        budget are parked on the trash row (pages 0, pos 0, token 0) so a
+        full-size verify batch never writes past the slot's allocation —
+        which also keeps the traced shape unique. Tokens and logits are
+        bitwise identical to the plain paged loop's."""
+        k = self.config.spec_k
+        cache, nxt, free, slot_pages, active, remaining = self._paged_init(
+            pending, done)
+        while any(r is not None for r in active):
+            for i in range(self.B):
+                r = active[i]
+                if r is None:
+                    continue
+                k_eff = min(k, remaining[i])
+                p = len(r.prompt) + len(r.out) - 1  # next write position
+                draft = self._draft(r, k - 1)
+                d = np.zeros((k, 1), np.int32)
+                d[0, 0] = r.out[-1]  # last emitted token = next input
+                d[1:k_eff, 0] = draft[:k_eff - 1]
+                pos_k = np.zeros(k, np.int32)
+                pos_k[:k_eff] = p + np.arange(k_eff)
+                pages_k = np.zeros((k, self.table_pages), np.int32)
+                pages_k[:k_eff] = self._slot_rows[i]
+                cache = self._cow_guard(cache, free, slot_pages, i, p, k_eff)
+                sub = {"blocks": cache["blocks"], "tail": cache["tail"],
+                       "pos": jnp.asarray(pos_k),
+                       "pages": jnp.asarray(pages_k),
+                       "refcount": cache["refcount"]}
+                logits, out_sub = self._decode(self.params, sub,
+                                               {"tokens": jnp.asarray(d)})
+                # the donated sub-cache shared the pool arrays: re-anchor the
+                # engine cache on the returned ones before anything else
+                # touches it (pages/pos stayed outside the donation)
+                cache["blocks"] = out_sub["blocks"]
+                cache["tail"] = out_sub["tail"]
+                cache["refcount"] = out_sub["refcount"]
+                g = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1))
+                a = 0  # accepted proposals: longest exact-match draft prefix
+                while a + 1 < k_eff and d[a + 1, 0] == g[a]:
+                    a += 1
+                self.stats["spec_proposed"] += k_eff - 1
+                self.stats["spec_accepted"] += a
+                r.out.extend(int(g[t]) for t in range(a + 1))
+                if self.config.trace_logits:
+                    log_np = np.asarray(logits)
+                    for t in range(a + 1):
+                        r.logits.append(log_np[t, 0].copy())
+                remaining[i] -= a + 1
+                # rollback IS this: rows past `a` stay masked behind pos and
+                # are overwritten by the next step's writes
+                cache["pos"] = cache["pos"].at[i].set(p + a + 1)
+                if remaining[i] == 0:
+                    r.done = True
+                    done.append(r)
+                    active[i] = None
+                    cache = self._release_slot(cache, free, slot_pages, i)
+                    cache, nxt = self._admit_idle_slots(
+                        pending, done, cache, nxt, active, remaining, free,
+                        slot_pages)
+        if pending:
+            raise RuntimeError(
+                f"{len(pending)} requests unadmittable with "
+                f"{len(free)}/{self.num_pages - 1} pages free")
+        return done
+
     def _release_slot(self, cache, free: list, slot_pages: list, slot: int):
-        """Return a finished slot's pages to the free list and park the slot
-        (all-trash table row, pos 0) so its junk decode writes land in the
-        reserved trash page."""
-        free.extend(slot_pages[slot])
+        """Drop a finished slot's references and park the slot (all-trash
+        table row, pos 0) so its junk decode writes land in the reserved
+        trash page. A page returns to the free list only at refcount zero —
+        prefix-index pins and other slots' aliases keep shared pages
+        resident past this slot's lifetime."""
+        for pg in slot_pages[slot]:
+            self.page_refs[pg] -= 1
+            if self.page_refs[pg] == 0:
+                free.append(pg)
         slot_pages[slot] = []
+        self._slot_rows[slot] = None
         cache["pages"] = cache["pages"].at[slot].set(0)
         cache["pos"] = cache["pos"].at[slot].set(0)
-        return cache
+        return self._sync_refcount(cache)
 
     def _try_admit(self, pending: list, done: list, cache, nxt, active,
                    remaining, free: list, slot_pages: list, slot: int):
-        """Admit the first pending request whose page need fits the free
-        list into `slot`: allocate pages, prefill the prompt SOLO at its
-        power-of-two bucket width (right-padded — batch-independent by
-        construction), scatter the dense prefill K/V into the allocated
-        pages, and record the first generated token (the prefill's greedy
-        pick at the last real position). Returns updated (cache, nxt)."""
+        """Admit the first pending request whose FRESH page need (total
+        pages minus prefix-index aliases) fits the free list into `slot`,
+        evicting LIFO index entries when nothing fits outright.
+
+        Solo admission prefills the prompt at its power-of-two bucket width
+        (right-padded — batch-independent by construction) and scatters the
+        dense K/V into the allocated pages. A prefix-index hit instead
+        ALIASES the matched pages (+1 refcount each) and prefills ONLY the
+        unshared tail at the solo run's kv bucket (`Model.prefill_tail` —
+        logits bitwise the solo prefill's), committing the tail K/V past
+        the shared boundary. Either way the prompt's full pages are then
+        registered in the prefix index for future sharers, and the first
+        generated token (the prefill's greedy pick at the last real
+        position) is recorded. Returns updated (cache, nxt)."""
         P = self.config.page_size
         while True:
-            j = next((r for r in pending
-                      if -(-(len(r.prompt) + r.max_new) // P) <= len(free)),
-                     None)
-            if j is None:
+            if not pending:  # nothing to admit — don't evict the index for it
                 return cache, nxt
+            cand = None
+            while cand is None:
+                for r in pending:
+                    need = -(-(len(r.prompt) + r.max_new) // P)
+                    n_share, aliased = self._prefix_match(
+                        r.prompt, self._bucket(len(r.prompt)))
+                    if need - n_share <= len(free):
+                        cand = (r, need, n_share, aliased)
+                        break
+                else:
+                    # eviction shortens donor chains, so re-scan after each
+                    # dropped entry instead of precomputing an evictable total
+                    if not self._evict_one(free):
+                        return cache, nxt
+            j, need, n_share, aliased = cand
             pending.remove(j)
             L = len(j.prompt)
-            need = -(-(L + j.max_new) // P)
-            pages = [free.pop() for _ in range(need)]
+            pages = aliased + [free.pop() for _ in range(need - n_share)]
+            for pg in pages:
+                self.page_refs[pg] += 1
             slot_pages[slot] = pages
             row = np.zeros(self.table_pages, np.int32)
             row[:need] = pages
+            self._slot_rows[slot] = row
             width = self._bucket(L)
             j.entry_width = width
-            self.prefill_widths.add(width)
-            toks = np.zeros((1, width), np.int32)
-            toks[0, :L] = j.prompt  # RIGHT-pad: pads sit past the causal mask
-            logits, dense = self._get_paged_prefill(width)(
-                self.params, jnp.asarray(toks),
-                jnp.asarray([L - 1], jnp.int32))
-            cache = self._commit_cache(self._get_paged_commit(width)(
-                cache, dense, jnp.asarray(row),
-                jnp.asarray(L, jnp.int32)))
+            self.stats["prompt_tokens"] += L
+            if n_share:
+                Ls = n_share * P
+                tail_w = self._bucket(L - Ls)
+                self.prefill_widths.add(tail_w)
+                self.stats["prefill_tokens"] += tail_w
+                self.stats["prefix_hit_tokens"] += Ls
+                self.stats["prefix_hits"] += 1
+                toks = np.zeros((1, tail_w), np.int32)
+                toks[0, :L - Ls] = j.prompt[Ls:]  # RIGHT-pad the tail
+                logits, dense = self._get_tail_prefill(tail_w, n_share, width)(
+                    self.params, jnp.asarray(toks), cache, jnp.asarray(row),
+                    jnp.asarray([L - Ls - 1], jnp.int32))
+                cache = self._commit_cache(self._get_tail_commit(tail_w)(
+                    cache, dense, jnp.asarray(row),
+                    jnp.asarray(Ls, jnp.int32), jnp.asarray(L, jnp.int32)))
+            else:
+                self.prefill_widths.add(width)
+                self.stats["prefill_tokens"] += width
+                toks = np.zeros((1, width), np.int32)
+                toks[0, :L] = j.prompt  # RIGHT-pad: pads past the causal mask
+                logits, dense = self._get_paged_prefill(width)(
+                    self.params, jnp.asarray(toks),
+                    jnp.asarray([L - 1], jnp.int32))
+                cache = self._commit_cache(self._get_paged_commit(width)(
+                    cache, dense, jnp.asarray(row),
+                    jnp.asarray(L, jnp.int32)))
+            self._register_prefix(j.prompt, width, row)
             cache["pages"] = cache["pages"].at[slot].set(jnp.asarray(row))
             cache["pos"] = cache["pos"].at[slot].set(L)
+            cache = self._sync_refcount(cache)
             first = greedy(logits)
             j.out.append(int(np.asarray(first)[0, 0]))
             if self.config.trace_logits:

@@ -7,9 +7,20 @@ cannot sweep. The paged op additionally fuzzes against the ring op as a
 differential oracle (same cache contents, different layout — allclose, the
 two softmax programs differ) and over jit/eager execution modes.
 
+Alongside the op fuzz, an ALLOCATOR property suite drives the paged
+engine's admission/decode/finish machinery (model math stubbed out) over
+randomized schedules with overlapping prompt prefixes and asserts the page
+-ownership invariants after every step: refcount conservation (each page's
+refcount equals its block-table occurrences plus prefix-index pins, and the
+free list is exactly the zero-refcount pages — pages never leak and never
+double-free) and exclusive-write safety (after the copy-on-write guard, a
+slot's write-target page always has refcount 1, so a shared page is never
+written in place).
+
 Importorskip-guarded like the other hypothesis suites; `REPRO_TEST_BACKENDS`
 (comma-separated) restricts the swept backends for the CI backend-matrix
 job."""
+import functools
 import os
 
 import jax
@@ -166,6 +177,128 @@ def test_paged_matches_ring_differential(seed, hkv, g, page, n_table, window,
     ring = np.asarray(bk.decode_attention(
         q, kd, vd, ring_valid(jnp.asarray(pos_v), W, spec), spec))
     np.testing.assert_allclose(paged, ring, rtol=2e-5, atol=2e-6)
+
+
+@functools.lru_cache(maxsize=1)
+def _alloc_model():
+    """One reduced attention-only model for the allocator fuzz (params are
+    never materialized — the model only supplies `init_paged_cache` and the
+    arch gate; all prefill/commit math is stubbed per engine)."""
+    from repro.configs import get_config, reduced
+    from repro.models import Model
+
+    cfg = reduced(get_config("olmo-1b"))
+    return cfg, Model(cfg)
+
+
+def _alloc_engine():
+    """Paged ServeEngine with every jitted model stage stubbed to a no-op:
+    what remains is EXACTLY the allocator under test — free list, refcounts,
+    prefix index, block-table rows, CoW — driven through the real admission
+    / release / eviction code paths."""
+    from repro.serving.engine import ServeConfig, ServeEngine
+
+    cfg, model = _alloc_model()
+    eng = ServeEngine(model, None, backend=None,
+                      config=ServeConfig(batch_size=2, max_len=32,
+                                         cache="paged", page_size=4))
+    logits = jnp.zeros((1, 1, cfg.vocab_size))
+    eng._get_paged_prefill = lambda w: (lambda p, t, lp: (logits, None))
+    eng._get_paged_commit = lambda w: (lambda c, d, row, L: c)
+    eng._get_tail_prefill = lambda tw, ns, kv: (
+        lambda p, t, c, row, lp: (logits, None))
+    eng._get_tail_commit = lambda tw: (lambda c, d, row, s, L: c)
+    eng._get_copy_page = lambda: (lambda c, s, d: c)
+    return cfg, eng
+
+
+def _check_conservation(eng, free, slot_pages, extra_pins=()):
+    """The page-ownership ledger balances: refcount == table occurrences +
+    index pins (+ any hand pins a test holds), the free list is exactly the
+    zero-refcount pages with no duplicates, and the trash page is never
+    owned."""
+    want = np.zeros_like(eng.page_refs)
+    for pages in slot_pages:
+        for pg in pages:
+            want[pg] += 1
+    for pg in eng._prefix_index.values():
+        want[pg] += 1
+    for pg in extra_pins:
+        want[pg] += 1
+    assert np.array_equal(eng.page_refs, want), (eng.page_refs, want)
+    zero = [p for p in range(1, eng.num_pages) if eng.page_refs[p] == 0]
+    assert sorted(free) == zero and len(set(free)) == len(free)
+    assert eng.page_refs[0] == 0  # the reserved trash page is never owned
+
+
+@settings(deadline=None, max_examples=25)
+@given(seed=st.integers(0, 10_000))
+def test_paged_allocator_no_leaks_no_shared_writes(seed):
+    """Random admit/decode/finish schedules with overlapping block-aligned
+    prompt prefixes NEVER leak pages and NEVER write a shared page in
+    place: conservation holds after every admission, CoW, release, and
+    re-admission; hand-pinning a write target (simulating a concurrent
+    sharer) forces the CoW path and the guard still lands every write on a
+    refcount-1 page; after the drain only prefix-index pins hold pages."""
+    from repro.serving.engine import Request
+
+    rng = np.random.default_rng(seed)
+    cfg, eng = _alloc_engine()
+    P = eng.config.page_size
+    base = rng.integers(1, 50, 3 * P).astype(np.int32)  # shared material
+    reqs = []
+    for u in range(int(rng.integers(3, 8))):
+        npfx = int(rng.integers(0, 4)) * P  # 0..3 block-aligned shared pages
+        tail = rng.integers(1, 50, int(rng.integers(1, 12))).astype(np.int32)
+        prompt = np.concatenate([base[:npfx], tail])
+        budget = int(rng.integers(1, min(7, eng.max_len - len(prompt) + 1)))
+        reqs.append(Request(u, prompt, budget))
+    pending, done = list(reqs), []
+    cache, nxt, free, slot_pages, active, remaining = eng._paged_init(
+        pending, done)
+    _check_conservation(eng, free, slot_pages)
+    steps = 0
+    while any(r is not None for r in active):
+        steps += 1
+        assert steps < 500, "allocator schedule failed to drain"
+        for i, r in enumerate(active):
+            if r is None:
+                continue
+            wpos = len(r.prompt) + len(r.out) - 1
+            if rng.random() < 0.3:
+                # hand-pin the write target: a sharer appears mid-flight,
+                # the guard MUST copy before the write
+                pg = int(eng._slot_rows[i][wpos // P])
+                eng.page_refs[pg] += 1
+                cache = eng._cow_guard(cache, free, slot_pages, i, wpos)
+                moved = int(eng._slot_rows[i][wpos // P])
+                assert moved != pg, "wrote a refcount>1 page in place"
+                _check_conservation(eng, free, slot_pages, extra_pins=(pg,))
+                eng.page_refs[pg] -= 1  # sharer departs
+                if eng.page_refs[pg] == 0:
+                    free.append(pg)
+            else:
+                cache = eng._cow_guard(cache, free, slot_pages, i, wpos)
+            assert eng.page_refs[int(eng._slot_rows[i][wpos // P])] == 1
+            _check_conservation(eng, free, slot_pages)
+            r.out.append(int(rng.integers(1, 50)))  # fake decode emit
+            remaining[i] -= 1
+            if remaining[i] == 0:
+                r.done = True
+                done.append(r)
+                active[i] = None
+                cache = eng._release_slot(cache, free, slot_pages, i)
+                _check_conservation(eng, free, slot_pages)
+                cache, nxt = eng._admit_idle_slots(
+                    pending, done, cache, nxt, active, remaining, free,
+                    slot_pages)
+                _check_conservation(eng, free, slot_pages)
+    assert not pending and len(done) == len(reqs)
+    assert all(not pages for pages in slot_pages)
+    # drained: every owned page is owned by the prefix index alone
+    pins = list(eng._prefix_index.values())
+    for p in range(1, eng.num_pages):
+        assert eng.page_refs[p] == pins.count(p)
 
 
 @settings(deadline=None, max_examples=15)

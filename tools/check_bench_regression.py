@@ -4,7 +4,11 @@ on decode-throughput regressions.
   python tools/check_bench_regression.py BENCH_serving.json \
       benchmarks/BENCH_serving_baseline.json --warn-pct 20
 
-Compares every ``*_tok_per_s`` metric per backend. A metric more than
+Compares every ``*_tok_per_s`` metric per backend — in the top-level
+``backends`` section (prefill, ring decode, paged decode) AND in the
+``prefix_share`` scenario, where the deterministic ``hit_rate`` and
+``work_ratio`` metrics (engine-counted, immune to runner noise) are
+checked with the same threshold. A metric more than
 ``--warn-pct`` percent BELOW the baseline prints a GitHub Actions
 ``::warning::`` annotation (visible on the job summary) — it does NOT fail
 the job by default, because CI runners are shared machines and CPU
@@ -19,27 +23,43 @@ import json
 import sys
 
 
+# higher-is-better metrics beyond the *_tok_per_s suffix rule: the
+# prefix-share scenario's deterministic work counters
+_EXTRA_METRICS = ("hit_rate", "work_ratio")
+
+
+def _compare_section(label, cur_b, base_b, warn_pct, regressions):
+    """Walk one backends-keyed section, appending regressions in place."""
+    for name, base_rec in base_b.items():
+        cur_rec = cur_b.get(name)
+        if cur_rec is None:
+            print(f"note: backend {label}{name!r} in baseline but not in "
+                  "current run")
+            continue
+        for metric, base_val in base_rec.items():
+            if not (metric.endswith("_tok_per_s")
+                    or metric in _EXTRA_METRICS):
+                continue
+            cur_val = cur_rec.get(metric)
+            if not isinstance(cur_val, (int, float)) or not base_val:
+                print(f"note: metric {label}{name}/{metric} missing or zero")
+                continue
+            pct = 100.0 * (cur_val - base_val) / base_val
+            if pct < -warn_pct:
+                regressions.append(
+                    (f"{label}{name}", metric, cur_val, base_val, pct))
+
+
 def compare(current: dict, baseline: dict, warn_pct: float):
     """Yield (backend, metric, cur, base, pct_change) for every regression
     beyond warn_pct; pct_change is negative for slower-than-baseline."""
     regressions = []
-    cur_b = current.get("backends", {})
-    base_b = baseline.get("backends", {})
-    for name, base_rec in base_b.items():
-        cur_rec = cur_b.get(name)
-        if cur_rec is None:
-            print(f"note: backend {name!r} in baseline but not in current run")
-            continue
-        for metric, base_val in base_rec.items():
-            if not metric.endswith("_tok_per_s"):
-                continue
-            cur_val = cur_rec.get(metric)
-            if not isinstance(cur_val, (int, float)) or not base_val:
-                print(f"note: metric {name}/{metric} missing or zero")
-                continue
-            pct = 100.0 * (cur_val - base_val) / base_val
-            if pct < -warn_pct:
-                regressions.append((name, metric, cur_val, base_val, pct))
+    _compare_section("", current.get("backends", {}),
+                     baseline.get("backends", {}), warn_pct, regressions)
+    _compare_section("prefix_share/",
+                     current.get("prefix_share", {}).get("backends", {}),
+                     baseline.get("prefix_share", {}).get("backends", {}),
+                     warn_pct, regressions)
     return regressions
 
 
@@ -61,11 +81,11 @@ def main(argv=None) -> int:
 
     regressions = compare(current, baseline, args.warn_pct)
     for name, metric, cur, base, pct in regressions:
-        print(f"::warning title=serving decode regression::"
-              f"{name}/{metric}: {cur:.2f} tok/s vs baseline {base:.2f} "
+        print(f"::warning title=serving bench regression::"
+              f"{name}/{metric}: {cur:.2f} vs baseline {base:.2f} "
               f"({pct:+.1f}%)")
     if not regressions:
-        print(f"decode throughput within {args.warn_pct:.0f}% of baseline "
+        print(f"serving metrics within {args.warn_pct:.0f}% of baseline "
               f"for all backends")
     return 1 if (regressions and args.strict) else 0
 
