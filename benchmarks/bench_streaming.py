@@ -1,0 +1,149 @@
+"""Streaming CHEF benchmark: warm-start absorption vs the retrain oracle.
+
+For each backend:
+
+  1. PARITY (asserted, not timed): warm_start=False streaming over k
+     windows — ingest all, then clean — is BITWISE identical (labels,
+     weights, head) to a from-scratch batch `CleaningSession` on the
+     concatenated data. The streaming contract, re-asserted in the bench
+     so the artifact always reflects a verified configuration.
+  2. TIMING: interleaved runs (clean a round between window arrivals) in
+     both modes. The per-window ingest cost is what streaming changes —
+     warm mode absorbs a window by DeltaGrad-L replay + O(window)
+     provenance extension; cold mode retrains from scratch — so the
+     artifact records both per-window times and their ratio
+     (``warm_constructor_speedup``, a deterministic work ratio in spirit
+     but measured wall-clock here), plus both final F1s and their gap
+     (the warm-start quality tolerance, asserted in tests).
+
+Emits CSV lines via `benchmarks.common.emit` AND writes a
+``BENCH_streaming.json`` artifact (the CI streaming-smoke job uploads it;
+tools/check_bench_regression.py understands its sections).
+
+Env knobs:
+  REPRO_BENCH_STREAMING_WINDOWS      windows per stream (default 3)
+  REPRO_BENCH_STREAMING_WINDOW_SIZE  rows per window (default 150)
+  REPRO_BENCH_STREAMING_OUT          output JSON path (BENCH_streaming.json)
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.cleaning import CleaningSession, make_scheduler
+from repro.configs.chef_lr import ChefConfig
+from repro.core.backend import BACKENDS
+from repro.stream import StreamingCleaningSession, SyntheticStream
+
+
+def _source(windows: int, window_size: int) -> SyntheticStream:
+    # small windows against a large capacity: the regime streaming targets
+    # (per-window work O(window) while retrain pays O(n) as n grows)
+    return SyntheticStream(jax.random.key(29), window_size=window_size,
+                           n_windows=windows, n_val=150, n_test=300,
+                           feature_dim=128)
+
+
+def _cfg(bk: str, windows: int) -> ChefConfig:
+    return ChefConfig(budget=windows * 10, round_size=10, n_epochs=8,
+                      batch_size=800, lr=0.05, l2=0.05, strategy="two",
+                      backend=bk)
+
+
+def _interleaved(src, cfg, warm: bool):
+    """One interleaved streaming run; returns (result, per-ingest seconds
+    AFTER the first window — the absorb-vs-retrain cost — and total wall).
+    Both modes run the SAME increm selector, so the cold mode pays the full
+    O(n) provenance rebuild a warm absorb replaces with an O(window)
+    extension — the apples-to-apples per-window constructor cost."""
+    s = StreamingCleaningSession(
+        src, cfg, warm_start=warm,
+        selector="increm", constructor="deltagrad")
+    ingest_s = []
+    t_all = time.perf_counter()
+    first = True
+    while True:
+        t0 = time.perf_counter()
+        m = s.ingest()
+        jax.block_until_ready(s.session.w if s.session else None)
+        dt = time.perf_counter() - t0
+        if m == 0:
+            break
+        if not first:
+            ingest_s.append(dt)
+        first = False
+        s.clean(1)
+    s.clean(None)
+    res = s.result()
+    return res, ingest_s, time.perf_counter() - t_all
+
+
+def run(backends=None, out_path=None) -> dict:
+    windows = int(os.environ.get("REPRO_BENCH_STREAMING_WINDOWS", "8"))
+    wsize = int(os.environ.get("REPRO_BENCH_STREAMING_WINDOW_SIZE", "100"))
+    if backends is None:
+        backends = list(BACKENDS)
+    record = {"bench": "streaming", "windows": windows,
+              "window_size": wsize, "backends": {}}
+    for bk in backends:
+        src = _source(windows, wsize)
+        cfg = _cfg(bk, windows)
+
+        # ---- parity: ingest-all-then-clean == batch, bitwise
+        s = StreamingCleaningSession(src, cfg, warm_start=False,
+                                     selector="full", constructor="deltagrad")
+        while s.ingest():
+            pass
+        s.clean(None)
+        stream_res = s.result()
+        batch_sess = CleaningSession.initialize(src.batch_dataset(), cfg,
+                                                backend=bk)
+        batch_res = make_scheduler(batch_sess, method="infl", selector="full",
+                                   constructor="deltagrad").run()
+        assert np.array_equal(np.asarray(stream_res.dataset.y_prob),
+                              np.asarray(batch_res.dataset.y_prob)), bk
+        assert np.array_equal(np.asarray(stream_res.dataset.y_weight),
+                              np.asarray(batch_res.dataset.y_weight)), bk
+        assert np.array_equal(np.asarray(stream_res.w),
+                              np.asarray(batch_res.w)), bk
+
+        # ---- timing: warm BOTH modes' traces first (cold mode retraces per
+        # fill level — real in production, excluded here so the measured
+        # per-window cost is compute, not compilation), then measure
+        _interleaved(src, cfg, warm=True)
+        _interleaved(src, cfg, warm=False)
+        warm_res, warm_ing, warm_wall = _interleaved(src, cfg, warm=True)
+        cold_res, cold_ing, _ = _interleaved(src, cfg, warm=False)
+        warm_window_s = float(np.mean(warm_ing))
+        retrain_window_s = float(np.mean(cold_ing))
+        speedup = retrain_window_s / warm_window_s
+        f1_gap = abs(warm_res.f1_test_final - cold_res.f1_test_final)
+        record["backends"][bk] = {
+            "stream_rows_per_s": src.total_rows / warm_wall,
+            "warm_window_s": warm_window_s,
+            "retrain_window_s": retrain_window_s,
+            "warm_constructor_speedup": speedup,
+            "warm_f1": warm_res.f1_test_final,
+            "retrain_f1": cold_res.f1_test_final,
+            "f1_gap": f1_gap,
+            "bitwise_parity": True,  # the asserts above passed
+        }
+        emit(f"streaming_{bk}_warm_window", warm_window_s,
+             f"speedup={speedup:.2f}x")
+        emit(f"streaming_{bk}_retrain_window", retrain_window_s,
+             f"f1_gap={f1_gap:.4f}")
+    out = out_path or os.environ.get("REPRO_BENCH_STREAMING_OUT",
+                                     "BENCH_streaming.json")
+    with open(out, "w") as f:
+        json.dump(record, f, indent=2)
+    emit("streaming_artifact", 0.0, out)
+    return record
+
+
+if __name__ == "__main__":
+    run()

@@ -15,6 +15,9 @@ Prints ``name,us_per_call,derived`` CSV lines.
   serving            — Backend-dispatched prefill/decode per backend, with
                        bit-parity + KV-cache-sharding asserts (writes the
                        BENCH_serving.json artifact)
+  streaming          — streaming-vs-batch bitwise parity + warm-start
+                       absorb vs retrain per-window cost per backend
+                       (writes the BENCH_streaming.json artifact)
   kern  (framework)  — kernel microbench
   roof  (assignment) — roofline table from the dry-run artifacts
 
@@ -32,7 +35,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma list: exp1,exp2,exp3,exp4,clean,constructor,"
-                         "serving,kern,roof")
+                         "serving,streaming,kern,roof")
     ap.add_argument("--backend", default="all",
                     help="kern suite backends: 'all' or comma list of "
                          "reference,pallas,pallas_sharded")
@@ -44,6 +47,7 @@ def main() -> None:
         bench_constructor,
         bench_kernels,
         bench_serving,
+        bench_streaming,
         exp1_quality,
         exp2_increm,
         exp3_deltagrad,
@@ -59,6 +63,7 @@ def main() -> None:
         ("clean", bench_cleaning.run),
         ("constructor", bench_constructor.run),
         ("serving", bench_serving.run),
+        ("streaming", bench_streaming.run),
         ("kern", lambda: bench_kernels.run(backend=args.backend)),
         ("roof", roofline_table.run),
     ]

@@ -1,0 +1,72 @@
+"""Streaming CHEF end to end: clean labels while the data is still arriving.
+
+Walks the full online loop three ways:
+
+  1. WARM START (the streaming design): one capacity-preallocated session
+     absorbs each arriving window by DeltaGrad-L replay + O(window)
+     provenance extension, cleaning a round between arrivals.
+  2. RETRAIN ORACLE (`warm_start=False`): the same stream, re-initializing
+     from scratch at each arrival — and when all windows land before the
+     first round, BITWISE identical to a batch run on the concatenated
+     data (checked here with a real assert).
+  3. MODEL-IN-THE-LOOP: the annotation phase served by a `ServeEngine`
+     (`ModelAnnotator`) — each candidate row is tokenized behind a shared
+     task prefix that the paged engine's persistent prefix index aliases
+     across rounds.
+
+Run:  PYTHONPATH=src python examples/streaming_cleaning.py
+"""
+import jax
+import numpy as np
+
+from repro.cleaning import CleaningSession, make_scheduler
+from repro.configs.chef_lr import ChefConfig
+from repro.stream import StreamingCleaningSession, SyntheticStream
+
+source = SyntheticStream(jax.random.key(0), window_size=100, n_windows=4,
+                         n_val=128, n_test=128, feature_dim=24)
+cfg = ChefConfig(budget=40, round_size=10, n_epochs=8, batch_size=200,
+                 lr=0.05, l2=0.05, strategy="two")
+
+# --- 1. warm-start streaming: absorb windows by replay, clean in between
+warm = StreamingCleaningSession(source, cfg, warm_start=True)
+res_warm = warm.run(rounds_per_window=1)
+print(f"warm-start : {warm.windows_ingested} windows, "
+      f"{len(res_warm.history)} rounds, f1_test={res_warm.f1_test_final:.4f}")
+
+# --- 2. the retrain oracle, ingest-all-then-clean == a batch run, bitwise
+cold = StreamingCleaningSession(source, cfg, warm_start=False,
+                                selector="full")
+while cold.ingest():
+    pass
+cold.clean(None)
+res_cold = cold.result()
+batch = make_scheduler(
+    CleaningSession.initialize(source.batch_dataset(), cfg),
+    method="infl", selector="full", constructor="deltagrad").run()
+assert np.array_equal(np.asarray(res_cold.dataset.y_prob),
+                      np.asarray(batch.dataset.y_prob))
+assert np.array_equal(np.asarray(res_cold.w), np.asarray(batch.w))
+print(f"cold oracle: bitwise == batch run, f1_test={res_cold.f1_test_final:.4f}")
+
+# --- 3. model-in-the-loop: a ServeEngine votes the labels
+from repro.configs import get_config, reduced
+from repro.models import Model
+from repro.serving.engine import ServeConfig, ServeEngine
+from repro.stream import ModelAnnotator
+
+mcfg = reduced(get_config("olmo-1b"))
+model = Model(mcfg)
+params = model.init(jax.random.key(7))
+engine = ServeEngine(model, params, config=ServeConfig(
+    batch_size=4, max_len=48, trace_logits=True))
+mil = StreamingCleaningSession(
+    SyntheticStream(jax.random.key(1), window_size=50, n_windows=2,
+                    n_val=64, n_test=64, feature_dim=8),
+    ChefConfig(budget=10, round_size=5, n_epochs=4, batch_size=100),
+    warm_start=True, annotator=ModelAnnotator(engine))
+res_mil = mil.run(rounds_per_window=1)
+hit = engine.stats.get("prefix_hits", 0)
+print(f"model-loop : {len(res_mil.history)} rounds, "
+      f"f1_test={res_mil.f1_test_final:.4f}, "
+      f"prefix hits in final round={hit}")

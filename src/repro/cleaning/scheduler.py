@@ -229,7 +229,7 @@ class RoundScheduler:
         s = self.session
         k = s.round
         k_sel, k_vote = s.round_keys(k)
-        eligible = ~s.ds.cleaned
+        eligible = s.eligible()
 
         # ---- selection phase (possibly prefetched inside round k-1's wait)
         pf = self._prefetch
@@ -313,7 +313,7 @@ class RoundScheduler:
             child = s.child(result.ds, result.w, result.traj, result.sched)
             k_sel_next, _ = s.round_keys(k + 1)
             t0 = time.perf_counter()
-            sel_next = self.selector.select(child, ~result.ds.cleaned, k_sel_next)
+            sel_next = self.selector.select(child, child.eligible(), k_sel_next)
             jax.block_until_ready(sel_next.idx)
             prefetch = _Prefetch(k + 1, sel_next, time.perf_counter() - t0)
         return _Speculation(pred, result, t_update, prefetch)

@@ -20,7 +20,9 @@ API shape is deliberately job-queue-like:
 
 Cancellation is cooperative at round granularity — exactly the granularity at
 which sessions checkpoint, so a cancelled job with a `ckpt_dir` can be
-resubmitted later via `CleaningSession.restore` and loses nothing.
+resubmitted later with `submit(..., resume=True)` (worker-side
+`CleaningSession.restore`) and loses nothing: the resumed job finishes
+bit-for-bit like the uninterrupted run (tests/test_cleaning.py).
 """
 from __future__ import annotations
 
@@ -90,7 +92,16 @@ class CleaningService:
     # ------------------------------------------------------------------- API
     def submit(self, ds, cfg, *, method: str = "infl", selector: str = "full",
                constructor: str = "retrain", pipelined: bool = False,
-               ckpt_dir=None, job_id: Optional[str] = None) -> str:
+               ckpt_dir=None, resume: bool = False,
+               job_id: Optional[str] = None) -> str:
+        """Enqueue one cleaning job. With `resume=True` (requires
+        `ckpt_dir`), the worker restores the latest committed checkpoint in
+        `ckpt_dir` instead of initializing from scratch — the
+        cancel-then-resubmit path: a job cancelled at a round boundary picks
+        up exactly where it stopped, bit-for-bit (tests/test_cleaning.py).
+        An empty/absent checkpoint dir falls back to a fresh start."""
+        if resume and ckpt_dir is None:
+            raise ValueError("resume=True requires a ckpt_dir")
         with self._lock:
             if job_id is None:
                 job_id = f"job-{next(self._ids):04d}"
@@ -98,7 +109,7 @@ class CleaningService:
                 raise ValueError(f"duplicate job id {job_id!r}")
             job = _Job(job_id, ds, cfg, dict(
                 method=method, selector=selector, constructor=constructor,
-                pipelined=pipelined, ckpt_dir=ckpt_dir))
+                pipelined=pipelined, ckpt_dir=ckpt_dir, resume=resume))
             self._jobs[job_id] = job
         self._queue.put(job)
         return job_id
@@ -179,11 +190,20 @@ class CleaningService:
             if job.cancel_event.is_set():
                 return
             job.state = RUNNING
-        session = CleaningSession.initialize(
-            job.ds, job.cfg, backend=self.backend,
-            need_trajectory=(opts["constructor"] == "deltagrad"),
-            need_provenance=opts["selector"].startswith("increm"),
-        )
+        resume_step = None
+        if opts.get("resume") and opts["ckpt_dir"] is not None:
+            from repro.ckpt.checkpoint import latest_step
+
+            resume_step = latest_step(opts["ckpt_dir"])
+        if resume_step is not None:
+            session = CleaningSession.restore(
+                opts["ckpt_dir"], job.ds, job.cfg, backend=self.backend)
+        else:
+            session = CleaningSession.initialize(
+                job.ds, job.cfg, backend=self.backend,
+                need_trajectory=(opts["constructor"] == "deltagrad"),
+                need_provenance=opts["selector"].startswith("increm"),
+            )
         sched: RoundScheduler = make_scheduler(
             session, method=opts["method"], selector=opts["selector"],
             constructor=opts["constructor"], pipelined=opts["pipelined"],
@@ -191,6 +211,10 @@ class CleaningService:
         )
         while not sched.exhausted:
             if job.cancel_event.is_set():
+                if sched.ckpt is not None:
+                    # flush pending async writes so the promised resume point
+                    # (every committed round) is on disk before the slot frees
+                    sched.ckpt.wait()
                 with self._lock:
                     job.state = CANCELLED
                 return

@@ -74,6 +74,11 @@ class CleaningSession:
     ledger: BudgetLedger = None  # type: ignore[assignment]
     history: list = field(default_factory=list)
     terminated: bool = False
+    # extra [N] bool constraint ANDed into round eligibility (None = all
+    # rows). The streaming window store sets it to its validity mask so the
+    # selector never proposes a capacity-padding row; owners update it
+    # between rounds (it is derived stream state, not checkpointed here).
+    eligible_mask: Optional[jax.Array] = None
     # derived caches (rebuilt, never checkpointed)
     Xa: jax.Array = None  # type: ignore[assignment]
     Xa_val: jax.Array = None  # type: ignore[assignment]
@@ -118,6 +123,16 @@ class CleaningSession:
             self.ledger = BudgetLedger(self.cfg.budget)
 
     # --------------------------------------------------------------- rounds
+    def eligible(self) -> jax.Array:
+        """[N] bool — rows the selector may pick this round: not yet cleaned,
+        further restricted by `eligible_mask` when an owner (the streaming
+        window store) set one. The single eligibility definition both the
+        blocking and the speculative scheduler paths consult."""
+        e = ~self.ds.cleaned
+        if self.eligible_mask is not None:
+            e = e & self.eligible_mask
+        return e
+
     def round_keys(self, k: int):
         """(k_select, k_vote) for round k — a pure function of (key, k)."""
         return jax.random.split(jax.random.fold_in(self.key, k), 2)
@@ -181,6 +196,15 @@ class CleaningSession:
         the manager's async mode overlaps the write with the next round)."""
         manager.save(self.round, self.state_tree(), blocking=False)
 
+    @staticmethod
+    def state_template() -> dict:
+        """Restore template matching `state_tree()`'s fixed structure (the
+        repro.ckpt contract: structure, not shapes, must match)."""
+        return {k: np.zeros((0,), np.float32) for k in (
+            "w", "sched", "traj_ws", "traj_gs", "has_traj", "prov_w0", "prov_p0",
+            "prov_hnorm", "has_prov", "key", "y_prob", "y_weight", "cleaned",
+            "round", "spent", "terminated", "history")}
+
     @classmethod
     def restore(
         cls,
@@ -197,13 +221,25 @@ class CleaningSession:
         checkpointed one."""
         from repro.ckpt.checkpoint import restore_checkpoint
 
+        state, _ = restore_checkpoint(ckpt_dir, cls.state_template(), step=step)
+        return cls.from_state(state, ds, cfg, backend=backend)
+
+    @classmethod
+    def from_state(
+        cls,
+        state: dict,
+        ds,
+        cfg: ChefConfig,
+        *,
+        backend: "Backend | str | None" = None,
+    ) -> "CleaningSession":
+        """Rebuild a session from an already-loaded `state_tree()` pytree —
+        the restore half without the checkpoint read, so composite owners
+        (the streaming session, which embeds this tree inside its own
+        checkpoint) reuse the exact same reconstruction path `restore`
+        takes."""
         backend = get_backend(backend if backend is not None else cfg.backend,
                               chunk_rows=cfg.score_chunk)
-        template = {k: np.zeros((0,), np.float32) for k in (
-            "w", "sched", "traj_ws", "traj_gs", "has_traj", "prov_w0", "prov_p0",
-            "prov_hnorm", "has_prov", "key", "y_prob", "y_weight", "cleaned",
-            "round", "spent", "terminated", "history")}
-        state, _ = restore_checkpoint(ckpt_dir, template, step=step)
         ds = replace(
             ds,
             y_prob=jnp.asarray(state["y_prob"]),

@@ -227,3 +227,39 @@ def deltagrad_replay(
         (idx_schedule, cache_ws, cache_gs, explicit, corr_idx, corr_mask),
     )
     return w_fin, bk.constrain_trajectory(new_traj)
+
+
+def absorb_rows(
+    traj,  # (cache_ws, cache_gs) — the previous window's trajectory
+    sched,  # [T, bs] batch schedule (drawn over the FIXED capacity)
+    Xa,
+    Y_old,
+    Y_new,
+    w_old,
+    w_new,
+    changed_idx,
+    cfg: DGConfig,
+    backend: "Backend | None" = None,
+):
+    """Warm-start on newly-arrived data by trajectory replay — DeltaGrad-L's
+    label-cleaning machinery reused for STREAMING ingest.
+
+    A window append is, from the replay's point of view, exactly a label
+    change on the arriving rows: they transition from (padding labels,
+    weight 0 — exact neutral elements that contributed bitwise nothing to
+    any cached batch gradient) to (weak labels, weight gamma). Per Eq. (4)
+    the updated batch gradients are the cached ones plus corrections over
+    ONLY the arriving rows that land in each batch, so absorbing an m-row
+    window costs O(T * m * bs / N_cap) correction work instead of a full
+    O(T * bs) retrain — the speedup benchmarks/bench_streaming.py records.
+
+    Requires the schedule to have been drawn over the fixed capacity (the
+    repro.stream window store's invariant) so arriving rows already occupy
+    batch slots. Returns (w, new_traj) like `deltagrad_replay`; the caller
+    re-commits the trajectory sharding."""
+    ci, cm = build_correction_schedule(np.asarray(sched),
+                                       np.asarray(changed_idx))
+    return deltagrad_replay(
+        traj[0], traj[1], sched, Xa, Y_old, Y_new, w_old, w_new,
+        ci, cm, cfg, int(sched.shape[1]), backend=backend,
+    )

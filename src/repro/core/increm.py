@@ -43,9 +43,45 @@ class Provenance(NamedTuple):
 
 def build_provenance(w0, Xa, power_iters: int = 12, key=None,
                      backend: Optional[Backend] = None) -> Provenance:
+    """Initialization-step provenance (w0, p0, hnorm) over the full Xa."""
     p0 = get_backend(backend).probs(w0, Xa)
     hnorm = lr_head.per_sample_hessian_norm(w0, Xa, P=p0, iters=power_iters, key=key)
     return Provenance(w0, p0, hnorm)
+
+
+def extend_provenance(prov: Provenance, Xa_new, *, power_iters: int = 12,
+                      key=None, at=None,
+                      backend: Optional[Backend] = None) -> Provenance:
+    """Grow Theorem-1 provenance to newly-arrived rows WITHOUT re-anchoring.
+
+    The bounds are per-sample quantities anchored at the round-0 model w0
+    (e1/e2 depend only on (w_k, w0, v), never on N), so a streaming ingest
+    only needs p0 and hnorm evaluated at the SAME w0 for the new rows —
+    the existing rows' provenance is untouched and every bound that held
+    before the append still holds verbatim. O(m) work for m new rows
+    instead of the O(N) rebuild.
+
+    `at=None` concatenates the new rows onto p0/hnorm (a densely growing
+    Xa); `at=[m] int` scatters them into capacity-preallocated provenance
+    caches at those row positions (the repro.stream window store, whose
+    padded tail rows the eligibility mask excludes from Algorithm 1).
+
+    The power method's random init draws per-call over the m new rows
+    (pass `key` to pin it), so an extended hnorm is deterministic given
+    (w0, Xa_new, key) but not bitwise a full `build_provenance` rebuild —
+    Algorithm 1's top-b guarantee holds for ANY valid hnorm, which
+    tests/test_streaming.py asserts against Full INFL."""
+    p_new = get_backend(backend).probs(prov.w0, Xa_new)
+    h_new = lr_head.per_sample_hessian_norm(prov.w0, Xa_new, P=p_new,
+                                            iters=power_iters, key=key)
+    if at is None:
+        return Provenance(prov.w0,
+                          jnp.concatenate([prov.p0, p_new], axis=0),
+                          jnp.concatenate([prov.hnorm, h_new], axis=0))
+    at = jnp.asarray(at, jnp.int32)
+    return Provenance(prov.w0,
+                      prov.p0.at[at].set(p_new),
+                      prov.hnorm.at[at].set(h_new))
 
 
 class Bounds(NamedTuple):

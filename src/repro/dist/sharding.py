@@ -83,6 +83,21 @@ def trajectory_spec(mesh, n_steps: int) -> P:
     return P(lead, None, None)
 
 
+def window_rows_spec(mesh, n_rows: int, ndim: int = 1) -> P:
+    """Sharding rule for the streaming window store's capacity-preallocated
+    row caches ([N_cap], [N_cap, C], [N_cap, d], ...): row-shard the leading
+    sample axis over the mesh's data axes when the CAPACITY splits into
+    equal shards, replicate otherwise (the rulebook's divisibility
+    fallback). The spec is keyed on the fixed capacity — never on the
+    current fill level — so appends scatter into already-placed shards and
+    a growing stream NEVER reshards (the padded tail rows are weight-0
+    exact neutral elements; see repro/stream/window.py)."""
+    _, dp, lead = data_axes_info(mesh)
+    if lead is None or n_rows == 0 or n_rows % dp:
+        return P()
+    return P(lead, *([None] * (ndim - 1)))
+
+
 def kv_cache_spec(mesh, shape: Sequence[int], head_axis: int) -> P:
     """Sharding rule for serving KV-cache leaves: shard the kv-head axis over
     the mesh `model` axis so per-device cache memory — the resource that caps

@@ -61,7 +61,13 @@ parity hook — outputs stay bitwise identical to the plain paged run):
   entries are evicted LIFO on pool pressure, deepest-page-first, so a
   chain never strands a pinned continuation. Sharing is restricted to
   prompts whose kv bucket falls in the same flash block class (both <= 128
-  or both > 128) — the validated bitwise-stability envelope.
+  or both > 128) — the validated bitwise-stability envelope. The prefix
+  index and its pinned pages PERSIST across `run()` waves: the physical
+  pool + free list survive as the engine's warm pool, so a later wave's
+  request whose prompt repeats an earlier wave's aliases those pages
+  without re-prefilling (the repeated-annotation serving pattern — e.g.
+  `repro.stream.ModelAnnotator`'s fixed task prefix). Work counters
+  (`ServeEngine.stats`) still reset per run.
 
 * **Speculative multi-token decode** (``ServeConfig.spec_k`` > 1): each
   step drafts k-1 continuation tokens by prompt-lookup (most recent
@@ -135,7 +141,7 @@ class ServeConfig:
     num_pages: int = 0          # physical pool size; 0 = auto-size
     bucket_min: int = 8         # smallest power-of-two prefill bucket
     trace_logits: bool = False  # record per-request logits on Request.logits
-    share_prefix: bool = True   # alias block-aligned shared prompt prefixes
+    share_prefix: bool = True   # alias shared prefixes; pool persists runs
     spec_k: int = 0             # speculative rows per decode step (<=1 = off)
 
 
@@ -248,6 +254,10 @@ class ServeEngine:
             self._prefix_index: "OrderedDict" = OrderedDict()
             self._slot_rows: list = [None] * self.B
             self.stats: dict = {}
+            # with share_prefix, the (cache, free-list) pool survives run()
+            # waves so index-pinned prefix pages stay resident and a later
+            # wave's identical prompt aliases them (set at run end)
+            self._pool = None
         if cfg.spec_k > 1 and self.cache_mode != "paged":
             raise ValueError("spec_k needs the paged cache discipline")
 
@@ -508,18 +518,26 @@ class ServeEngine:
                     f"{r.max_new} exceeds max_len {self.max_len}")
             if len(r.prompt) == 0:
                 raise ValueError(f"request {r.uid}: empty prompt")
-        cache = self._commit_cache(self.model.init_paged_cache(
-            self.B, self.num_pages, P, self.table_pages))
-        free = list(range(1, self.num_pages))  # page 0 = reserved trash
+        if self.config.share_prefix and self._pool is not None:
+            # warm pool: the previous run() left every slot parked (trash
+            # row, pos 0) and its prefix-index pins still hold their pages —
+            # reuse the physical cache + free list so this wave's prompts
+            # alias pages prefilled by earlier waves. page_refs and
+            # _prefix_index carry over; only the work counters reset.
+            cache, free = self._pool
+            cache = self._sync_refcount(self._commit_cache(cache))
+        else:
+            cache = self._commit_cache(self.model.init_paged_cache(
+                self.B, self.num_pages, P, self.table_pages))
+            free = list(range(1, self.num_pages))  # page 0 = reserved trash
+            # fresh allocator state: host-authoritative page refcounts (page
+            # usable iff 0 == free, writable iff 1) and the prefix index
+            self.page_refs = np.zeros(self.num_pages, np.int32)
+            self._prefix_index = OrderedDict()
         slot_pages: list = [[] for _ in range(self.B)]
         active: list = [None] * self.B
         remaining = [0] * self.B
-        # fresh per-run allocator state: host-authoritative page refcounts
-        # (page usable iff 0 == free, writable iff 1), the prefix index, the
-        # host block-table mirror, and the run's work counters
-        self.page_refs = np.zeros(self.num_pages, np.int32)
-        self._prefix_index = OrderedDict()
-        self._slot_rows = [None] * self.B
+        self._slot_rows = [None] * self.B  # host block-table mirror
         self.stats = {"prompt_tokens": 0, "prefill_tokens": 0,
                       "prefix_hit_tokens": 0, "prefix_hits": 0,
                       "spec_proposed": 0, "spec_accepted": 0,
@@ -583,6 +601,8 @@ class ServeEngine:
             raise RuntimeError(
                 f"{len(pending)} requests unadmittable with "
                 f"{len(free)}/{self.num_pages - 1} pages free")
+        if self.config.share_prefix:
+            self._pool = (cache, free)  # keep pinned prefix pages for waves
         return done
 
     # ------------------------------------------------------ speculative path
@@ -681,6 +701,8 @@ class ServeEngine:
             raise RuntimeError(
                 f"{len(pending)} requests unadmittable with "
                 f"{len(free)}/{self.num_pages - 1} pages free")
+        if self.config.share_prefix:
+            self._pool = (cache, free)  # keep pinned prefix pages for waves
         return done
 
     def _release_slot(self, cache, free: list, slot_pages: list, slot: int):

@@ -1,0 +1,29 @@
+"""repro.stream — online CHEF: label cleaning over arriving data.
+
+Ingest (`StreamSource` / `windowed` / `SyntheticStream`) feeds a
+capacity-preallocated `WindowStore`; `StreamingCleaningSession` cleans
+between window arrivals, absorbing each window by DeltaGrad-L replay
+(warm start) or re-initializing from scratch (the retrain oracle /
+bitwise batch-parity mode); `ModelAnnotator` plugs a `ServeEngine` into
+the annotation phase. See src/repro/stream/README.md."""
+from repro.stream.annotator import ModelAnnotator
+from repro.stream.ingest import (
+    StreamSource,
+    SyntheticStream,
+    Window,
+    generator_source,
+    windowed,
+)
+from repro.stream.session import StreamingCleaningSession
+from repro.stream.window import WindowStore
+
+__all__ = [
+    "ModelAnnotator",
+    "StreamSource",
+    "StreamingCleaningSession",
+    "SyntheticStream",
+    "Window",
+    "WindowStore",
+    "generator_source",
+    "windowed",
+]

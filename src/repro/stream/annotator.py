@@ -1,0 +1,92 @@
+"""`ModelAnnotator` — a `ServeEngine` as the model-in-the-loop annotator.
+
+CHEF's annotation phase is pluggable (`cleaning.phases.Annotator`); this
+implementation replaces the simulated human vote with a serving model:
+each selected row is rendered as a token prompt — a fixed task prefix
+(the same tokens every round, so the paged engine's prefix sharing +
+pool persistence alias its pages across rounds and across `run()` waves)
+followed by the row's features quantized to bin tokens — and decoded for
+ONE step with `trace_logits` on. The cleaned label is the argmax over the
+first `n_classes` vocabulary logits.
+
+Backend identity for free: serving logits are bitwise identical across
+reference | pallas | pallas_sharded (the serving parity contract), so a
+ModelAnnotator round produces IDENTICAL cleaned labels on every backend —
+asserted in tests/test_streaming.py.
+
+`predict()` returns None: a model "vote" costs a serve round-trip either
+way, so there is nothing cheaper than the real thing to speculate on."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cleaning.phases import AnnotationTask, RoundSelection
+from repro.serving.engine import Request, ServeEngine
+
+
+@dataclass
+class ModelAnnotator:
+    """Annotate by single-step greedy decode through a `ServeEngine`.
+
+    The engine must record logits (`ServeConfig.trace_logits=True`) — the
+    label is read from the first decode step's logit row, not from the
+    sampled token id (vocab >> n_classes). `n_bins` / `lo` / `hi` define
+    the per-feature quantization grid; `prefix_len` sizes the shared task
+    prefix that prefix sharing aliases across rounds."""
+
+    engine: ServeEngine
+    n_bins: int = 16
+    prefix_len: int = 8
+    lo: float = -3.0
+    hi: float = 3.0
+    latency_s: float = 0.0
+    _uid: int = field(default=0, repr=False)
+
+    def __post_init__(self):
+        if not self.engine.config.trace_logits:
+            raise ValueError(
+                "ModelAnnotator reads labels from decode logits — construct "
+                "the ServeEngine with ServeConfig(trace_logits=True)")
+        vocab = int(self.engine.model.cfg.vocab_size)
+        if vocab < self.n_bins + 1:
+            raise ValueError(
+                f"vocab {vocab} too small for {self.n_bins} feature bins")
+        # fixed task prefix: identical every round -> page-aliased by the
+        # paged engine's persistent prefix index
+        self._prefix = ((np.arange(self.prefix_len) * 37 + 11) % vocab
+                        ).astype(np.int32)
+
+    def _tokenize(self, X: np.ndarray) -> list:
+        """[m, d] features -> m prompts: task prefix + one bin token per
+        feature (bin b -> token 1 + b, reserving token 0)."""
+        span = self.hi - self.lo
+        bins = np.clip(
+            np.round((X - self.lo) / span * (self.n_bins - 1)),
+            0, self.n_bins - 1).astype(np.int32)
+        return [np.concatenate([self._prefix, 1 + row]) for row in bins]
+
+    def annotate(self, session, selection: RoundSelection, key) -> AnnotationTask:
+        """Serve one single-token request per selected row and vote the
+        argmax over the first `n_classes` logits. Deterministic (greedy
+        decode; `key` unused) and backend-identical (serving logit
+        parity)."""
+        idx = np.asarray(selection.idx)
+        X = np.asarray(session.ds.X[selection.idx], np.float32)
+        prompts = self._tokenize(X)
+        reqs = [Request(uid=self._uid + i, prompt=p, max_new=1)
+                for i, p in enumerate(prompts)]
+        self._uid += len(reqs)
+        done = {r.uid: r for r in self.engine.run(list(reqs))}
+        C = int(session.ds.n_classes)
+        labels = [int(np.argmax(done[r.uid].logits[0][:C])) for r in reqs]
+        return AnnotationTask(jnp.asarray(labels, jnp.int32), self.latency_s)
+
+    def predict(self, session, selection: RoundSelection) -> Optional[jax.Array]:
+        """No pre-annotation guess: the model's vote costs the same serve
+        round-trip as the annotation itself, so speculation buys nothing."""
+        return None

@@ -1,0 +1,157 @@
+"""Streaming ingest: the `StreamSource` protocol + a lazy windowed
+batching pipeline.
+
+The online CHEF workload consumes data as a sequence of `Window`s — small
+batches of weakly-labeled rows that arrive between cleaning rounds. Two
+pieces live here:
+
+  * `windowed(chunks, size)` — a LAZY rechunker in the batchflow
+    pipeline idiom: it consumes an iterable of arbitrarily-sized row
+    chunks and yields exact-`size` windows, pulling from the upstream
+    iterator only when the next window needs rows (tests assert that
+    consuming one window touches no more upstream chunks than it must).
+    Sources stay generators end to end; nothing is materialized beyond
+    one window's buffer.
+
+  * `SyntheticStream` — a weak-label stream over `repro.data.synth`:
+    ONE `make_dataset` draw sliced into windows, so the concatenation of
+    the first k windows is bitwise the rows [0, k*window_size) of the
+    batch dataset. That identity is what makes the streaming-vs-batch
+    parity contract testable exactly (`batch_dataset()` returns the
+    oracle), not just approximately.
+"""
+from __future__ import annotations
+
+from typing import Iterable, Iterator, NamedTuple, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.synth import ChefDataset, make_dataset
+
+
+class Window(NamedTuple):
+    """One arriving chunk of weakly-labeled rows (leading dim = rows)."""
+
+    X: jax.Array  # [m, d] frozen-backbone features
+    y_prob: jax.Array  # [m, C] weak (probabilistic) labels
+    y_true: jax.Array  # [m] hidden ground truth (simulation only)
+    human_labels: jax.Array  # [m, A] simulated annotator labels
+
+    @property
+    def m(self) -> int:
+        """Number of rows in the window."""
+        return int(self.X.shape[0])
+
+
+def _concat(parts: list) -> Window:
+    if len(parts) == 1:
+        return parts[0]
+    return Window(*(jnp.concatenate(fields, axis=0)
+                    for fields in zip(*parts)))
+
+
+def windowed(chunks: Iterable[Window], size: int, *,
+             drop_last: bool = False) -> Iterator[Window]:
+    """Lazily rechunk an iterable of `Window` chunks into exact-`size`
+    windows (the batchflow lazy-batching idiom): rows are buffered across
+    chunk boundaries and the upstream iterator is advanced only when the
+    buffer cannot fill the next window. The final short window is yielded
+    unless `drop_last`."""
+    if size < 1:
+        raise ValueError(f"window size must be >= 1, got {size}")
+    buf: list = []
+    have = 0
+    for chunk in chunks:
+        buf.append(chunk)
+        have += chunk.m
+        while have >= size:
+            merged = _concat(buf)
+            out = Window(*(f[:size] for f in merged))
+            rest = Window(*(f[size:] for f in merged))
+            yield out
+            have -= size
+            buf = [rest] if have else []
+    if have and not drop_last:
+        yield _concat(buf)
+
+
+@runtime_checkable
+class StreamSource(Protocol):
+    """What the streaming session needs from a data stream: an iterator of
+    `Window`s plus the immutable evaluation context (val/test splits, class
+    count, the weak-label weight gamma, and the total row budget that sizes
+    the capacity-preallocated store)."""
+
+    n_classes: int
+    gamma: float
+    total_rows: int
+    n_annotators: int
+    X_val: jax.Array
+    y_val: jax.Array
+    X_test: jax.Array
+    y_test: jax.Array
+
+    def windows(self) -> Iterator[Window]:
+        """Yield arriving windows in order (lazy)."""
+        ...
+
+
+class SyntheticStream:
+    """Synthetic weak-label stream: one `make_dataset` draw served in
+    `window_size`-row windows, so streaming and batch runs see bitwise the
+    same rows. `windows()` yields lazily through the `windowed` pipeline;
+    `batch_dataset(k)` is the from-scratch oracle over the first k windows
+    (default: all)."""
+
+    def __init__(self, key, *, window_size: int = 100, n_windows: int = 4,
+                 n_val: int = 64, n_test: int = 64, feature_dim: int = 24,
+                 gamma: float = 0.8, **make_kw):
+        self.window_size = int(window_size)
+        self.n_windows = int(n_windows)
+        self.total_rows = self.window_size * self.n_windows
+        self._ds = make_dataset(
+            key, n_train=self.total_rows, n_val=n_val, n_test=n_test,
+            feature_dim=feature_dim, gamma=gamma, **make_kw)
+        self.n_classes = self._ds.n_classes
+        self.gamma = float(gamma)
+        self.n_annotators = int(self._ds.human_labels.shape[1])
+        self.X_val, self.y_val = self._ds.X_val, self._ds.y_val
+        self.X_test, self.y_test = self._ds.X_test, self._ds.y_test
+
+    def _rows(self) -> Iterator[Window]:
+        ds = self._ds
+        for k in range(self.n_windows):
+            s = slice(k * self.window_size, (k + 1) * self.window_size)
+            yield Window(ds.X[s], ds.y_prob[s], ds.y_true[s],
+                         ds.human_labels[s])
+
+    def windows(self) -> Iterator[Window]:
+        """Lazy iterator of exact-`window_size` windows."""
+        return windowed(self._rows(), self.window_size)
+
+    def batch_dataset(self, k: "int | None" = None) -> ChefDataset:
+        """The from-scratch oracle: the first k windows (default all) as one
+        batch `ChefDataset` — bitwise the same rows the stream delivers."""
+        k = self.n_windows if k is None else k
+        n = k * self.window_size
+        ds = self._ds
+        return ChefDataset(
+            name=ds.name, X=ds.X[:n], y_prob=ds.y_prob[:n],
+            y_weight=ds.y_weight[:n], cleaned=ds.cleaned[:n],
+            y_true=ds.y_true[:n], human_labels=ds.human_labels[:n],
+            X_val=ds.X_val, y_val=ds.y_val, X_test=ds.X_test,
+            y_test=ds.y_test, n_classes=ds.n_classes,
+        )
+
+
+def generator_source(stream: SyntheticStream, chunk_rows: int) -> Iterator[Window]:
+    """Re-serve a SyntheticStream's rows as `chunk_rows`-sized chunks — a
+    deliberately mismatched upstream granularity for exercising `windowed`'s
+    cross-boundary rechunking (tests + the example)."""
+    ds = stream._ds
+    n = stream.total_rows
+    for lo in range(0, n, chunk_rows):
+        s = slice(lo, min(lo + chunk_rows, n))
+        yield Window(ds.X[s], ds.y_prob[s], ds.y_true[s], ds.human_labels[s])

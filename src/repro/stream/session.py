@@ -1,0 +1,295 @@
+"""`StreamingCleaningSession` — online CHEF over arriving data.
+
+Wraps one `cleaning.CleaningSession` + `RoundScheduler` around a
+`WindowStore` fed by a `StreamSource`: between cleaning rounds the session
+ingests a window and either
+
+  * **warm-starts** (`warm_start=True`, the streaming design): ONE
+    capacity-wide session lives for the whole stream. The head was trained
+    over the capacity (padding rows are weight-0 exact neutrals, so the
+    batch schedule drawn over N_cap is bitwise a schedule over the data
+    that has arrived), and a window append is absorbed as a DeltaGrad-L
+    correction replay (`core.deltagrad.absorb_rows` — the arriving rows
+    transition (padding, weight 0) -> (weak labels, weight gamma), which
+    is exactly a label/weight change event) plus an O(window) Increm-INFL
+    provenance extension (`core.increm.extend_provenance`, anchored at the
+    same w0). No retrain, no resharding, no re-anchoring.
+
+  * **cold-restarts** (`warm_start=False`, the retrain oracle): each
+    ingest re-initializes a from-scratch `CleaningSession` on the dense
+    [0, n) view, carrying the label state, budget ledger, round counter
+    and history forward. A stream whose windows all arrive before the
+    first round is then BITWISE a batch `CleaningSession` on the
+    concatenated data — the streaming parity contract
+    (tests/test_streaming.py asserts labels, weights, and per-round F1
+    exactly on all three backends); interleaved schedules equal the
+    stage-wise retrain oracle by the same construction.
+
+Checkpoint/resume is bit-for-bit: the streaming checkpoint embeds the
+inner session's `state_tree()` (weights, trajectory, provenance, RNG key,
+ledger, history) plus the store's capacity arrays and the ingest cursor,
+and `restore` fast-forwards the source by the ingested-window count —
+a resumed run makes identical selections to the uninterrupted one.
+
+The annotation phase is pluggable: pass `annotator=ModelAnnotator(engine)`
+to score/relabel candidates through a `ServeEngine` (see
+repro/stream/annotator.py) instead of the simulated human vote.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cleaning.phases import (
+    Annotator,
+    SimulatedAnnotator,
+    make_constructor,
+    make_selector,
+)
+from repro.cleaning.scheduler import RoundScheduler, make_termination
+from repro.cleaning.session import CleaningSession
+from repro.configs.chef_lr import ChefConfig
+from repro.core import lr_head
+from repro.core.backend import Backend, get_backend
+from repro.core.deltagrad import absorb_rows
+from repro.core.increm import extend_provenance
+from repro.core.pipeline import ChefResult
+from repro.stream.ingest import StreamSource
+from repro.stream.window import WindowStore
+
+_STREAM_KEYS = ("stream_X", "stream_y_true", "stream_human", "stream_X_val",
+                "stream_y_val", "stream_X_test", "stream_y_test", "stream_n",
+                "stream_windows", "stream_step")
+
+
+class StreamingCleaningSession:
+    """Drive CHEF cleaning over a stream of windows (see module docstring).
+
+    `capacity` defaults to the source's total row budget; `warm_start`
+    selects absorb-by-replay (True) vs the from-scratch retrain oracle
+    (False). Round phases come from the same vocabulary as `run_chef`
+    (`method` / `selector` / `constructor`), with `annotator` overriding
+    the simulated human vote (e.g. a `ModelAnnotator`)."""
+
+    def __init__(self, source: StreamSource, cfg: ChefConfig, *,
+                 backend: "Backend | str | None" = None,
+                 warm_start: bool = True,
+                 capacity: Optional[int] = None,
+                 method: str = "infl", selector: str = "increm",
+                 constructor: str = "deltagrad", pipelined: bool = False,
+                 annotator: Optional[Annotator] = None,
+                 ckpt_dir=None, ckpt_keep: int = 3):
+        if warm_start and constructor != "deltagrad":
+            raise ValueError(
+                "warm_start streaming absorbs windows by trajectory replay "
+                "and therefore requires constructor='deltagrad'")
+        self.source = source
+        self.cfg = cfg
+        self.backend = get_backend(
+            backend if backend is not None else cfg.backend,
+            chunk_rows=cfg.score_chunk)
+        self.warm_start = bool(warm_start)
+        self.opts = dict(method=method, selector=selector,
+                         constructor=constructor, pipelined=pipelined)
+        self._selector = make_selector(method, selector)
+        self._constructor = make_constructor(constructor)
+        self._annotator = annotator if annotator is not None else \
+            SimulatedAnnotator(cfg.strategy, cfg.annotator_latency_s)
+        self._iter = iter(source.windows())
+        self.store = WindowStore.create(source, capacity=capacity,
+                                        backend=self.backend)
+        self.windows_ingested = 0
+        self._inner: Optional[CleaningSession] = None
+        self._sched: Optional[RoundScheduler] = None
+        self._step = 0
+        self.ckpt = None
+        if ckpt_dir is not None:
+            from repro.ckpt import CheckpointManager
+
+            self.ckpt = CheckpointManager(ckpt_dir, keep=ckpt_keep)
+
+    # ------------------------------------------------------------- lifecycle
+    @property
+    def session(self) -> Optional[CleaningSession]:
+        """The inner cleaning session (None before the first ingest)."""
+        return self._inner
+
+    def _needs(self) -> dict:
+        return dict(
+            need_trajectory=(self.opts["constructor"] == "deltagrad"),
+            need_provenance=self.opts["selector"].startswith("increm"),
+        )
+
+    def _make_scheduler(self) -> None:
+        self._sched = RoundScheduler(
+            self._inner, self._selector, self._annotator, self._constructor,
+            termination=make_termination(self.cfg),
+            pipelined=self.opts["pipelined"],
+        )
+
+    def _init_inner(self) -> None:
+        """First window: train the head (over the capacity view when warm —
+        padding rows are exact neutrals — or the dense view when cold) and
+        cache the trajectory/provenance the rounds need."""
+        ds_view = self.store.ds if self.warm_start else self.store.dense()
+        sess = CleaningSession.initialize(ds_view, self.cfg,
+                                          backend=self.backend,
+                                          **self._needs())
+        if self.warm_start:
+            sess.eligible_mask = self.store.valid
+        self._inner = sess
+        self._make_scheduler()
+
+    def _rebuild_cold(self) -> None:
+        """Cold ingest: from-scratch re-init on the grown dense view, label
+        state / ledger / round counter / history carried forward — exactly
+        the stage-wise retrain oracle."""
+        prev = self._inner
+        sess = CleaningSession.initialize(self.store.dense(), self.cfg,
+                                          backend=self.backend,
+                                          **self._needs())
+        sess.round = prev.round
+        sess.ledger = prev.ledger
+        sess.history = list(prev.history)
+        sess.terminated = prev.terminated
+        self._inner = sess
+        self._make_scheduler()
+
+    def _absorb(self, ds_pre, idx) -> None:
+        """Warm ingest: absorb the arriving rows into the capacity session —
+        DeltaGrad-L correction replay for the head + trajectory, O(window)
+        provenance extension at the shared w0 anchor, validity mask grown.
+        The batch schedule, trajectory shape, and sharding are untouched."""
+        s = self._inner
+        ds_post = self.store.ds
+        s.Xa = s.Xa.at[idx].set(lr_head.augment(ds_post.X[idx]))
+        w, traj = absorb_rows(
+            s.traj, s.sched, s.Xa, ds_pre.y_prob, ds_post.y_prob,
+            ds_pre.y_weight, ds_post.y_weight, idx, s.dgc,
+            backend=s.backend)
+        s.ds = ds_post
+        s.w = w
+        s.traj = s.backend.shard_trajectory(traj)
+        if s.prov is not None:
+            k = jax.random.fold_in(jax.random.key(self.cfg.seed + 2),
+                                   self.windows_ingested)
+            s.prov = extend_provenance(
+                s.prov, s.Xa[idx], power_iters=self.cfg.power_iters,
+                key=k, at=idx, backend=s.backend)
+        s.eligible_mask = self.store.valid
+
+    def ingest(self) -> int:
+        """Pull the next window into the store and extend the session to it
+        (initialize / absorb / cold-rebuild per mode). Returns the number
+        of rows ingested — 0 when the stream is exhausted."""
+        win = next(self._iter, None)
+        if win is None:
+            return 0
+        if self._inner is not None:
+            self.store = self.store.write_labels(self._inner.ds)
+        ds_pre = self.store.ds
+        self.store, idx = self.store.append(win)
+        self.windows_ingested += 1
+        if self._inner is None:
+            self._init_inner()
+        elif self.warm_start:
+            self._absorb(ds_pre, idx)
+        else:
+            self._rebuild_cold()
+        self._save()
+        return win.m
+
+    def clean(self, max_rounds: Optional[int] = None) -> list:
+        """Run up to `max_rounds` cleaning rounds (None = to exhaustion) on
+        the data ingested so far; checkpoints after every committed round.
+        Returns the new `RoundRecord`s."""
+        if self._sched is None:
+            raise RuntimeError("no data ingested yet — call ingest() first")
+        records = []
+        while not self._sched.exhausted and (
+                max_rounds is None or len(records) < max_rounds):
+            records.append(self._sched.step())
+            self._save()
+        return records
+
+    def run(self, rounds_per_window: int = 1) -> ChefResult:
+        """The online loop: ingest each arriving window, clean
+        `rounds_per_window` rounds between arrivals, then clean to budget
+        exhaustion / termination once the stream ends."""
+        while self.ingest():
+            self.clean(rounds_per_window)
+        self.clean(None)
+        if self.ckpt is not None:
+            self.ckpt.wait()
+        return self.result()
+
+    def result(self) -> ChefResult:
+        """Final `ChefResult` from the inner scheduler."""
+        if self._sched is None:
+            raise RuntimeError("no data ingested yet — call ingest() first")
+        return self._sched.result()
+
+    # --------------------------------------------------------- checkpointing
+    def state_tree(self) -> dict:
+        """The inner session's fixed-structure tree plus the stream state:
+        capacity arrays (features / truth / annotator labels), the
+        evaluation splits (self-contained restore), the fill level, and the
+        ingest cursor the restore fast-forwards the source by."""
+        t = self._inner.state_tree()
+        ds = self.store.ds
+        t.update({
+            "stream_X": ds.X, "stream_y_true": ds.y_true,
+            "stream_human": ds.human_labels,
+            "stream_X_val": ds.X_val, "stream_y_val": ds.y_val,
+            "stream_X_test": ds.X_test, "stream_y_test": ds.y_test,
+            "stream_n": np.int32(self.store.n),
+            "stream_windows": np.int32(self.windows_ingested),
+            "stream_step": np.int32(self._step),
+        })
+        return t
+
+    def _save(self) -> None:
+        if self.ckpt is None or self._inner is None:
+            return
+        self._step += 1
+        self.ckpt.save(self._step, self.state_tree(), blocking=False)
+
+    @classmethod
+    def restore(cls, ckpt_dir, source: StreamSource, cfg: ChefConfig, *,
+                backend: "Backend | str | None" = None,
+                warm_start: bool = True, capacity: Optional[int] = None,
+                step: Optional[int] = None, **kw) -> "StreamingCleaningSession":
+        """Rebuild a streaming session from its latest committed checkpoint:
+        store arrays + inner session state from the tree, source
+        fast-forwarded past the already-ingested windows. The resumed run
+        is bit-for-bit the uninterrupted one (same round keys, same
+        selections — tests/test_streaming.py)."""
+        from repro.ckpt.checkpoint import restore_checkpoint
+
+        template = CleaningSession.state_template()
+        template.update({k: np.zeros((0,), np.float32) for k in _STREAM_KEYS})
+        state, _ = restore_checkpoint(ckpt_dir, template, step=step)
+
+        obj = cls(source, cfg, backend=backend, warm_start=warm_start,
+                  capacity=capacity, ckpt_dir=ckpt_dir, **kw)
+        obj.store = WindowStore.from_arrays(
+            state["stream_X"], state["stream_y_true"], state["stream_human"],
+            n=int(state["stream_n"]), gamma=float(source.gamma),
+            X_val=state["stream_X_val"], y_val=state["stream_y_val"],
+            X_test=state["stream_X_test"], y_test=state["stream_y_test"],
+            n_classes=int(source.n_classes), backend=obj.backend)
+        obj.windows_ingested = int(state["stream_windows"])
+        obj._step = int(state["stream_step"])
+        for _ in range(obj.windows_ingested):  # fast-forward the source
+            next(obj._iter)
+        ds_view = obj.store.ds if warm_start else obj.store.dense()
+        inner = CleaningSession.from_state(state, ds_view, cfg,
+                                           backend=obj.backend)
+        if warm_start:
+            inner.eligible_mask = obj.store.valid
+        obj._inner = inner
+        obj._make_scheduler()
+        return obj

@@ -1,0 +1,192 @@
+"""The capacity-preallocated growing dataset store.
+
+A streaming run over a capacity of N_cap rows keeps EVERY per-row array at
+its full capacity shape from the start — features, labels, weights,
+provenance, and the [T, C, d+1] trajectory whose batch schedule is drawn
+once over N_cap — and grows by SCATTERING arriving rows into the padded
+tail instead of reallocating. Three invariants make that exact, not
+approximate:
+
+  1. Padded tail rows are EXACT NEUTRAL ELEMENTS (kernels/README parity
+     rule 5): their per-sample weight is 0.0, and the weighted-gradient
+     program multiplies the residual by the weight ((P - Y) * 0 == 0.0
+     bitwise), so an invalid row contributes exactly nothing to any batch
+     gradient regardless of what garbage its X / y_prob rows hold.
+     `tests/test_streaming.py` asserts trained weights are bitwise
+     invariant to tail contents.
+  2. The batch schedule is drawn over the CAPACITY, so arriving rows
+     already occupy batch slots — a window append is a pure label/weight
+     change on its rows, which is exactly the correction event
+     `core.deltagrad.absorb_rows` replays in O(window) work.
+  3. Row caches are committed row-sharded over the mesh data axes via
+     `dist.sharding.window_rows_spec(mesh, capacity)` — keyed on the fixed
+     capacity, never the fill level — so appends scatter into
+     already-placed shards and NEVER reshard.
+
+Selection never sees padding: the store's `valid` mask feeds
+`CleaningSession.eligible_mask`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.backend import Backend, get_backend
+from repro.data.synth import ChefDataset
+from repro.dist.sharding import window_rows_spec
+from repro.stream.ingest import StreamSource, Window
+
+
+@dataclass(frozen=True)
+class WindowStore:
+    """Immutable handle on the capacity store: `ds` holds capacity-shaped
+    arrays (rows >= `n` are neutral padding), `append` returns a new store.
+    Label state (y_prob / y_weight / cleaned) is authoritative only until a
+    cleaning session takes over; `write_labels` syncs it back before the
+    next append."""
+
+    ds: ChefDataset  # capacity-shaped; rows >= n are exact-neutral padding
+    n: int  # valid rows
+    capacity: int
+    gamma: float
+    backend: Backend
+
+    @classmethod
+    def create(cls, source: StreamSource, *, capacity: "int | None" = None,
+               feature_dim: "int | None" = None,
+               backend: "Backend | str | None" = None,
+               name: str = "stream") -> "WindowStore":
+        """Preallocate the store for `source` (capacity defaults to the
+        source's total row budget). Padding rows carry weight 0.0 — the
+        exact neutral element — and all-zero features/labels."""
+        bk = get_backend(backend)
+        cap = int(capacity if capacity is not None else source.total_rows)
+        d = int(feature_dim if feature_dim is not None
+                else source.X_val.shape[1])
+        C, A = int(source.n_classes), int(source.n_annotators)
+        ds = ChefDataset(
+            name=name,
+            X=jnp.zeros((cap, d), jnp.float32),
+            y_prob=jnp.zeros((cap, C), jnp.float32),
+            y_weight=jnp.zeros((cap,), jnp.float32),
+            cleaned=jnp.zeros((cap,), bool),
+            y_true=jnp.zeros((cap,), jnp.int32),
+            human_labels=jnp.zeros((cap, A), jnp.int32),
+            X_val=source.X_val, y_val=source.y_val,
+            X_test=source.X_test, y_test=source.y_test,
+            n_classes=C,
+        )
+        store = cls(ds=ds, n=0, capacity=cap, gamma=float(source.gamma),
+                    backend=bk)
+        return store._commit_rows()
+
+    def _commit_rows(self) -> "WindowStore":
+        """Pin the per-row arrays row-sharded over the mesh data axes
+        (`window_rows_spec`, keyed on the capacity). No-op without a mesh.
+        Scatter updates preserve the committed sharding, so this runs once
+        at creation — appends never reshard."""
+        if self.backend.mesh is None:
+            return self
+        from jax.sharding import NamedSharding
+
+        mesh = self.backend.mesh
+
+        def put(a):
+            spec = window_rows_spec(mesh, self.capacity, a.ndim)
+            return jax.device_put(a, NamedSharding(mesh, spec))
+
+        ds = replace(self.ds, X=put(self.ds.X), y_prob=put(self.ds.y_prob),
+                     y_weight=put(self.ds.y_weight),
+                     cleaned=put(self.ds.cleaned),
+                     y_true=put(self.ds.y_true),
+                     human_labels=put(self.ds.human_labels))
+        return replace(self, ds=ds)
+
+    @property
+    def valid(self) -> jax.Array:
+        """[capacity] bool — True for rows that have arrived. Feeds
+        `CleaningSession.eligible_mask` so selection never proposes a
+        padding row."""
+        return jnp.arange(self.capacity) < self.n
+
+    def append(self, window: Window) -> "tuple[WindowStore, jax.Array]":
+        """Scatter an arriving window into rows [n, n+m): features, weak
+        labels, weight gamma. Returns (new store, the [m] row indices) —
+        the indices are what `absorb_rows` / `extend_provenance` take as
+        the changed set."""
+        m = window.m
+        if self.n + m > self.capacity:
+            raise ValueError(
+                f"window of {m} rows exceeds capacity "
+                f"{self.capacity} (have {self.n})")
+        idx = jnp.arange(self.n, self.n + m, dtype=jnp.int32)
+        ds = replace(
+            self.ds,
+            X=self.ds.X.at[idx].set(window.X),
+            y_prob=self.ds.y_prob.at[idx].set(window.y_prob),
+            y_weight=self.ds.y_weight.at[idx].set(self.gamma),
+            y_true=self.ds.y_true.at[idx].set(window.y_true),
+            human_labels=self.ds.human_labels.at[idx].set(window.human_labels),
+        )
+        return replace(self, ds=ds, n=self.n + m), idx
+
+    def write_labels(self, session_ds: ChefDataset) -> "WindowStore":
+        """Sync label state (y_prob / y_weight / cleaned) back from a
+        cleaning session's dataset — capacity-shaped (warm-start session)
+        or dense over the first n rows (cold-restart session)."""
+        rows = int(session_ds.y_weight.shape[0])
+        if rows == self.capacity:
+            ds = replace(self.ds, y_prob=session_ds.y_prob,
+                         y_weight=session_ds.y_weight,
+                         cleaned=session_ds.cleaned)
+        elif rows == self.n:
+            ds = replace(
+                self.ds,
+                y_prob=self.ds.y_prob.at[:rows].set(session_ds.y_prob),
+                y_weight=self.ds.y_weight.at[:rows].set(session_ds.y_weight),
+                cleaned=self.ds.cleaned.at[:rows].set(session_ds.cleaned),
+            )
+        else:
+            raise ValueError(
+                f"label state has {rows} rows; expected n={self.n} "
+                f"or capacity={self.capacity}")
+        return replace(self, ds=ds)
+
+    def dense(self) -> ChefDataset:
+        """The [0, n) slice as a plain dense dataset — what the cold
+        (warm_start=False) path re-initializes on, and bitwise the batch
+        dataset when the stream's windows concatenate to it."""
+        s = slice(0, self.n)
+        return replace(self.ds, X=self.ds.X[s], y_prob=self.ds.y_prob[s],
+                       y_weight=self.ds.y_weight[s],
+                       cleaned=self.ds.cleaned[s], y_true=self.ds.y_true[s],
+                       human_labels=self.ds.human_labels[s])
+
+    @classmethod
+    def from_arrays(cls, X, y_true, human_labels, *, n: int, gamma: float,
+                    X_val, y_val, X_test, y_test, n_classes: int,
+                    backend: "Backend | str | None" = None,
+                    name: str = "stream") -> "WindowStore":
+        """Rebuild a store from checkpointed capacity arrays (the streaming
+        session's restore path). Label state starts neutral — the restored
+        cleaning session owns it and `write_labels` re-syncs before the
+        next append."""
+        bk = get_backend(backend)
+        cap, C = int(X.shape[0]), int(n_classes)
+        ds = ChefDataset(
+            name=name, X=jnp.asarray(X),
+            y_prob=jnp.zeros((cap, C), jnp.float32),
+            y_weight=jnp.zeros((cap,), jnp.float32),
+            cleaned=jnp.zeros((cap,), bool),
+            y_true=jnp.asarray(y_true),
+            human_labels=jnp.asarray(human_labels),
+            X_val=jnp.asarray(X_val), y_val=jnp.asarray(y_val),
+            X_test=jnp.asarray(X_test), y_test=jnp.asarray(y_test),
+            n_classes=C,
+        )
+        store = cls(ds=ds, n=int(n), capacity=cap, gamma=float(gamma),
+                    backend=bk)
+        return store._commit_rows()

@@ -239,6 +239,58 @@ def test_service_cancel(ds):
         svc.shutdown()
 
 
+def test_service_cancel_then_resubmit_resumes_bitwise(ds, tmp_path):
+    """Cancel mid-run, then resubmit with resume=True on the same ckpt_dir:
+    the cancelled job frees its worker slot, and the resumed job picks up
+    from the committed round and finishes bit-for-bit like an uninterrupted
+    run — cleaned set, labels, weights, and per-round F1."""
+    svc = CleaningService(workers=1)
+    try:
+        # the uninterrupted oracle (3 rounds at budget 30 / round_size 10)
+        j0 = svc.submit(ds, CFG, selector="increm_tight",
+                        constructor="deltagrad")
+        oracle = svc.result(j0, timeout=600)
+
+        j1 = svc.submit(ds, CFG, selector="increm_tight",
+                        constructor="deltagrad", ckpt_dir=tmp_path)
+        while svc.poll(j1).rounds_done < 1:  # let >= 1 round commit
+            if svc.poll(j1).state in ("done", "failed"):
+                break
+            time.sleep(0.02)
+        assert svc.cancel(j1) is True
+        with pytest.raises(RuntimeError):
+            svc.result(j1, timeout=600)
+        assert svc.poll(j1).state == "cancelled"
+        done_rounds = svc.poll(j1).rounds_done
+        assert done_rounds >= 1
+
+        # the freed slot takes the resubmission; restore skips the committed
+        # rounds instead of redoing them
+        j2 = svc.submit(ds, CFG, selector="increm_tight",
+                        constructor="deltagrad", ckpt_dir=tmp_path,
+                        resume=True)
+        res = svc.result(j2, timeout=600)
+        assert svc.poll(j2).rounds_done == 3
+        np.testing.assert_array_equal(np.asarray(res.dataset.cleaned),
+                                      np.asarray(oracle.dataset.cleaned))
+        np.testing.assert_array_equal(np.asarray(res.dataset.y_prob),
+                                      np.asarray(oracle.dataset.y_prob))
+        np.testing.assert_array_equal(np.asarray(res.w), np.asarray(oracle.w))
+        assert [r.f1_val for r in res.history] \
+            == [r.f1_val for r in oracle.history]
+    finally:
+        svc.shutdown()
+
+
+def test_service_resume_requires_ckpt_dir(ds):
+    svc = CleaningService(workers=1)
+    try:
+        with pytest.raises(ValueError):
+            svc.submit(ds, CFG, resume=True)
+    finally:
+        svc.shutdown()
+
+
 def test_service_unknown_job():
     svc = CleaningService(workers=1)
     try:

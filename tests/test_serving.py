@@ -585,6 +585,55 @@ def test_serve_engine_prefix_sharing_matches_unshared(backend, rng):
                 a, b, err_msg=f"{backend} uid={u} token {k}")
 
 
+def test_serve_engine_prefix_pool_persists_across_runs(rng):
+    """The prefix index and its pinned pages survive `run()` waves: a second
+    wave re-serving an identical prompt on the SAME engine aliases the pages
+    the first wave prefilled (prefix hits with no earlier sharer in the
+    wave), prefills only the un-matchable tail, and still emits tokens and
+    logits bitwise identical to a cold engine's run of the same request."""
+    cfg = reduced(get_config("olmo-1b"))
+    model = Model(cfg)
+    params = model.init(rng)
+    base = dict(batch_size=2, max_len=48, cache="paged", page_size=8,
+                trace_logits=True, share_prefix=True)
+
+    def req():
+        return _shared_prefix_requests(cfg, tails=(24,), budgets=(5,))
+
+    eng = ServeEngine(model, params, config=ServeConfig(**base))
+    first = eng.run(req())[0]
+    assert eng.stats["prefix_hits"] == 0  # nothing indexed before wave 1
+    assert eng._pool is not None  # warm pool retained at run end
+    second = eng.run(req())[0]
+    # the identical 40-token prompt aliases its four matchable full pages
+    # ((L-1)//P caps the walk so a 1-page tail still prefills), so wave 2
+    # prefills strictly less than wave 1's full bucket
+    assert eng.stats["prefix_hits"] == 1
+    assert eng.stats["prefix_hit_tokens"] == 32
+    assert eng.stats["prefill_tokens"] == 8
+    cold = ServeEngine(model, params, config=ServeConfig(**base)).run(req())[0]
+    assert second.out == first.out == cold.out
+    for a, b in zip(second.logits, cold.logits):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_serve_engine_pool_not_persisted_without_sharing(rng):
+    """share_prefix=False keeps the seed semantics: every run rebuilds the
+    pool from scratch and no state leaks between waves."""
+    cfg = reduced(get_config("olmo-1b"))
+    model = Model(cfg)
+    params = model.init(rng)
+    eng = ServeEngine(model, params, config=ServeConfig(
+        batch_size=2, max_len=48, cache="paged", page_size=8,
+        share_prefix=False))
+    reqs = _shared_prefix_requests(cfg, tails=(24,), budgets=(5,))
+    eng.run(reqs)
+    assert eng._pool is None
+    w1 = eng.stats["prefill_tokens"]
+    eng.run(_shared_prefix_requests(cfg, tails=(24,), budgets=(5,)))
+    assert eng.stats["prefill_tokens"] == w1  # wave 2 redid the full prefill
+
+
 @pytest.mark.parametrize("backend", list(BACKENDS))
 def test_serve_engine_spec_decode_matches_plain(backend, rng):
     """Speculative multi-token decode (spec_k rows verified in one paged

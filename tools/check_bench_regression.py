@@ -1,21 +1,24 @@
-"""Diff a fresh BENCH_serving.json against the committed baseline and warn
-on decode-throughput regressions.
+"""Diff a fresh bench JSON against its committed baseline and warn on
+throughput regressions.
 
   python tools/check_bench_regression.py BENCH_serving.json \
       benchmarks/BENCH_serving_baseline.json --warn-pct 20
 
-Compares every ``*_tok_per_s`` metric per backend — in the top-level
-``backends`` section (prefill, ring decode, paged decode) AND in the
-``prefix_share`` scenario, where the deterministic ``hit_rate`` and
-``work_ratio`` metrics (engine-counted, immune to runner noise) are
-checked with the same threshold. A metric more than
-``--warn-pct`` percent BELOW the baseline prints a GitHub Actions
-``::warning::`` annotation (visible on the job summary) — it does NOT fail
-the job by default, because CI runners are shared machines and CPU
-interpret-mode wall times are noisy; ``--strict`` turns warnings into a
-nonzero exit for hardware-pinned runners. Missing backends or metrics on
-either side are reported but never fatal (the baseline may predate a new
-backend column)."""
+Works on any bench record shaped like the benchmarks/ artifacts: a
+top-level ``backends`` section plus any number of named scenario sections
+(``prefix_share``, ``spec_decode``, ...) that themselves hold a
+``backends`` dict — the walker discovers sections from the CURRENT record,
+so new scenarios need no code change here. Compared metrics are every
+``*_tok_per_s`` / ``*_rows_per_s`` rate plus the deterministic
+engine-counted ratios in ``_EXTRA_METRICS`` (immune to runner noise). A
+metric more than ``--warn-pct`` percent BELOW the baseline prints a GitHub
+Actions ``::warning::`` annotation (visible on the job summary) — it does
+NOT fail the job by default, because CI runners are shared machines and
+CPU interpret-mode wall times are noisy; ``--strict`` turns warnings into
+a nonzero exit for hardware-pinned runners. A baseline that predates a
+section or backend gets a ``::warning::`` note and a graceful skip, never
+a KeyError — the first run after adding a scenario (e.g. streaming's
+``BENCH_streaming.json``) must not break CI."""
 from __future__ import annotations
 
 import argparse
@@ -23,9 +26,28 @@ import json
 import sys
 
 
-# higher-is-better metrics beyond the *_tok_per_s suffix rule: the
-# prefix-share scenario's deterministic work counters
-_EXTRA_METRICS = ("hit_rate", "work_ratio")
+# higher-is-better metrics beyond the rate-suffix rule: deterministic
+# engine/session-counted ratios (prefix-share work counters, the streaming
+# warm-vs-retrain constructor speedup)
+_EXTRA_METRICS = ("hit_rate", "work_ratio", "warm_constructor_speedup")
+
+
+def _is_rate(metric: str) -> bool:
+    return metric.endswith(("_tok_per_s", "_rows_per_s")) \
+        or metric in _EXTRA_METRICS
+
+
+def _sections(rec: dict) -> dict:
+    """Every backends-keyed section of a bench record: the top level plus
+    any scenario value that itself carries a ``backends`` dict."""
+    out = {}
+    if isinstance(rec.get("backends"), dict):
+        out[""] = rec["backends"]
+    for key, val in rec.items():
+        if key != "backends" and isinstance(val, dict) \
+                and isinstance(val.get("backends"), dict):
+            out[f"{key}/"] = val["backends"]
+    return out
 
 
 def _compare_section(label, cur_b, base_b, warn_pct, regressions):
@@ -37,8 +59,7 @@ def _compare_section(label, cur_b, base_b, warn_pct, regressions):
                   "current run")
             continue
         for metric, base_val in base_rec.items():
-            if not (metric.endswith("_tok_per_s")
-                    or metric in _EXTRA_METRICS):
+            if not _is_rate(metric):
                 continue
             cur_val = cur_rec.get(metric)
             if not isinstance(cur_val, (int, float)) or not base_val:
@@ -52,24 +73,29 @@ def _compare_section(label, cur_b, base_b, warn_pct, regressions):
 
 def compare(current: dict, baseline: dict, warn_pct: float):
     """Yield (backend, metric, cur, base, pct_change) for every regression
-    beyond warn_pct; pct_change is negative for slower-than-baseline."""
+    beyond warn_pct; pct_change is negative for slower-than-baseline.
+    Sections present in the current record but absent from the baseline are
+    announced with a ``::warning::`` and skipped — never fatal."""
     regressions = []
-    _compare_section("", current.get("backends", {}),
-                     baseline.get("backends", {}), warn_pct, regressions)
-    _compare_section("prefix_share/",
-                     current.get("prefix_share", {}).get("backends", {}),
-                     baseline.get("prefix_share", {}).get("backends", {}),
-                     warn_pct, regressions)
+    base_sections = _sections(baseline)
+    for label, cur_b in _sections(current).items():
+        base_b = base_sections.get(label)
+        if base_b is None:
+            print(f"::warning title=bench baseline missing section::"
+                  f"section {label or '(top-level)'} not in baseline — "
+                  "skipped (commit a refreshed baseline to cover it)")
+            continue
+        _compare_section(label, cur_b, base_b, warn_pct, regressions)
     return regressions
 
 
 def main(argv=None) -> int:
     """CLI entry; returns the process exit code."""
     ap = argparse.ArgumentParser()
-    ap.add_argument("current", help="fresh BENCH_serving.json")
+    ap.add_argument("current", help="fresh bench json (BENCH_*.json)")
     ap.add_argument("baseline", help="committed baseline json")
     ap.add_argument("--warn-pct", type=float, default=20.0,
-                    help="warn when a tok/s metric drops more than this %%")
+                    help="warn when a rate metric drops more than this %%")
     ap.add_argument("--strict", action="store_true",
                     help="exit nonzero on regressions (hardware-pinned CI)")
     args = ap.parse_args(argv)
@@ -81,11 +107,11 @@ def main(argv=None) -> int:
 
     regressions = compare(current, baseline, args.warn_pct)
     for name, metric, cur, base, pct in regressions:
-        print(f"::warning title=serving bench regression::"
+        print(f"::warning title=bench regression::"
               f"{name}/{metric}: {cur:.2f} vs baseline {base:.2f} "
               f"({pct:+.1f}%)")
     if not regressions:
-        print(f"serving metrics within {args.warn_pct:.0f}% of baseline "
+        print(f"bench metrics within {args.warn_pct:.0f}% of baseline "
               f"for all backends")
     return 1 if (regressions and args.strict) else 0
 
