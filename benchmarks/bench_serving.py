@@ -18,6 +18,15 @@ sharing, prefill tokens scale ~O(B * tail + S) instead of O(B * prompt)
 are asserted identical either way — the sharing parity contract observed
 from the benchmark harness too.
 
+A `long_context` scenario prefills one long prompt per backend through the
+full flash path AND the chunked (memory-efficient) prefill, asserts the two
+bitwise identical, and records the analytic peak score-block memory model:
+full prefill materializes O(L * L) f32 score elements per (batch, head)
+across one kernel invocation's KV extent, chunked prefill O(L * chunk')
+(chunk' = the chunk rounded up to a kv-block multiple) — the O(L^2) ->
+O(L * chunk) headline of the chunked path, reported as
+`prefill_peak_block_bytes` next to the measured `prefill_tok_per_s`.
+
 On CPU the non-reference wall times measure interpret-mode Pallas (the
 Python-level kernel emulation) — the honest numbers are the reference column
 and the parity/sharding assertions; TPU runs produce real kernel timings.
@@ -34,6 +43,8 @@ Env knobs:
   REPRO_BENCH_SERVING_PROMPT   prompt length (default 32)
   REPRO_BENCH_SERVING_DECODE   decode steps timed/verified (default 8)
   REPRO_BENCH_SERVING_PAGE     paged cache page size (default 8)
+  REPRO_BENCH_SERVING_LONG     long_context prompt length (default 256)
+  REPRO_BENCH_SERVING_CHUNK    long_context chunked-prefill span (default 64)
   REPRO_BENCH_SERVING_OUT      output JSON path (BENCH_serving.json)
 """
 from __future__ import annotations
@@ -82,6 +93,64 @@ def _assert_kv_sharded(cache, mesh) -> str:
     walk(cache)
     assert specs, "no KV cache leaves found"
     return specs[0]
+
+
+def _peak_block_bytes(batch: int, n_heads: int, length: int,
+                      chunk: int) -> int:
+    """Analytic peak f32 score-block bytes of one prefill attention op:
+    batch * heads * L * (KV extent of one kernel invocation) * 4. Full
+    flash walks the whole L-wide KV in one invocation (extent L — the
+    O(L^2) term); chunked prefill caps the extent at the chunk rounded up
+    to the kernel's kv-block multiple (`chunk_blocks` — the SAME rounding
+    the kernel applies, so the model and the code agree on the effective
+    chunk)."""
+    from repro.kernels import ops
+    from repro.kernels.chunked_prefill import chunk_blocks
+
+    _, bk = ops._attn_blocks(length, length)
+    extent = length
+    if chunk and chunk < length:
+        extent = min(length, chunk_blocks(chunk, bk))
+    return batch * n_heads * length * extent * 4
+
+
+def _long_context_case(model, params, bk, name, ref_long, length, chunk):
+    """Long-context prefill scenario: one `length`-token prompt prefilled
+    through the full flash path and the chunked path (`prefill_chunk` =
+    `chunk`), asserted BITWISE identical (logits and every cache leaf),
+    timed, and sized by the `_peak_block_bytes` memory model. `ref_long`
+    accumulates the reference backend's logits for the cross-backend
+    parity assert."""
+    cfg = model.cfg
+    toks = jax.random.randint(jax.random.key(2), (1, length), 0,
+                              cfg.vocab_size).astype(jnp.int32)
+    full = jax.jit(lambda p, t, bk=bk: model.prefill(
+        p, {"tokens": t}, cache_len=length, backend=bk))
+    chunked = jax.jit(lambda p, t, bk=bk: model.prefill(
+        p, {"tokens": t}, cache_len=length, backend=bk,
+        prefill_chunk=chunk))
+    lf, cf = full(params, toks)
+    lc, cc = chunked(params, toks)
+    # chunked == full, bitwise, on this backend: logits AND committed K/V
+    assert np.array_equal(np.asarray(lf), np.asarray(lc)), name
+    for a, b in zip(jax.tree.leaves(cf), jax.tree.leaves(cc)):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), name
+    if name == "reference":
+        ref_long["logits"] = np.asarray(lc)
+    elif ref_long:
+        assert np.array_equal(np.asarray(lc), ref_long["logits"]), name
+    t_full = time_fn(lambda: full(params, toks)[0], iters=2, warmup=0)
+    t_chunk = time_fn(lambda: chunked(params, toks)[0], iters=2, warmup=0)
+    mem_full = _peak_block_bytes(1, cfg.n_heads, length, 0)
+    mem_chunk = _peak_block_bytes(1, cfg.n_heads, length, chunk)
+    return {
+        "t_prefill_full_s": t_full,
+        "t_prefill_s": t_chunk,
+        "prefill_tok_per_s": length / t_chunk,
+        "prefill_peak_block_bytes": mem_chunk,
+        "prefill_peak_block_bytes_full": mem_full,
+        "mem_ratio": mem_full / max(mem_chunk, 1),
+    }
 
 
 def _prefix_share_case(model, params, bk, batch, prompt, page, steps):
@@ -154,6 +223,8 @@ def run(backends=None, out_path=None) -> dict:
     prompt = int(os.environ.get("REPRO_BENCH_SERVING_PROMPT", "32"))
     steps = int(os.environ.get("REPRO_BENCH_SERVING_DECODE", "8"))
     page = int(os.environ.get("REPRO_BENCH_SERVING_PAGE", "8"))
+    long_len = int(os.environ.get("REPRO_BENCH_SERVING_LONG", "256"))
+    long_chunk = int(os.environ.get("REPRO_BENCH_SERVING_CHUNK", "64"))
     if backends is None:
         backends = list(BACKENDS)
     # reference first: it is the parity oracle the other backends assert
@@ -181,8 +252,14 @@ def run(backends=None, out_path=None) -> dict:
             "shared_prefix": (prompt // 2) // page * page,
             "backends": {},
         },
+        "long_context": {
+            "prompt_len": long_len,
+            "prefill_chunk": long_chunk,
+            "backends": {},
+        },
     }
     ref = {}
+    ref_long = {}
     for name in backends:
         bk = get_backend(name)
         prefill = jax.jit(lambda p, t, bk=bk: model.prefill(
@@ -245,9 +322,14 @@ def run(backends=None, out_path=None) -> dict:
         share = _prefix_share_case(model, params, bk, batch, prompt, page,
                                    steps)
         record["prefix_share"]["backends"][name] = share
+        long_ctx = _long_context_case(model, params, bk, name, ref_long,
+                                      long_len, long_chunk)
+        record["long_context"]["backends"][name] = long_ctx
         record["backends"][name] = {
             "t_prefill_s": t_prefill,
             "prefill_tok_per_s": batch * prompt / t_prefill,
+            "prefill_peak_block_bytes": _peak_block_bytes(
+                batch, cfg.n_heads, prompt, 0),
             "t_decode_step_s": t_decode,
             "decode_tok_per_s": batch / t_decode,
             "t_paged_decode_step_s": t_paged,
@@ -266,6 +348,11 @@ def run(backends=None, out_path=None) -> dict:
              f"hit_rate={share['hit_rate']:.2f};"
              f"work_ratio={share['work_ratio']:.2f};"
              f"serve_tok_s={share['serve_tok_per_s']:.1f}")
+        emit(f"serving_long_context_{name}", long_ctx["t_prefill_s"],
+             f"L={long_len};chunk={long_chunk};"
+             f"peak_block_bytes={long_ctx['prefill_peak_block_bytes']};"
+             f"full={long_ctx['prefill_peak_block_bytes_full']};"
+             f"mem_ratio={long_ctx['mem_ratio']:.1f}")
 
     out = out_path or os.environ.get("REPRO_BENCH_SERVING_OUT",
                                      "BENCH_serving.json")

@@ -15,6 +15,12 @@ spreads over. The same is true of `--share_prefix` (paged prefix sharing —
 the prompts here share a 16-token prefix, so the printed hit rate is
 nonzero) and `--spec_k` (speculative multi-token decode): both are pure
 performance knobs, outputs stay bitwise identical.
+
+`--prefill_chunk C` routes long prompt buckets through the chunked
+(memory-efficient) prefill — O(S*C) peak score memory instead of O(S^2) —
+and `--attn window:<W>` overrides the arch with a W-token sliding window
+(banded local-attention kernel). Both are also pure performance knobs:
+the serving parity contract covers them (kernels/README.md).
 """
 import argparse
 
@@ -33,16 +39,24 @@ def main():
                     help="alias block-aligned shared prompt prefixes (paged)")
     ap.add_argument("--spec_k", type=int, default=0,
                     help="speculative decode rows per step (<=1 = off)")
+    ap.add_argument("--prefill_chunk", type=int, default=0,
+                    help="chunked-prefill KV span in tokens (0 = full flash)")
+    ap.add_argument("--attn", default="",
+                    help="attention override: 'window:<W>' | 'full' | "
+                         "'' (keep the arch pattern)")
     args = ap.parse_args()
     out = serve_mod.main([
         "--arch", args.arch, "--requests", str(args.requests),
         "--backend", args.backend,
         "--batch", "4", "--prompt_len", "24", "--max_new", "8",
         "--prefix_len", "16", "--spec_k", str(args.spec_k),
+        "--prefill_chunk", str(args.prefill_chunk),
+        "--attn", args.attn,
     ] + ([] if args.share_prefix else ["--no-share_prefix"]))
     print(f"served {out['requests']} requests / {out['tokens']} tokens "
           f"in {out['wall_s']:.2f}s on backend={out['backend']} "
-          f"(prefix_hit_rate={out['prefix_hit_rate']:.2f})")
+          f"(prefix_hit_rate={out['prefix_hit_rate']:.2f}, "
+          f"prefill_chunk={out['prefill_chunk']}, window={out['window']})")
 
 
 if __name__ == "__main__":

@@ -368,6 +368,69 @@ class Backend:
             pos.astype(jnp.int32))
         return ops.paged_decode_finish(m, l, acc, q)
 
+    def chunked_prefill(self, q, k, v, qpos, kpos, spec,
+                        chunk: int) -> jax.Array:
+        """Chunked (memory-efficient) prefill attention: same signature and
+        model layout as `flash_attention` plus the KV chunk size, and the
+        OUTPUT IS BITWISE `flash_attention`'s for any chunk — only the peak
+        score-block memory changes, O(Sq * chunk) instead of O(Sq * Skv)
+        (kernels/chunked_prefill.py documents why the chunked fold is
+        exact). Long prefill buckets route here behind
+        `ServeConfig.prefill_chunk`.
+
+        On pallas_sharded the shard_map covers ONLY the per-chunk fold's
+        final split-K partials (head-wise, per-head independent); the
+        shared `combine_pages` finish runs in the caller's context like
+        every other backend form (parity rule 4)."""
+        from repro.kernels import ops
+
+        if self.name == "reference":
+            return ops.chunked_prefill_ref(q, k, v, qpos, kpos, spec, chunk)
+        if self.name == "pallas" or not self._model_axis_divides(k.shape[2]):
+            return ops.chunked_prefill(q, k, v, qpos, kpos, spec, chunk)
+        m, l, acc = _cached_sharded(self, "chunked_prefill",
+                                    (spec, int(chunk)))(
+            q, k, v, qpos.astype(jnp.int32), kpos.astype(jnp.int32))
+        return ops.chunked_prefill_finish(m, l, acc, q)
+
+    def local_attention(self, q, k, v, qpos, kpos, spec) -> jax.Array:
+        """Banded (sliding-window) prefill attention: `flash_attention`'s
+        program with fully-masked band blocks skipped (parity rule 5 —
+        skipping an exactly-neutral block is a bitwise no-op), so sliding
+        -window archs prefill in O(Sq * window) live work with output
+        BITWISE `flash_attention`'s for the same spec. Same three forms;
+        the head-wise sharded split is identical to flash's."""
+        from repro.kernels import ops
+
+        if self.name == "reference":
+            return ops.local_attention_ref(q, k, v, qpos, kpos, spec)
+        if self.name == "pallas" or not self._model_axis_divides(k.shape[2]):
+            return ops.local_attention(q, k, v, qpos, kpos, spec)
+        return _cached_sharded(self, "local_attention", spec)(
+            q, k, v, qpos.astype(jnp.int32), kpos.astype(jnp.int32))
+
+    def block_sparse_attention(self, q, k, v, qpos, kpos, block_mask,
+                               spec) -> jax.Array:
+        """Block-sparse prefill attention: KV blocks with a 0 in
+        `block_mask` ([nq, nk] at the `ops.attn_block_mask_shape`
+        granularity) are skipped entirely; causal/window still mask
+        elements inside enabled blocks. An all-ones mask is bitwise
+        `flash_attention`; any mask is bitwise-identical across the three
+        backends (the reference mirrors the skip with `lax.cond`). On
+        pallas_sharded the mask is replicated host metadata — the head
+        split never touches it."""
+        from repro.kernels import ops
+
+        if self.name == "reference":
+            return ops.block_sparse_attention_ref(q, k, v, qpos, kpos,
+                                                  block_mask, spec)
+        if self.name == "pallas" or not self._model_axis_divides(k.shape[2]):
+            return ops.block_sparse_attention(q, k, v, qpos, kpos,
+                                              block_mask, spec)
+        return _cached_sharded(self, "block_sparse_attention", spec)(
+            q, k, v, qpos.astype(jnp.int32), kpos.astype(jnp.int32),
+            block_mask.astype(jnp.int32))
+
     # ------------------------------------------------ KV cache placement
     def kv_cache_sharding(self, shape, head_axis: int):
         """NamedSharding for one serving KV-cache leaf (kv heads over the
@@ -593,14 +656,20 @@ class Backend:
         row1 = Pspec(lead)
 
         if op in ("flash_attention", "decode_attention",
-                  "paged_decode_attention"):
+                  "paged_decode_attention", "chunked_prefill",
+                  "local_attention", "block_sparse_attention"):
             # serving ops shard the HEAD axis over `model` (not the data
             # axes): each device runs the unsharded kernel on its own
             # Hkv/m kv heads — exact, attention is per-head independent.
             # heads4 covers q [B,1,Hq,D] (axis 2 = Hq) AND the paged pools
             # [N_pages, P, Hkv, D] (axis 2 = Hkv): consecutive Hq blocks are
             # exactly the G query heads of consecutive kv-head blocks.
-            heads4 = Pspec(None, None, "model", None)
+            # (specs come from the repro.dist.sharding rulebook)
+            from repro.dist.sharding import (attn_activation_spec,
+                                             attn_partial_specs)
+
+            heads4 = attn_activation_spec()
+            part4, part5 = attn_partial_specs()
             if op == "flash_attention":
                 def local(qq, kk, vv, qp, kp):
                     return ops.flash_attention(qq, kk, vv, qp, kp, static)
@@ -608,6 +677,39 @@ class Backend:
                 return shard_map_compat(
                     local, self.mesh,
                     (heads4, heads4, heads4, Pspec(None), Pspec(None)), heads4)
+            if op == "local_attention":
+                def local(qq, kk, vv, qp, kp):
+                    return ops.local_attention(qq, kk, vv, qp, kp, static)
+
+                return shard_map_compat(
+                    local, self.mesh,
+                    (heads4, heads4, heads4, Pspec(None), Pspec(None)), heads4)
+            if op == "block_sparse_attention":
+                # the [nq, nk] block mask is replicated host metadata —
+                # every head shard skips the identical block set
+                def local(qq, kk, vv, qp, kp, bm):
+                    return ops.block_sparse_attention(qq, kk, vv, qp, kp,
+                                                      bm, static)
+
+                return shard_map_compat(
+                    local, self.mesh,
+                    (heads4, heads4, heads4, Pspec(None), Pspec(None),
+                     Pspec(None, None)), heads4)
+            if op == "chunked_prefill":
+                # partials only — the combine_pages finish happens outside
+                # the shard_map in the caller's context
+                # (Backend.chunked_prefill); partial leaves carry heads on
+                # axis 1: m, l [B, Hq, 1, Sq], acc [B, Hq, 1, Sq, D]
+                spec, chunk = static
+
+                def local(qq, kk, vv, qp, kp):
+                    return ops.chunked_prefill_partials(qq, kk, vv, qp, kp,
+                                                        spec, chunk)
+
+                return shard_map_compat(
+                    local, self.mesh,
+                    (heads4, heads4, heads4, Pspec(None), Pspec(None)),
+                    (part4, part4, part5))
             if op == "paged_decode_attention":
                 # partials only — the merge happens outside the shard_map in
                 # the caller's context (Backend.paged_decode_attention);
@@ -617,8 +719,6 @@ class Backend:
                     return ops.paged_decode_partials(qq, kk, vv, pt, ps,
                                                      static)
 
-                part4 = Pspec(None, "model", None, None)
-                part5 = Pspec(None, "model", None, None, None)
                 return shard_map_compat(
                     local, self.mesh,
                     (heads4, heads4, heads4, Pspec(None, None), Pspec(None)),

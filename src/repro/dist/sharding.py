@@ -131,6 +131,26 @@ def page_pool_spec(mesh, shape: Sequence[int], head_axis: int) -> P:
     return kv_cache_spec(mesh, shape, head_axis)
 
 
+def attn_activation_spec() -> P:
+    """shard_map spec for serving attention activations in MODEL layout
+    ([B, S, H, D], heads on axis 2): heads split over the mesh `model` axis.
+    Consecutive Hq blocks are exactly the G query heads of consecutive
+    kv-head blocks, so one spec covers q, k, v AND the output — the
+    head-wise serving split used by every `Backend._build_sharded` serving
+    branch (flash, local, block-sparse, chunked-prefill)."""
+    return P(None, None, "model", None)
+
+
+def attn_partial_specs() -> tuple:
+    """shard_map specs for split-K attention partials in KERNEL layout
+    (heads on axis 1): (m/l spec, acc spec). Covers both the paged decode
+    partials (m, l [B, Hkv, n_pages, G]; acc [..., D]) and the chunked
+    prefill partials (m, l [B, Hq, 1, Sq]; acc [..., D]) — the partials are
+    the ONLY thing the sharded forms shard_map; the shared `combine_pages`
+    merge runs in the caller's context (kernel-parity rule 4)."""
+    return P(None, "model", None, None), P(None, "model", None, None, None)
+
+
 def refcount_spec(mesh) -> P:
     """Sharding rule for the paged cache's `refcount` leaf ([num_pages]
     int32): always replicated. Refcounts are tiny host-authoritative

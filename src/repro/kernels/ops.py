@@ -12,6 +12,11 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.chunked_prefill import (
+    chunk_blocks,
+    chunked_prefill_partials_pallas,
+    chunked_prefill_partials_reference,
+)
 from repro.kernels.decode_attention import (
     decode_attention_pallas,
     decode_attention_reference,
@@ -19,6 +24,12 @@ from repro.kernels.decode_attention import (
 from repro.kernels.flash_attention import (
     flash_attention_pallas,
     flash_attention_reference,
+)
+from repro.kernels.local_attention import (
+    block_sparse_attention_pallas,
+    block_sparse_attention_reference,
+    local_attention_pallas,
+    local_attention_reference,
 )
 from repro.kernels.infl_scores import infl_scores_pallas
 from repro.kernels.paged_attention import (
@@ -233,6 +244,105 @@ def flash_attention_ref(q, k, v, qpos, kpos, spec):
     the pure-jnp blocked mirror (identical block sizes, same per-block
     floating-point program — bit-identical to the kernel)."""
     return _flash_adapt(flash_attention_reference, q, k, v, qpos, kpos, spec)
+
+
+def local_attention(q, k, v, qpos, kpos, spec):
+    """Model-layer adapter around the banded (sliding-window) Pallas kernel:
+    the flash program with fully-masked band blocks skipped. Bitwise
+    `flash_attention` for the same spec (parity rule 5)."""
+    return _flash_adapt(local_attention_pallas, q, k, v, qpos, kpos, spec,
+                        interpret=_interpret())
+
+
+def local_attention_ref(q, k, v, qpos, kpos, spec):
+    """Reference-backend form of `local_attention`: the same adapter around
+    the `lax.cond`-skipping jnp mirror (identical skipped-block set —
+    bit-identical to the kernel and to `flash_attention_ref`)."""
+    return _flash_adapt(local_attention_reference, q, k, v, qpos, kpos, spec)
+
+
+def attn_block_mask_shape(Sq: int, Skv: int) -> tuple:
+    """(nq, nk) shape of the block mask `block_sparse_attention` expects for
+    a [*, Sq, *, D] x [*, Skv, *, D] attention — derived from the SAME
+    `_attn_blocks` decomposition the adapters pick, so callers build masks
+    at exactly the kernel's block granularity."""
+    bq, bk = _attn_blocks(Sq, Skv)
+    return Sq // bq, Skv // bk
+
+
+def block_sparse_attention(q, k, v, qpos, kpos, block_mask, spec):
+    """Model-layer adapter around the block-sparse Pallas kernel: KV blocks
+    with a 0 in `block_mask` ([nq, nk], see `attn_block_mask_shape`) are
+    skipped; causal/window still mask elements inside enabled blocks. An
+    all-ones mask is bitwise `flash_attention`."""
+    return _flash_adapt(block_sparse_attention_pallas, q, k, v, qpos, kpos,
+                        spec, block_mask=block_mask, interpret=_interpret())
+
+
+def block_sparse_attention_ref(q, k, v, qpos, kpos, block_mask, spec):
+    """Reference-backend form of `block_sparse_attention` (same skipped
+    blocks via `lax.cond` — bit-identical to the kernel)."""
+    return _flash_adapt(block_sparse_attention_reference, q, k, v, qpos,
+                        kpos, spec, block_mask=block_mask)
+
+
+def _chunked_adapt(inner, q, k, v, qpos, kpos, spec, chunk, **extra):
+    """Model-layout adapter for the chunked-prefill partial forms: same
+    transpose + `_attn_blocks` choice as `_flash_adapt`, but the output is
+    the (m, l, acc) split-K partial triple, left in kernel layout for
+    `chunked_prefill_finish` / the head-sharded partials shard_map."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    bq, bk = _attn_blocks(qt.shape[2], kt.shape[2])
+    return inner(
+        qt, kt, vt, qpos.astype(jnp.int32), kpos.astype(jnp.int32),
+        causal=spec.causal, window=spec.window, softcap=spec.logit_softcap,
+        chunk=chunk, block_q=bq, block_k=bk, **extra,
+    )
+
+
+def chunked_prefill_partials(q, k, v, qpos, kpos, spec, chunk: int):
+    """Kernel half of the chunked-prefill op: the flash fold run chunk by
+    chunk (chunk rounds up to a kv-block multiple), returning the final
+    carry as singleton split-K partials m, l [B, Hq, 1, Sq], acc
+    [B, Hq, 1, Sq, D] f32. Split from the merge for the same reason as
+    `paged_decode_partials`: the shared `combine_pages` finish must run in
+    the CALLER's context on every backend form."""
+    return _chunked_adapt(chunked_prefill_partials_pallas, q, k, v, qpos,
+                          kpos, spec, chunk, interpret=_interpret())
+
+
+def chunked_prefill_partials_ref(q, k, v, qpos, kpos, spec, chunk: int):
+    """Reference-backend form of `chunked_prefill_partials`: the same
+    adapter around the per-chunk `lax.scan` mirror (identical step
+    sequence — bit-identical to the chunk kernels)."""
+    return _chunked_adapt(chunked_prefill_partials_reference, q, k, v, qpos,
+                          kpos, spec, chunk)
+
+
+def chunked_prefill_finish(m, l, acc, q):
+    """Merge half of the chunked-prefill op: the SHARED `combine_pages`
+    over the singleton partial (exact — the weights are exp(0) = 1.0), cast
+    back to q.dtype and restored to model layout [B, Sq, Hq, D]. Bitwise
+    the flash kernel's in-kernel finalize."""
+    o = combine_pages(m, l, acc)  # [B, Hq, Sq, D] f32
+    return o.astype(q.dtype).transpose(0, 2, 1, 3)
+
+
+def chunked_prefill(q, k, v, qpos, kpos, spec, chunk: int):
+    """Chunked (memory-efficient) GQA prefill: peak score-block memory
+    O(Sq * chunk) instead of O(Sq * Skv), output bitwise `flash_attention`
+    for ANY chunk size (see kernels/chunked_prefill.py for why)."""
+    m, l, acc = chunked_prefill_partials(q, k, v, qpos, kpos, spec, chunk)
+    return chunked_prefill_finish(m, l, acc, q)
+
+
+def chunked_prefill_ref(q, k, v, qpos, kpos, spec, chunk: int):
+    """Reference-backend form of `chunked_prefill` (same partials mirror +
+    the same caller-context `combine_pages` finish)."""
+    m, l, acc = chunked_prefill_partials_ref(q, k, v, qpos, kpos, spec, chunk)
+    return chunked_prefill_finish(m, l, acc, q)
 
 
 def _decode_layout(q, k, v):

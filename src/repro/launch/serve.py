@@ -22,11 +22,19 @@ module docstring): `--share_prefix` / `--no-share_prefix` toggles prefix
 sharing (on by default; `--prefix_len N` gives every request the same
 N-token prompt prefix so the sharing actually has something to hit), and
 `--spec_k K` turns on speculative decode with K rows per verify step.
+
+Long-context knobs (serving/README.md): `--prefill_chunk C` routes prompt
+buckets wider than C through the chunked prefill (O(S*C) peak score memory,
+bitwise-identical outputs), `--prefix_cap N` bounds the warm prefix index to
+N entries with LRU whole-prefix eviction, and `--attn window:<W>` overrides
+the arch's attention pattern with a W-token sliding window (`--attn full`
+removes one) — routing prefill through the banded local-attention kernel.
 """
 from __future__ import annotations
 
 import argparse
 import time
+from dataclasses import replace as dc_replace
 
 import jax
 import numpy as np
@@ -62,10 +70,29 @@ def main(argv=None) -> dict:
                          "(0 = fully independent prompts)")
     ap.add_argument("--spec_k", type=int, default=0,
                     help="speculative decode rows per step (<=1 = off)")
+    ap.add_argument("--prefill_chunk", type=int, default=0,
+                    help="chunked-prefill KV span in tokens (0 = full-width "
+                         "flash prefill); bitwise-identical outputs")
+    ap.add_argument("--prefix_cap", type=int, default=0,
+                    help="max warm prefix-index entries, LRU-evicted past "
+                         "the cap (0 = unbounded)")
+    ap.add_argument("--attn", default="",
+                    help="attention-pattern override: 'window:<W>' forces a "
+                         "W-token sliding window, 'full' removes the arch's "
+                         "window; empty keeps the arch pattern")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     cfg = reduced(get_config(args.arch))
+    if args.attn:
+        if args.attn == "full":
+            cfg = dc_replace(cfg, attn_kind="full", sliding_window=0)
+        elif args.attn.startswith("window:"):
+            cfg = dc_replace(cfg, attn_kind="sliding",
+                             sliding_window=int(args.attn.split(":", 1)[1]))
+        else:
+            raise SystemExit(
+                f"unknown --attn {args.attn!r} (want 'window:<W>' or 'full')")
     model = Model(cfg)
     params = model.init(jax.random.key(args.seed))
     engine = ServeEngine(
@@ -74,7 +101,9 @@ def main(argv=None) -> dict:
                            max_len=args.prompt_len + args.max_new,
                            cache=args.cache, page_size=args.page_size,
                            share_prefix=args.share_prefix,
-                           spec_k=args.spec_k))
+                           spec_k=args.spec_k,
+                           prefill_chunk=args.prefill_chunk,
+                           prefix_cap=args.prefix_cap))
 
     rng = np.random.default_rng(args.seed)
     pl = min(args.prefix_len, args.prompt_len)
@@ -93,12 +122,16 @@ def main(argv=None) -> dict:
     hit_rate = (stats.get("prefix_hit_tokens", 0)
                 / max(stats.get("prompt_tokens", 0), 1))
     log.info("served %d requests, %d tokens in %.2fs "
-             "(%.1f tok/s, backend=%s, cache=%s, prefix_hit_rate=%.2f)",
+             "(%.1f tok/s, backend=%s, cache=%s, prefix_hit_rate=%.2f, "
+             "prefill_chunk=%d, window=%d)",
              len(done), n_tok, dt, n_tok / dt, args.backend,
-             engine.cache_mode, hit_rate)
+             engine.cache_mode, hit_rate, args.prefill_chunk,
+             cfg.sliding_window)
     return {"requests": len(done), "tokens": n_tok, "wall_s": dt,
             "backend": args.backend, "cache": engine.cache_mode,
-            "prefix_hit_rate": hit_rate, "stats": dict(stats)}
+            "prefix_hit_rate": hit_rate, "stats": dict(stats),
+            "prefill_chunk": args.prefill_chunk,
+            "window": cfg.sliding_window}
 
 
 if __name__ == "__main__":

@@ -213,16 +213,34 @@ def chunked_attention(
 
 
 def attention(q, k, v, qpos, kpos, spec: AttnSpec, impl: str = "auto",
-              kv_valid=None, backend=None):
+              kv_valid=None, backend=None, prefill_chunk: int = 0):
     """Dispatch on sequence length / implementation choice.
 
     When a `repro.core.backend.Backend` is supplied (the serving path),
-    the whole call routes through `Backend.flash_attention` — reference /
-    pallas / pallas_sharded forms with bit-identical outputs — and `impl`
-    is ignored. With backend=None (training) the legacy direct / chunked /
-    flash `impl` selection applies unchanged."""
+    the whole call routes through the Backend ops — reference / pallas /
+    pallas_sharded forms with bit-identical outputs — and `impl` is
+    ignored. Routing inside the serving path, most specific first:
+
+    * `prefill_chunk` > 0 and the KV span exceeds it (multi-token query):
+      `Backend.chunked_prefill` — O(Sq * chunk) peak score memory, the
+      carried online-softmax fold finished by the shared `combine_pages`
+      merge. Handles windows/softcap, so it subsumes the local op.
+    * windowed spec on a multi-token query: `Backend.local_attention` —
+      the banded kernel that skips fully-masked KV blocks.
+    * otherwise: `Backend.flash_attention`.
+
+    All three are bitwise-identical to the full flash path on every
+    backend (kernels/README.md parity rules), so routing is a pure
+    performance decision. With backend=None (training) the legacy
+    direct / chunked / flash `impl` selection applies unchanged."""
     if backend is not None:
         assert kv_valid is None, "kv_valid is a legacy-path-only argument"
+        Sq, Skv = q.shape[1], k.shape[1]
+        if prefill_chunk and Sq > 1 and Skv > prefill_chunk:
+            return backend.chunked_prefill(q, k, v, qpos, kpos, spec,
+                                           prefill_chunk)
+        if spec.window and Sq > 1:
+            return backend.local_attention(q, k, v, qpos, kpos, spec)
         return backend.flash_attention(q, k, v, qpos, kpos, spec)
     Sq, Skv = q.shape[1], k.shape[1]
     if impl == "flash":

@@ -174,7 +174,7 @@ class Model:
     # ----------------------------------------------------------------- serve
     def prefill(self, params, batch: dict, *, cache_len: Optional[int] = None,
                 impl: Optional[str] = None, backend=None, last_pos=None,
-                full_cache: bool = False):
+                full_cache: bool = False, prefill_chunk: int = 0):
         """Full-prompt forward returning (last-position logits, populated KV
         cache). `backend` (or the Model-level default) routes attention
         through the Backend serving ops — see `__init__`.
@@ -192,7 +192,12 @@ class Model:
         cache so EVERY position's K/V survives the prefill (the paged
         engine's commit scatters them into pages; without it, right-pad
         writes would ring-evict in-window real tokens on sliding-window
-        archs before the commit sees them)."""
+        archs before the commit sees them).
+
+        `prefill_chunk` > 0 routes attention through the chunked-prefill
+        Backend op when the KV span exceeds the chunk — O(S * chunk) peak
+        score memory, bitwise-identical logits and cache (see
+        models.attention.attention / kernels/README.md)."""
         cfg = self.cfg
         impl = impl or self.impl
         backend = backend if backend is not None else self.backend
@@ -207,6 +212,7 @@ class Model:
             pos3=batch.get("pos3"), enc_out=self._enc_out(params, batch, impl),
             impl=impl, backend=backend, constrain=self._act_constrain,
             slot_constrain=self._make_slot_constrain(params),
+            prefill_chunk=prefill_chunk,
         )
         if last_pos is None:
             h_last = out.hidden[:, -1:]
@@ -219,7 +225,8 @@ class Model:
 
     def prefill_tail(self, params, batch: dict, paged_cache: dict, *,
                      page_row, share_pages: int, kv_len: int,
-                     last_pos, impl: Optional[str] = None, backend=None):
+                     last_pos, impl: Optional[str] = None, backend=None,
+                     prefill_chunk: int = 0):
         """Tail-only prefill for prefix-sharing admission: run ONLY the
         unshared tail of a prompt (batch tokens [1, W_t], right-padded),
         attending over the shared-prefix K/V already resident in
@@ -268,6 +275,7 @@ class Model:
             constrain=self._act_constrain,
             slot_constrain=self._make_slot_constrain(params),
             share_pages=share_pages, kv_len=kv_len,
+            prefill_chunk=prefill_chunk,
         )
         h_last = jnp.take_along_axis(
             out.hidden, last_pos.astype(jnp.int32)[:, None, None], axis=1)

@@ -253,6 +253,7 @@ def apply_block(
     pages: Optional[jax.Array] = None,  # [B, n_pages] paged-decode block table
     share_pages: int = 0,  # mode="tail": pages aliased from a shared prefix
     kv_len: int = 0,       # mode="tail": solo prompt-bucket kv width
+    prefill_chunk: int = 0,  # chunked-prefill KV span (0 = full flash)
 ):
     aux = jnp.zeros((), jnp.float32)
     new_cache = cache
@@ -276,7 +277,8 @@ def apply_block(
             kf, vf = attn_lib.paged_prefix_concat(
                 cache["pool"], pages[0], share_pages, k, v, kv_len)
             o = attn_lib.attention(q, kf, vf, pos, jnp.arange(kv_len), spec,
-                                   impl=impl, backend=backend)
+                                   impl=impl, backend=backend,
+                                   prefill_chunk=prefill_chunk)
             kv = attn_lib.KVCache(k.astype(cache["kv"].k.dtype),
                                   v.astype(cache["kv"].v.dtype))
             # the pool is read-only here; returning only the dense tail
@@ -304,7 +306,8 @@ def apply_block(
             q = _rotate(cfg, q, pos, pos3)
             k = _rotate(cfg, k, pos, pos3)
             o = attn_lib.attention(q, k, v, pos, pos, spec, impl=impl,
-                                   backend=backend)
+                                   backend=backend,
+                                   prefill_chunk=prefill_chunk)
             if mode == "prefill":
                 W = cache["kv"].capacity
                 S = k.shape[1]
@@ -430,6 +433,7 @@ def run_stack(
     slot_constrain=None,
     share_pages: int = 0,
     kv_len: int = 0,
+    prefill_chunk: int = 0,
 ) -> StackOut:
     pattern = cfg.block_pattern
     n_super, rem = divmod(cfg.n_layers, len(pattern))
@@ -449,6 +453,7 @@ def run_stack(
                 mode=mode, cache=c, pos=pos, pos3=pos3, enc_out=enc_out,
                 impl=impl, backend=backend, pages=pages,
                 share_pages=share_pages, kv_len=kv_len,
+                prefill_chunk=prefill_chunk,
             )
             new_caches.append(nc)
             aux = aux + a
@@ -477,6 +482,7 @@ def run_stack(
             mode=mode, cache=c, pos=pos, pos3=pos3, enc_out=enc_out,
             impl=impl, backend=backend, pages=pages,
             share_pages=share_pages, kv_len=kv_len,
+            prefill_chunk=prefill_chunk,
         )
         new_tail.append(nc)
         aux0 = aux0 + a

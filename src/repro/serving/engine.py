@@ -143,6 +143,8 @@ class ServeConfig:
     trace_logits: bool = False  # record per-request logits on Request.logits
     share_prefix: bool = True   # alias shared prefixes; pool persists runs
     spec_k: int = 0             # speculative rows per decode step (<=1 = off)
+    prefill_chunk: int = 0      # chunked-prefill KV span; 0 = full flash
+    prefix_cap: int = 0         # max warm prefix-index entries; 0 = unbounded
 
 
 @dataclass
@@ -252,6 +254,10 @@ class ServeEngine:
             # per-run allocator state, (re)built by _paged_init:
             self.page_refs = np.zeros(self.num_pages, np.int32)
             self._prefix_index: "OrderedDict" = OrderedDict()
+            # lifetime count of prefix-index entries evicted (pool-pressure
+            # LIFO + prefix_cap LRU) — persists across run() waves, mirrored
+            # into the per-run stats dict
+            self._prefix_evictions = 0
             self._slot_rows: list = [None] * self.B
             self.stats: dict = {}
             # with share_prefix, the (cache, free-list) pool survives run()
@@ -295,13 +301,16 @@ class ServeEngine:
         if width not in self._paged_prefill:
             model, backend = self.model, self.backend
 
+            chunk = self.config.prefill_chunk
+
             def prefill(params, toks, last_pos):
                 # full_cache: keep EVERY position's K/V (no sliding-window
                 # ring bound) so the page commit sees the whole prompt —
                 # the window is a decode-time validity mask on pages
                 return model.prefill(params, {"tokens": toks},
                                      cache_len=width, backend=backend,
-                                     last_pos=last_pos, full_cache=True)
+                                     last_pos=last_pos, full_cache=True,
+                                     prefill_chunk=chunk)
 
             self._paged_prefill[width] = jax.jit(prefill)
         return self._paged_prefill[width]
@@ -339,11 +348,13 @@ class ServeEngine:
         if key not in self._tail_prefill:
             model, backend = self.model, self.backend
 
+            chunk = self.config.prefill_chunk
+
             def prefill(params, toks, cache, page_row, last_pos):
                 return model.prefill_tail(
                     params, {"tokens": toks}, cache, page_row=page_row,
                     share_pages=n_share, kv_len=kv_len, last_pos=last_pos,
-                    backend=backend)
+                    backend=backend, prefill_chunk=chunk)
 
             self._tail_prefill[key] = jax.jit(prefill)
         return self._tail_prefill[key]
@@ -412,7 +423,9 @@ class ServeEngine:
         """Longest indexed block-aligned prefix of `prompt` (same block
         class): -> (n_share, aliased page ids). Capped at (L-1)//P so at
         least one prompt token always remains for the tail prefill (whose
-        last-position logits are the request's first output)."""
+        last-position logits are the request's first output). Every hit
+        touches its entry to the recent end of the (ordered) index, so the
+        `prefix_cap` LRU eviction retires cold prefixes first."""
         if not self.config.share_prefix:
             return 0, []
         P = self.config.page_size
@@ -420,19 +433,25 @@ class ServeEngine:
         cls = self._class_bit(bucket)
         ids = []
         for j in range((len(pb) - 1) // P):
-            page = self._prefix_index.get((cls, pb[:(j + 1) * P].tobytes()))
+            key = (cls, pb[:(j + 1) * P].tobytes())
+            page = self._prefix_index.get(key)
             if page is None:
                 break
+            self._prefix_index.move_to_end(key)  # LRU touch
             ids.append(page)
         return len(ids), ids
 
-    def _register_prefix(self, prompt, bucket: int, row: np.ndarray):
+    def _register_prefix(self, prompt, bucket: int, row: np.ndarray,
+                         free: Optional[list] = None):
         """Index every FULL page the admitted prompt covers (exact token
         bytes as the key — collisions are impossible). Each NEW entry pins
         its page with one refcount, keeping it alive for future sharers
         after the owning slot releases; existing entries (the aliased
         prefix, or a deeper donor chain this admission stopped short of)
-        are left untouched."""
+        are left untouched. With `ServeConfig.prefix_cap` set, registering
+        past the cap retires least-recently-used whole prefixes (the warm
+        pool otherwise grows one pinned chain per distinct prompt,
+        forever)."""
         if not self.config.share_prefix:
             return
         P = self.config.page_size
@@ -444,20 +463,46 @@ class ServeEngine:
                 pg = int(row[j])
                 self._prefix_index[key] = pg
                 self.page_refs[pg] += 1
+        cap = self.config.prefix_cap
+        if cap and free is not None:
+            while len(self._prefix_index) > cap:
+                if not self._evict_chain(free, last=False):
+                    break
 
-    def _evict_one(self, free: list) -> bool:
-        """Drop the most recently indexed prefix entry (LIFO): chains are
-        inserted shallow-to-deep, so the deepest page of the newest chain
-        goes first and an evicted entry can never strand a still-pinned
-        continuation behind a broken walk. Frees the page iff the pin was
-        its last reference."""
+    def _evict_chain(self, free: list, *, last: bool) -> bool:
+        """Drop one prefix entry PLUS every deeper entry extending it — the
+        whole cached prefix — un-pinning each page (freed iff the pin was
+        its last reference). `last=True` starts from the most recently
+        touched end (pool-pressure eviction: with untouched chains indexed
+        shallow-to-deep this is the deepest page of the newest chain, the
+        historical LIFO order); `last=False` starts from the
+        least-recently-used end (the `prefix_cap` age-out). Taking the
+        extensions along is what keeps the index walkable: `_prefix_match`
+        stops at the first missing depth, so an evicted entry must never
+        leave a deeper continuation behind — it would be unreachable yet
+        still pinning its page. Counts every dropped entry in the
+        `prefix_evictions` stat."""
         if not self._prefix_index:
             return False
-        _, pg = self._prefix_index.popitem(last=True)
-        self.page_refs[pg] -= 1
-        if self.page_refs[pg] == 0:
-            free.append(pg)
+        (cls, pb), pg = self._prefix_index.popitem(last=last)
+        dropped = [pg]
+        for key in [k for k in self._prefix_index
+                    if k[0] == cls and k[1].startswith(pb)]:
+            dropped.append(self._prefix_index.pop(key))
+        for pg in dropped:
+            self.page_refs[pg] -= 1
+            if self.page_refs[pg] == 0:
+                free.append(pg)
+        self._prefix_evictions += len(dropped)
+        if self.stats:
+            self.stats["prefix_evictions"] = self._prefix_evictions
         return True
+
+    def _evict_one(self, free: list) -> bool:
+        """Pool-pressure eviction: retire the most recently touched prefix
+        chain (see `_evict_chain`). Kept as the single entry point the
+        admission and copy-on-write paths loop on until a page frees."""
+        return self._evict_chain(free, last=True)
 
     def _sync_refcount(self, cache):
         """Refresh the device refcount mirror from the host-authoritative
@@ -541,7 +586,8 @@ class ServeEngine:
         self.stats = {"prompt_tokens": 0, "prefill_tokens": 0,
                       "prefix_hit_tokens": 0, "prefix_hits": 0,
                       "spec_proposed": 0, "spec_accepted": 0,
-                      "cow_copies": 0}
+                      "cow_copies": 0,
+                      "prefix_evictions": self._prefix_evictions}
         nxt = jnp.zeros((self.B, 1), jnp.int32)
         cache, nxt = self._admit_idle_slots(pending, done, cache, nxt,
                                             active, remaining, free,
@@ -794,7 +840,7 @@ class ServeEngine:
                 cache = self._commit_cache(self._get_paged_commit(width)(
                     cache, dense, jnp.asarray(row),
                     jnp.asarray(L, jnp.int32)))
-            self._register_prefix(j.prompt, width, row)
+            self._register_prefix(j.prompt, width, row, free)
             cache["pages"] = cache["pages"].at[slot].set(jnp.asarray(row))
             cache["pos"] = cache["pos"].at[slot].set(L)
             cache = self._sync_refcount(cache)

@@ -321,3 +321,156 @@ def test_paged_parity_under_jit(seed, window, softcap):
             lambda *a: get_backend(name).paged_decode_attention(*a, spec)
         )(q, kp, vp, pt, pos))
         np.testing.assert_array_equal(got, ref, err_msg=name)
+
+
+@settings(deadline=None, max_examples=40)
+@given(
+    seed=st.integers(0, 10_000),
+    hkv=st.sampled_from([1, 2]),
+    g=st.sampled_from([1, 2]),
+    s=st.integers(3, 17),
+    chunk=st.integers(1, 24),  # sweeps sub-block, mid, and > Skv chunks
+    window=st.sampled_from([0, 5]),
+    softcap=st.sampled_from([0.0, 30.0]),
+)
+def test_chunked_prefill_parity_bitwise(seed, hkv, g, s, chunk, window,
+                                        softcap):
+    """Backend.chunked_prefill: bitwise equal to the full flash reference
+    fuzzed over odd lengths, CHUNK SIZES (the fold must be chunk-size
+    invariant: any chunking replays the identical carried step sequence),
+    GQA groupings, windows, and softcap — on every backend."""
+    spec = AttnSpec(True, window, softcap)
+    ks = jax.random.split(jax.random.key(seed), 3)
+    B, d = 1, 8
+    q = jax.random.normal(ks[0], (B, s, hkv * g, d))
+    k = jax.random.normal(ks[1], (B, s, hkv, d))
+    v = jax.random.normal(ks[2], (B, s, hkv, d))
+    pos = jnp.arange(s)
+    want = np.asarray(get_backend("reference").flash_attention(
+        q, k, v, pos, pos, spec))
+    assert np.all(np.isfinite(want))
+    for name in _SEL:
+        got = np.asarray(get_backend(name).chunked_prefill(
+            q, k, v, pos, pos, spec, chunk))
+        np.testing.assert_array_equal(got, want,
+                                      err_msg=f"{name} chunk={chunk} {spec}")
+
+
+@settings(deadline=None, max_examples=40)
+@given(
+    seed=st.integers(0, 10_000),
+    hkv=st.sampled_from([1, 2]),
+    g=st.sampled_from([1, 2]),
+    s=st.integers(3, 17),
+    window=st.integers(1, 20),  # windows below, inside, and past the length
+    softcap=st.sampled_from([0.0, 30.0]),
+)
+def test_local_attention_parity_bitwise(seed, hkv, g, s, window, softcap):
+    """Backend.local_attention (banded kernel with pl.when-skipped
+    fully-masked blocks): bitwise equal to the full flash reference — the
+    skipped blocks must be EXACT neutral elements, not approximations —
+    fuzzed over window/length interplay, GQA, and softcap, per backend."""
+    spec = AttnSpec(True, window, softcap)
+    ks = jax.random.split(jax.random.key(seed), 3)
+    B, d = 1, 8
+    q = jax.random.normal(ks[0], (B, s, hkv * g, d))
+    k = jax.random.normal(ks[1], (B, s, hkv, d))
+    v = jax.random.normal(ks[2], (B, s, hkv, d))
+    pos = jnp.arange(s)
+    want = np.asarray(get_backend("reference").flash_attention(
+        q, k, v, pos, pos, spec))
+    assert np.all(np.isfinite(want))
+    for name in _SEL:
+        got = np.asarray(get_backend(name).local_attention(
+            q, k, v, pos, pos, spec))
+        np.testing.assert_array_equal(got, want, err_msg=f"{name} {spec}")
+
+
+@settings(deadline=None, max_examples=30)
+@given(
+    seed=st.integers(0, 10_000),
+    hkv=st.sampled_from([1, 2]),
+    g=st.sampled_from([1, 2]),
+    s=st.integers(3, 17),
+    window=st.sampled_from([0, 6]),
+    mask_p=st.floats(0.0, 1.0),
+)
+def test_block_sparse_parity_bitwise(seed, hkv, g, s, window, mask_p):
+    """Backend.block_sparse_attention: an all-ones block mask reproduces the
+    flash reference bitwise, and RANDOM masks are bitwise identical across
+    the three backends (the reference mirrors every skip with a lax.cond on
+    the same predicate)."""
+    from repro.kernels import ops
+
+    spec = AttnSpec(True, window, 0.0)
+    ks = jax.random.split(jax.random.key(seed), 3)
+    B, d = 1, 8
+    q = jax.random.normal(ks[0], (B, s, hkv * g, d))
+    k = jax.random.normal(ks[1], (B, s, hkv, d))
+    v = jax.random.normal(ks[2], (B, s, hkv, d))
+    pos = jnp.arange(s)
+    nq, nk = ops.attn_block_mask_shape(s, s)
+    full = jnp.ones((nq, nk), jnp.int32)
+    want = np.asarray(get_backend("reference").flash_attention(
+        q, k, v, pos, pos, spec))
+    got = np.asarray(get_backend("reference").block_sparse_attention(
+        q, k, v, pos, pos, full, spec))
+    np.testing.assert_array_equal(got, want, err_msg=f"full-mask {spec}")
+    rmask = (jax.random.uniform(jax.random.key(seed + 1), (nq, nk))
+             < mask_p).astype(jnp.int32)
+    want = np.asarray(get_backend("reference").block_sparse_attention(
+        q, k, v, pos, pos, rmask, spec))
+    assert np.all(np.isfinite(want))
+    for name in NONREF:
+        got = np.asarray(get_backend(name).block_sparse_attention(
+            q, k, v, pos, pos, rmask, spec))
+        np.testing.assert_array_equal(got, want, err_msg=f"{name} {spec}")
+
+
+@functools.lru_cache(maxsize=1)
+def _windowed_model():
+    """One reduced sliding-window model (starcoder2: window 32 after
+    `reduced`) for the model-level chunked-prefill fuzz."""
+    from repro.configs import get_config, reduced
+    from repro.models import Model
+
+    cfg = reduced(get_config("starcoder2-3b"))
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+@settings(deadline=None, max_examples=8)
+@given(
+    seed=st.integers(0, 10_000),
+    plen=st.integers(33, 47),  # window (32) < prompt < bucket (64)
+    chunk=st.sampled_from([8, 16, 24, 40]),
+)
+def test_model_chunked_prefill_bitwise(seed, plen, chunk):
+    """Model.prefill with `prefill_chunk`: logits AND every committed K/V
+    cache leaf bitwise equal to the full flash prefill, fuzzed over odd
+    prompt lengths right-padded into the bucket (window < prompt < bucket —
+    the banded/chunked/pad interplay at once), chunk sizes, and backends.
+    Two+ layers, so layer-N K/V inherits layer-(N-1) attention outputs —
+    cache equality is end-to-end stack parity, not a single-op check."""
+    cfg, model, params = _windowed_model()
+    assert cfg.sliding_window == 32 and cfg.n_layers >= 2
+    bucket = 64
+    rng = np.random.default_rng(seed)
+    toks = np.zeros((1, bucket), np.int32)
+    toks[0, :plen] = rng.integers(1, cfg.vocab_size, plen)
+    toks = jnp.asarray(toks)
+    lp = jnp.asarray([plen - 1], jnp.int32)
+    for name in _SEL:
+        bk = get_backend(name)
+        lf, cf = model.prefill(params, {"tokens": toks}, cache_len=bucket,
+                               backend=bk, last_pos=lp, full_cache=True)
+        lc, cc = model.prefill(params, {"tokens": toks}, cache_len=bucket,
+                               backend=bk, last_pos=lp, full_cache=True,
+                               prefill_chunk=chunk)
+        np.testing.assert_array_equal(np.asarray(lc), np.asarray(lf),
+                                      err_msg=f"{name} logits chunk={chunk}")
+        for a, b in zip(jax.tree.leaves(cc), jax.tree.leaves(cf)):
+            np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b),
+                err_msg=f"{name} cache leaf chunk={chunk}")

@@ -29,6 +29,8 @@ COVERED = [
     "src/repro/kernels/ops.py",
     "src/repro/kernels/flash_attention.py",
     "src/repro/kernels/decode_attention.py",
+    "src/repro/kernels/chunked_prefill.py",
+    "src/repro/kernels/local_attention.py",
     "src/repro/models/attention.py",
     "src/repro/serving/engine.py",
     "src/repro/launch/serve.py",
