@@ -1,14 +1,24 @@
-"""Cleaning-service benchmark: the pipelined scheduler's overlap win.
+"""Cleaning-service benchmark: scheduler overlap + fleet recovery cost.
 
-For each backend, runs the SAME session twice — blocking and pipelined —
-with simulated annotator latency, and records per-round t_select / t_update,
-end-to-end wall-clock, and the speculation hit rate. Blocking pays
-`t_select + latency + t_update` per round; the pipelined scheduler hides the
-constructor + next-round scoring inside the latency window (results are
-bit-identical — asserted here too).
+Two scenarios (``--only`` / the ``scenarios`` arg selects):
+
+  overlap   for each backend, runs the SAME session twice — blocking and
+            pipelined — with simulated annotator latency, and records
+            per-round t_select / t_update, end-to-end wall-clock, and the
+            speculation hit rate. Blocking pays `t_select + latency +
+            t_update` per round; the pipelined scheduler hides the
+            constructor + next-round scoring inside the latency window
+            (results are bit-identical — asserted here too).
+  recovery  runs a 2-job fleet under the `FleetSupervisor` with a scripted
+            kill (repro.dist.chaos) and records the recovery tax: eviction
+            latency (kill -> evict decision), total resize+restore cost,
+            and the fleet's cleaned-rows throughput with the fault in the
+            loop (`cleaned_rows_per_s`, regression-gated). Recovered
+            results are asserted bitwise against unsupervised runs.
 
 Emits CSV lines via `benchmarks.common.emit` AND writes a
-``BENCH_cleaning.json`` artifact (the CI smoke job uploads it).
+``BENCH_cleaning.json`` artifact (the CI smoke + chaos-smoke jobs upload
+and diff it against benchmarks/BENCH_cleaning_baseline.json).
 
 Env knobs:
   REPRO_BENCH_CLEANING_ROUNDS   rounds per session (default 2 — CI smoke)
@@ -26,10 +36,18 @@ import jax
 import numpy as np
 
 from benchmarks.common import emit
-from repro.cleaning import CleaningSession, make_scheduler
+from repro.cleaning import (
+    CleaningSession,
+    FleetJob,
+    FleetSupervisor,
+    make_scheduler,
+)
 from repro.configs.chef_lr import ChefConfig
 from repro.core.backend import BACKENDS
 from repro.data import make_dataset
+from repro.dist.chaos import FaultSchedule
+
+SCENARIOS = ("overlap", "recovery")
 
 
 def _one_run(ds, cfg, pipelined: bool) -> dict:
@@ -54,7 +72,72 @@ def _one_run(ds, cfg, pipelined: bool) -> dict:
     }
 
 
-def run(backends=None, rounds: int = None, out_path=None) -> dict:
+def _recovery_scenario(backends, rounds: int, workdir) -> dict:
+    """Kill-and-recover fleet bench: one scripted kill per backend run.
+
+    eviction_latency_s  injected kill -> the supervisor's evict decision
+    restore_cost_s      cumulative resize + elastic-restore wall time
+    cleaned_rows_per_s  fleet cleaned-label throughput WITH the fault in
+                        the loop (the regression-gated rate: recovery
+                        getting slower shows up here too)
+    """
+    from pathlib import Path
+
+    n_jobs = 2
+    fleet_ds = [
+        make_dataset(jax.random.key(21 + i), n_train=600, n_val=100,
+                     n_test=100, feature_dim=64)
+        for i in range(n_jobs)
+    ]
+    out = {"backends": {}, "chaos": "kill:0@1", "n_jobs": n_jobs}
+    for bk in backends:
+        cfg = ChefConfig(budget=rounds * 10, round_size=10, n_epochs=10,
+                         batch_size=300, lr=0.05, l2=0.05, backend=bk)
+        oracle = []
+        for ds in fleet_ds:
+            session = CleaningSession.initialize(ds, cfg)
+            oracle.append(make_scheduler(
+                session, method="infl", selector="increm_tight",
+                constructor="deltagrad").run())
+        sup = FleetSupervisor(Path(workdir) / f"fleet-{bk}", backend=bk,
+                              chaos=FaultSchedule.parse("kill:0@1"))
+        t0 = time.perf_counter()
+        results = sup.run([FleetJob(f"job{i}", ds, cfg)
+                           for i, ds in enumerate(fleet_ds)])
+        wall = time.perf_counter() - t0
+        # recovery moves timing, never results
+        for i, want in enumerate(oracle):
+            got = results[f"job{i}"]
+            assert np.array_equal(np.asarray(got.dataset.cleaned),
+                                  np.asarray(want.dataset.cleaned)), bk
+            assert np.array_equal(np.asarray(got.w), np.asarray(want.w)), bk
+        kill_t = next(t for e, t in zip(sup.injector.trace, sup.injector.times)
+                      if e[0] == "kill")
+        evict_t = next(t for e, t in zip(sup.trace, sup.times)
+                       if e[0] == "evict")
+        cleaned = sum(int(np.asarray(r.dataset.cleaned).sum())
+                      for r in results.values())
+        rec = {
+            "wall_s": wall,
+            "eviction_latency_s": evict_t - kill_t,
+            "restore_cost_s": sup.restore_s,
+            "cleaned_rows_per_s": cleaned / wall,
+            "evictions": sum(e[0] == "evict" for e in sup.trace),
+        }
+        out["backends"][bk] = rec
+        emit(f"cleaning_recovery_{bk}", wall,
+             f"evict_latency={rec['eviction_latency_s']:.3f}s;"
+             f"restore={rec['restore_cost_s']:.3f}s;"
+             f"rows_per_s={rec['cleaned_rows_per_s']:.1f}")
+    return out
+
+
+def run(backends=None, rounds: int = None, out_path=None,
+        scenarios=SCENARIOS) -> dict:
+    """Run the selected scenarios and write the BENCH_cleaning.json artifact
+    (sections for scenarios not selected are simply absent; the regression
+    checker walks sections from the current record, so partial artifacts
+    diff cleanly)."""
     rounds = int(os.environ.get("REPRO_BENCH_CLEANING_ROUNDS", rounds or 2))
     latency = float(os.environ.get("REPRO_BENCH_CLEANING_LATENCY", "0.4"))
     if backends is None:
@@ -66,8 +149,25 @@ def run(backends=None, rounds: int = None, out_path=None) -> dict:
         "rounds": rounds,
         "annotator_latency_s": latency,
         "n_train": int(ds.n),
-        "backends": {},
     }
+    if "overlap" in scenarios:
+        record["backends"] = {}
+        _overlap_scenario(record, backends, ds, rounds, latency)
+    if "recovery" in scenarios:
+        import tempfile
+
+        record["recovery"] = _recovery_scenario(
+            backends, rounds, tempfile.mkdtemp(prefix="bench-fleet-"))
+    out = out_path or os.environ.get("REPRO_BENCH_CLEANING_OUT",
+                                     "BENCH_cleaning.json")
+    with open(out, "w") as f:
+        json.dump(record, f, indent=2)
+    emit("cleaning_artifact", 0.0, out)
+    return record
+
+
+def _overlap_scenario(record, backends, ds, rounds, latency) -> None:
+    """Blocking-vs-pipelined scheduler comparison (see module docstring)."""
     for bk in backends:
         cfg = ChefConfig(
             budget=rounds * 10, round_size=10, n_epochs=15, batch_size=400,
@@ -93,13 +193,29 @@ def run(backends=None, rounds: int = None, out_path=None) -> dict:
             f"speedup={speedup:.2f}x;hits={pipelined['spec_hits']};"
             f"misses={pipelined['spec_misses']}",
         )
-    out = out_path or os.environ.get("REPRO_BENCH_CLEANING_OUT",
-                                     "BENCH_cleaning.json")
-    with open(out, "w") as f:
-        json.dump(record, f, indent=2)
-    emit("cleaning_artifact", 0.0, out)
-    return record
+
+
+def main(argv=None) -> dict:
+    """CLI entry: `python -m benchmarks.bench_cleaning --only recovery`."""
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help=f"comma list of scenarios: {','.join(SCENARIOS)} "
+                         "(default: all)")
+    ap.add_argument("--backends", default="",
+                    help="comma list (default: all three)")
+    ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+    scenarios = tuple(s for s in args.only.split(",") if s) or SCENARIOS
+    unknown = set(scenarios) - set(SCENARIOS)
+    if unknown:
+        ap.error(f"unknown scenario(s) {sorted(unknown)}; pick from {SCENARIOS}")
+    backends = [b for b in args.backends.split(",") if b] or None
+    return run(backends=backends, rounds=args.rounds, out_path=args.out,
+               scenarios=scenarios)
 
 
 if __name__ == "__main__":
-    run()
+    main()

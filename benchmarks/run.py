@@ -6,7 +6,11 @@ Prints ``name,us_per_call,derived`` CSV lines.
   exp2  Table 2      — Increm-INFL vs Full selection time + exactness
   exp3  Figure 2     — DeltaGrad-L vs Retrain constructor time
   exp4  Table 14     — vary per-round batch b
-  clean (service)    — pipelined vs blocking scheduler wall-clock per backend
+  clean (service)    — pipelined vs blocking scheduler wall-clock per
+                       backend, plus the fleet-recovery scenario (scripted
+                       kill under the FleetSupervisor: eviction latency,
+                       restore cost, cleaned-rows throughput; run alone via
+                       `python -m benchmarks.bench_cleaning --only recovery`)
                        (writes the BENCH_cleaning.json artifact)
   constructor        — sgd_train + deltagrad_replay per backend, with
                        bit-parity + trajectory-sharding asserts and the

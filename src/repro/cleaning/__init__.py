@@ -14,6 +14,9 @@ Decomposes the monolithic `run_chef` loop into a service (see README.md):
                wiring, first-class early-termination policies.
   service    — `CleaningService`: submit/poll/cancel N sessions over one
                shared `Backend`.
+  supervisor — `FleetSupervisor`: elastic fleet driver — heartbeat liveness,
+               straggler eviction, mesh resize, mid-round elastic restore;
+               recovery is bitwise (pair with `repro.dist.chaos`).
 
 `repro.core.pipeline.run_chef` is a thin compatibility wrapper over a
 single-session blocking scheduler.
@@ -42,8 +45,9 @@ from repro.cleaning.scheduler import (
     make_scheduler,
     make_termination,
 )
-from repro.cleaning.service import CleaningService, JobInfo
+from repro.cleaning.service import CleaningService, JobInfo, prepare_session
 from repro.cleaning.session import BudgetLedger, CleaningSession
+from repro.cleaning.supervisor import FleetJob, FleetSupervisor
 
 __all__ = [
     "AnnotationTask",
@@ -55,6 +59,8 @@ __all__ = [
     "Constructor",
     "ConstructorResult",
     "DeltaGradConstructor",
+    "FleetJob",
+    "FleetSupervisor",
     "InflSelector",
     "JobInfo",
     "MarginalF1PerLabel",
@@ -70,4 +76,5 @@ __all__ = [
     "make_scheduler",
     "make_selector",
     "make_termination",
+    "prepare_session",
 ]

@@ -165,6 +165,7 @@ class RoundScheduler:
         ckpt_keep: int = 3,
         heartbeat: Optional[Heartbeat] = None,
         retries: int = 0,
+        step_wrapper=None,
         verbose: bool = False,
     ):
         self.session = session
@@ -192,8 +193,13 @@ class RoundScheduler:
         # state — the commit (apply_round, heartbeat, checkpoint) runs exactly
         # once per round. Wrapping the whole round would let a transient
         # failure AFTER the commit silently re-run as an extra round.
-        self._compute = retry_step(self._compute_round, retries=retries) \
-            if retries else self._compute_round
+        # `step_wrapper` (the dist.chaos injection hook) sits INSIDE the
+        # retry wrapper so injected transient failures are retried exactly
+        # like real ones, and an injected kill escapes like a real one.
+        compute = self._compute_round if step_wrapper is None \
+            else step_wrapper(self._compute_round)
+        self._compute = retry_step(compute, retries=retries) \
+            if retries else compute
 
     # ------------------------------------------------------------- run state
     @property

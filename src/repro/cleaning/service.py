@@ -40,6 +40,28 @@ PENDING, RUNNING, DONE, FAILED, CANCELLED = (
     "pending", "running", "done", "failed", "cancelled")
 
 
+def prepare_session(ds, cfg, *, backend: Backend, selector: str = "full",
+                    constructor: str = "retrain", ckpt_dir=None,
+                    resume: bool = False) -> CleaningSession:
+    """Build the session a cleaning job runs on: restore the latest committed
+    checkpoint when `resume` and one exists (empty/absent dirs fall back to a
+    fresh start), else initialize from scratch — deriving which caches the
+    job needs (DeltaGrad trajectory iff the constructor replays, Increm-INFL
+    provenance iff the selector prunes). The one place that derivation
+    lives: both `CleaningService` workers and the `FleetSupervisor`'s cold
+    starts go through here."""
+    if resume and ckpt_dir is not None:
+        from repro.ckpt.checkpoint import latest_step
+
+        if latest_step(ckpt_dir) is not None:
+            return CleaningSession.restore(ckpt_dir, ds, cfg, backend=backend)
+    return CleaningSession.initialize(
+        ds, cfg, backend=backend,
+        need_trajectory=(constructor == "deltagrad"),
+        need_provenance=selector.startswith("increm"),
+    )
+
+
 @dataclass
 class JobInfo:
     """Snapshot returned by `poll` — progress without touching the session."""
@@ -190,20 +212,10 @@ class CleaningService:
             if job.cancel_event.is_set():
                 return
             job.state = RUNNING
-        resume_step = None
-        if opts.get("resume") and opts["ckpt_dir"] is not None:
-            from repro.ckpt.checkpoint import latest_step
-
-            resume_step = latest_step(opts["ckpt_dir"])
-        if resume_step is not None:
-            session = CleaningSession.restore(
-                opts["ckpt_dir"], job.ds, job.cfg, backend=self.backend)
-        else:
-            session = CleaningSession.initialize(
-                job.ds, job.cfg, backend=self.backend,
-                need_trajectory=(opts["constructor"] == "deltagrad"),
-                need_provenance=opts["selector"].startswith("increm"),
-            )
+        session = prepare_session(
+            job.ds, job.cfg, backend=self.backend, selector=opts["selector"],
+            constructor=opts["constructor"], ckpt_dir=opts["ckpt_dir"],
+            resume=bool(opts.get("resume")))
         sched: RoundScheduler = make_scheduler(
             session, method=opts["method"], selector=opts["selector"],
             constructor=opts["constructor"], pipelined=opts["pipelined"],

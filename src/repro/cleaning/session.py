@@ -225,6 +225,34 @@ class CleaningSession:
         return cls.from_state(state, ds, cfg, backend=backend)
 
     @classmethod
+    def restore_elastic(
+        cls,
+        ckpt_dir,
+        ds,
+        cfg: ChefConfig,
+        mesh,
+        *,
+        backend: "Backend | str | None" = None,
+        step: Optional[int] = None,
+    ) -> "CleaningSession":
+        """The supervisor's restore path: bring the latest committed
+        checkpoint up on `mesh`, which may differ from the mesh the saving
+        run held (straggler eviction, preemption, scale-up).
+
+        Goes through `repro.dist.elastic.elastic_restore`, which device_puts
+        every leaf onto its target sharding on the NEW mesh while reading
+        (the state template's leaves are parameter-shaped, so the default
+        policy replicates — always safe on any device count); `from_state`
+        then recommits the [T, C, d+1] trajectory caches onto the new
+        backend's row-sharded layout. Resuming this way replays the
+        remaining rounds bit-for-bit (tests/test_supervisor.py)."""
+        from repro.dist.elastic import elastic_restore
+
+        state, _ = elastic_restore(ckpt_dir, cls.state_template(), mesh,
+                                   step=step)
+        return cls.from_state(state, ds, cfg, backend=backend)
+
+    @classmethod
     def from_state(
         cls,
         state: dict,

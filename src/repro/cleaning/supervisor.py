@@ -1,0 +1,353 @@
+"""`FleetSupervisor` — elastic supervision of a fleet of cleaning sessions.
+
+The ROADMAP's multi-host story: `CleaningService` runs N sessions as threads
+that are assumed immortal; this supervisor drops that assumption. It runs one
+`CleaningSession` per replica group over one shared `Backend`, and treats the
+`repro.dist.fault` primitives as what they were built to be — inputs to an
+eviction/resize/restore control loop:
+
+  beat     every worker's `RoundScheduler` beats a per-worker `Heartbeat`
+           file once per committed round (the chaos layer may suppress it).
+  stale    the supervisor polls every beacon; a beat older than
+           `stale_after_s` — or a worker thread that died without reporting
+           a result — marks the worker dead. Each worker also times its own
+           rounds into a `StragglerMonitor` (the per-host half of detection,
+           as `dist.fault` frames it) and publishes consecutive-flag counts;
+           `straggler_patience` consecutive flags mark it evicted too
+           (persistently slow capacity is capacity the fleet is better off
+           without).
+  evict    the dead/straggling worker is fenced (cooperative cancel at the
+           round boundary, then joined — a zombie whose heartbeat merely
+           stalled must stop before its replacement starts) and its replica
+           group leaves the fleet.
+  resize   the mesh is rebuilt via `launch.mesh.make_mesh_for` at the
+           surviving device count (`groups_alive * devices_per_group`,
+           clamped to the locally visible devices on this single-host
+           container — the SHAPE of the path is the multi-host one) and the
+           shared Backend is re-resolved onto the new mesh.
+  restore  every unfinished session — not just the evicted one — is brought
+           up on the new mesh mid-round via
+           `CleaningSession.restore_elastic` (`dist.elastic.elastic_restore`
+           under the hood) from its last committed round checkpoint, then
+           resumes. Workers that never committed a round restart from
+           `prepare_session` (deterministic initialization).
+
+Because sessions checkpoint every round and per-round randomness is a pure
+function of (key, round), the recovered fleet's final labels, weights, F1
+history, and budget ledger are BITWISE identical to an unfailed run — the
+same parity discipline `CleaningSession` checkpoint/resume already
+guarantees, now driven automatically under injected kills, stragglers,
+stalled heartbeats, and transient step failures (tests/test_supervisor.py,
+tests/test_fault_prop.py). Spurious evictions (an over-eager `stale_after_s`)
+degrade throughput, never results.
+
+`supervisor.trace` records (evict/resize/restore) events as plain tuples in
+supervisor-decision order; `supervisor.times` holds matching monotonic
+stamps (the recovery bench derives eviction latency and restore cost from
+them). With a seeded `FaultSchedule`, the same seed reproduces the same
+trace.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Optional, Sequence
+
+import jax
+
+from repro.cleaning.scheduler import make_scheduler
+from repro.cleaning.service import prepare_session
+from repro.cleaning.session import CleaningSession
+from repro.core.backend import get_backend
+from repro.dist.chaos import ChaosInjector, FaultSchedule, WorkerKilled
+from repro.dist.fault import Heartbeat, StragglerMonitor
+from repro.launch.mesh import make_mesh_for
+
+RUNNING, STOPPED, DONE, FAILED = "running", "stopped", "done", "failed"
+
+
+@dataclass
+class FleetJob:
+    """One replica group's cleaning job: a dataset + config + the
+    `run_chef`-vocabulary phase choices, named so results and checkpoints
+    stay attributable across evictions and restarts."""
+
+    name: str
+    ds: object
+    cfg: object
+    method: str = "infl"
+    selector: str = "increm_tight"
+    constructor: str = "deltagrad"
+    pipelined: bool = False
+
+
+@dataclass
+class _Worker:
+    """Supervisor-side view of one replica group (mutable bookkeeping)."""
+
+    idx: int
+    job: FleetJob
+    ckpt_dir: Path
+    hb_path: Path
+    reader: Heartbeat
+    monitor: StragglerMonitor
+    thread: Optional[threading.Thread] = None
+    cancel: threading.Event = field(default_factory=threading.Event)
+    started_at: float = 0.0
+    last_beat: Optional[dict] = None
+    flags: int = 0
+    state: str = RUNNING
+    result: object = None
+    error: Optional[str] = None
+    restarts: int = 0
+
+    @property
+    def unfinished(self) -> bool:
+        """True while the job still owes a result."""
+        return self.state in (RUNNING, STOPPED)
+
+
+class FleetSupervisor:
+    """Run a fleet of `FleetJob`s to completion over one shared Backend,
+    surviving kills, stragglers, stalled heartbeats, and elastic resizes
+    (see module docstring for the beat -> stale -> evict -> resize ->
+    restore lifecycle). `run` blocks until every job has a result and
+    returns `{job.name: ChefResult}`; recovery is bitwise."""
+
+    def __init__(self, workdir, backend: str = "reference", *,
+                 chaos: Optional[FaultSchedule] = None,
+                 stale_after_s: float = 30.0,
+                 poll_interval_s: float = 0.02,
+                 straggler_threshold: float = 3.0,
+                 straggler_warmup: int = 1,
+                 straggler_window: int = 16,
+                 straggler_patience: int = 2,
+                 retries: int = 2,
+                 devices_per_group: int = 1,
+                 max_restarts: int = 5,
+                 chunk_rows: int = 0):
+        self.workdir = Path(workdir)
+        self.workdir.mkdir(parents=True, exist_ok=True)
+        self.backend_name = backend
+        self.chunk_rows = chunk_rows
+        self.injector = ChaosInjector(chaos) if chaos is not None else None
+        self.stale_after_s = stale_after_s
+        self.poll_interval_s = poll_interval_s
+        self.straggler_threshold = straggler_threshold
+        self.straggler_warmup = straggler_warmup
+        self.straggler_window = straggler_window
+        self.straggler_patience = straggler_patience
+        self.retries = retries
+        self.devices_per_group = devices_per_group
+        self.max_restarts = max_restarts
+        self._lock = threading.Lock()
+        self.trace: list[tuple] = []
+        self.times: list[float] = []
+        self.restore_s = 0.0  # cumulative wall time spent in resize+restore
+        self.groups_alive = 0
+        self.n_devices = 0
+        self.mesh = None
+        self.backend = None
+        self._workers: list[_Worker] = []
+
+    # ------------------------------------------------------------ lifecycle
+    def run(self, jobs: Sequence[FleetJob]) -> dict:
+        """Drive every job to completion; returns {name: ChefResult}.
+        Raises RuntimeError if a job exhausts `max_restarts` (a fault the
+        schedule says is permanent, not transient)."""
+        jobs = list(jobs)
+        if not jobs:
+            return {}
+        self.groups_alive = len(jobs)
+        self._rebuild_backend()
+        self._workers = [self._make_worker(i, job) for i, job in enumerate(jobs)]
+        for w in self._workers:
+            self._launch(w)
+        while any(w.unfinished for w in self._workers):
+            time.sleep(self.poll_interval_s)
+            for w in self._workers:
+                if w.state != RUNNING:
+                    continue
+                reason = self._health_check(w)
+                if reason is not None:
+                    self._evict(w, reason)
+        failed = [w for w in self._workers if w.state == FAILED]
+        if failed:
+            raise RuntimeError(
+                "jobs exceeded max_restarts: "
+                + "; ".join(f"{w.job.name}: {w.error}" for w in failed))
+        return {w.job.name: w.result for w in self._workers}
+
+    def _make_worker(self, idx: int, job: FleetJob) -> _Worker:
+        hb_path = self.workdir / f"worker{idx}" / "heartbeat.json"
+        return _Worker(
+            idx=idx, job=job,
+            ckpt_dir=self.workdir / f"worker{idx}" / "ckpt",
+            hb_path=hb_path, reader=Heartbeat(hb_path),
+            monitor=self._fresh_monitor(),
+        )
+
+    def _fresh_monitor(self) -> StragglerMonitor:
+        return StragglerMonitor(threshold=self.straggler_threshold,
+                                warmup=self.straggler_warmup,
+                                window=self.straggler_window)
+
+    def _fire(self, *event) -> None:
+        self.trace.append(tuple(event))
+        self.times.append(time.monotonic())
+
+    # ------------------------------------------------------------- liveness
+    def _health_check(self, w: _Worker) -> Optional[str]:
+        """One poll of one worker: returns an eviction reason ('dead' |
+        'stale' | 'straggler') or None while healthy."""
+        rec = w.reader.read()
+        if rec is not None and (w.last_beat is None
+                                or rec["step"] != w.last_beat["step"]):
+            w.last_beat = rec
+        if w.thread is not None and not w.thread.is_alive():
+            # the thread exited without reporting DONE/STOPPED: a (simulated)
+            # process death or an unhandled error — the multi-host analogue
+            # of the child-exit notification, faster than waiting out
+            # staleness
+            return "dead"
+        # wall-clock liveness uses the file's own timestamps (heartbeat
+        # wall clock), anchored at this incarnation's launch so a pre-restart
+        # beacon never reads as instantly stale
+        last = max(rec["time"] if rec is not None else 0.0, w.started_at)
+        if time.time() - last > self.stale_after_s:
+            return "stale"
+        # `flags` counts the worker's own consecutive straggler flags (the
+        # worker times each round into its monitor; see _worker_loop) — the
+        # supervisor is the "at scale, feeds eviction" half of dist.fault's
+        # split. Persistently flagged = evict.
+        if w.flags >= self.straggler_patience:
+            return "straggler"
+        return None
+
+    # ------------------------------------------------- evict/resize/restore
+    def _evict(self, w: _Worker, reason: str) -> None:
+        """Fence one worker (cancel + join), shrink the fleet, then pause,
+        resize, and elastically restore every unfinished session."""
+        w.cancel.set()
+        w.thread.join()
+        if w.state == DONE:
+            return  # finished while we were deciding — not a real eviction
+        last_round = int(w.last_beat["step"]) if w.last_beat else 0
+        self._fire("evict", w.idx, reason, last_round)
+        w.state = STOPPED
+        w.flags = 0
+        self.groups_alive = max(self.groups_alive - 1, 1)
+        self._resize_and_restore()
+
+    def _resize_and_restore(self) -> None:
+        """The elastic barrier: stop survivors at their round boundaries,
+        rebuild the mesh at the surviving device count, and relaunch every
+        unfinished job from its last committed round checkpoint onto the
+        new mesh."""
+        t0 = time.perf_counter()
+        running = [v for v in self._workers
+                   if v.state == RUNNING and v.thread is not None]
+        for v in running:
+            v.cancel.set()
+        for v in running:
+            v.thread.join()
+            if v.state == RUNNING:  # died rather than acked — same outcome
+                v.state = STOPPED
+        self._rebuild_backend()
+        self._fire("resize", self.groups_alive, self.n_devices)
+        for v in self._workers:
+            if not v.unfinished:
+                continue
+            if v.restarts >= self.max_restarts:
+                v.state = FAILED
+                v.error = v.error or "exceeded max_restarts"
+                continue
+            from repro.ckpt.checkpoint import latest_step
+
+            resumed = latest_step(v.ckpt_dir)
+            self._fire("restore", v.idx, int(resumed or 0))
+            v.restarts += 1
+            self._launch(v)
+        with self._lock:
+            self.restore_s += time.perf_counter() - t0
+
+    def _rebuild_backend(self) -> None:
+        """(Re)build the fleet mesh + shared Backend at the current notional
+        device count. `make_mesh_for` is the real multi-host constructor;
+        on this container the count clamps to the locally visible devices,
+        so the resize is exercised end to end even when it is degenerate."""
+        self.n_devices = self.groups_alive * self.devices_per_group
+        local = max(len(jax.devices()), 1)
+        self.mesh = make_mesh_for(max(1, min(local, self.n_devices)),
+                                  model_parallel=1)
+        self.backend = get_backend(self.backend_name, mesh=self.mesh,
+                                   chunk_rows=self.chunk_rows)
+
+    def _launch(self, w: _Worker) -> None:
+        w.cancel = threading.Event()
+        w.monitor = self._fresh_monitor()
+        w.last_beat = None
+        w.flags = 0
+        w.state = RUNNING
+        w.started_at = time.time()
+        w.thread = threading.Thread(target=self._worker_loop, args=(w,),
+                                    name=f"fleet-worker-{w.idx}", daemon=True)
+        w.thread.start()
+
+    # ---------------------------------------------------------- worker side
+    def _worker_loop(self, w: _Worker) -> None:
+        """One replica group's life: build/restore the session, then drive
+        rounds until done, cancelled (resize barrier), or killed."""
+        try:
+            backend, mesh = self.backend, self.mesh
+            from repro.ckpt.checkpoint import latest_step
+
+            if latest_step(w.ckpt_dir) is not None:
+                t0 = time.perf_counter()
+                session = CleaningSession.restore_elastic(
+                    w.ckpt_dir, w.job.ds, w.job.cfg, mesh, backend=backend)
+                with self._lock:
+                    self.restore_s += time.perf_counter() - t0
+            else:
+                session = prepare_session(
+                    w.job.ds, w.job.cfg, backend=backend,
+                    selector=w.job.selector, constructor=w.job.constructor)
+            heartbeat = Heartbeat(w.hb_path)
+            step_wrapper = None
+            if self.injector is not None:
+                heartbeat = self.injector.wrap_heartbeat(heartbeat, w.idx)
+                step_wrapper = self.injector.step_wrapper(
+                    w.idx, lambda: session.round)
+            sched = make_scheduler(
+                session, method=w.job.method, selector=w.job.selector,
+                constructor=w.job.constructor, pipelined=w.job.pipelined,
+                ckpt_dir=w.ckpt_dir, heartbeat=heartbeat,
+                retries=self.retries, step_wrapper=step_wrapper)
+            while not sched.exhausted:
+                if w.cancel.is_set():
+                    # flush pending async writes so the promised resume point
+                    # (every committed round) is on disk before we stop
+                    sched.ckpt.wait()
+                    w.state = STOPPED
+                    return
+                t0 = time.perf_counter()
+                sched.step()
+                # the per-host half of straggler detection (dist.fault):
+                # time our own rounds, publish the consecutive-flag count
+                # for the supervisor's eviction poll. Injected straggles
+                # sleep inside step(), so they are measured like real ones.
+                flagged = w.monitor.record(session.round,
+                                           time.perf_counter() - t0)
+                w.flags = w.flags + 1 if flagged else 0
+            sched.ckpt.wait()
+            w.result = sched.result()
+            w.state = DONE
+        except WorkerKilled:
+            # simulated hard death: no state update, no more beats — the
+            # supervisor's liveness loop must notice on its own
+            return
+        except Exception as e:  # noqa: BLE001 — worker isolation boundary
+            w.error = f"{type(e).__name__}: {e}"
+            return  # treated as a death by the liveness loop

@@ -5,7 +5,16 @@ fault tolerance.
   sharding  — logical-axis rulebook (make_resolver / resolve_axes / batch_axes)
   elastic   — elastic_restore: checkpoint restore onto a *different* mesh
   fault     — Heartbeat, StragglerMonitor, retry_step
+  chaos     — Fault / FaultSchedule / ChaosInjector: seeded, scripted fault
+              injection for the fleet supervisor (timing moves, bits don't)
 """
+from repro.dist.chaos import (
+    ChaosInjector,
+    ChaosTransientError,
+    Fault,
+    FaultSchedule,
+    WorkerKilled,
+)
 from repro.dist.compat import abstract_mesh, make_compat_mesh, shard_map_compat
 from repro.dist.elastic import elastic_restore, target_shardings
 from repro.dist.fault import Heartbeat, StragglerMonitor, retry_step
@@ -17,6 +26,11 @@ __all__ = [
     "shard_map_compat",
     "elastic_restore",
     "target_shardings",
+    "ChaosInjector",
+    "ChaosTransientError",
+    "Fault",
+    "FaultSchedule",
+    "WorkerKilled",
     "Heartbeat",
     "StragglerMonitor",
     "retry_step",

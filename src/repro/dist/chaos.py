@@ -1,0 +1,280 @@
+"""Deterministic fault injection for the cleaning fleet (`dist.chaos`).
+
+Failure testing that depends on *actual* flaky hardware is hope, not CI. This
+module turns every failure mode the supervisor must survive into a scripted,
+seeded event stream:
+
+  * `Fault` — one scripted event: kill worker i at round k, straggle it by
+    s seconds for a few rounds, stall its heartbeat, or fail its step N
+    times before letting it succeed (transient device error).
+  * `FaultSchedule` — an ordered tuple of faults. Built explicitly, parsed
+    from a compact CLI spec (`"kill:0@1;straggle:1@2x0.5r3"`), or drawn
+    from a seeded RNG (`FaultSchedule.random(seed, ...)`) — the SAME seed
+    always yields the SAME schedule, so a failing chaos run reproduces from
+    its seed alone.
+  * `ChaosInjector` — the stateful executor. It wraps the session's step
+    path (`step_wrapper`, consumed by `RoundScheduler`) and the heartbeat
+    path (`wrap_heartbeat`) WITHOUT touching numerics: faults sleep, raise,
+    or suppress beats — they never perturb an array. Each fired event is
+    appended to `injector.trace`, so a chaos run leaves a deterministic
+    record of what was injected where.
+
+The contract the tests pin (tests/test_supervisor.py, tests/test_fault_prop.py):
+same seed -> same schedule -> same eviction/restore trace -> final labels,
+weights, and budget ledger BITWISE identical to the unfailed run. Faults move
+timing and control flow; results never move.
+"""
+from __future__ import annotations
+
+import random
+import threading
+import time
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+KINDS = ("kill", "straggle", "stall", "flaky")
+
+
+class WorkerKilled(SystemExit):
+    """Simulated hard worker death (power loss, preemption, OOM-kill).
+
+    Subclasses SystemExit so `repro.dist.fault.retry_step` passes it through
+    untouched — a kill must look like the process vanishing, not like a
+    retryable error. The worker thread that catches it simply stops beating
+    and exits; the supervisor's liveness loop does the rest.
+    """
+
+
+class ChaosTransientError(RuntimeError):
+    """Injected transient step failure — the retryable kind `retry_step`
+    is there to absorb (flaky interconnect, preemption blip)."""
+
+
+@dataclass(frozen=True)
+class Fault:
+    """One scripted fault event, keyed by (worker, round).
+
+    kind      'kill' | 'straggle' | 'stall' | 'flaky'
+    worker    target worker index (replica group)
+    round     session round the fault first fires at
+    seconds   straggle: injected sleep per affected round
+    rounds    straggle/stall: consecutive rounds affected (default 1)
+    times     flaky: step attempts that fail before succeeding (default 1)
+    """
+
+    kind: str
+    worker: int
+    round: int
+    seconds: float = 0.0
+    rounds: int = 1
+    times: int = 1
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; one of {KINDS}")
+
+    def spec(self) -> str:
+        """Compact text form, the inverse of `FaultSchedule.parse`."""
+        s = f"{self.kind}:{self.worker}@{self.round}"
+        if self.kind == "straggle":
+            s += f"x{self.seconds:g}"
+            if self.rounds != 1:
+                s += f"r{self.rounds}"
+        elif self.kind == "stall" and self.rounds != 1:
+            s += f"r{self.rounds}"
+        elif self.kind == "flaky" and self.times != 1:
+            s += f"n{self.times}"
+        return s
+
+
+@dataclass(frozen=True)
+class FaultSchedule:
+    """An immutable script of faults (+ the seed that generated it, if any)."""
+
+    faults: tuple = ()
+    seed: Optional[int] = None
+
+    @classmethod
+    def parse(cls, text: str) -> "FaultSchedule":
+        """Parse the CLI spec: `;`-separated fault specs, each
+        ``kind:worker@round`` with optional suffixes ``x<seconds>``
+        (straggle), ``r<rounds>`` (straggle/stall), ``n<times>`` (flaky).
+
+            kill:0@1;straggle:1@2x0.5r3;stall:2@1r2;flaky:0@2n2
+        """
+        faults = []
+        for part in filter(None, (p.strip() for p in text.split(";"))):
+            kind, _, rest = part.partition(":")
+            worker_s, _, rest = rest.partition("@")
+            kw: dict = {}
+            num = ""
+            field = None
+            for ch in rest + "\0":  # sentinel flushes the last number
+                if ch.isdigit() or ch in ".-":
+                    num += ch
+                    continue
+                if field is not None:
+                    kw[field] = float(num) if field == "seconds" else int(num)
+                elif num:
+                    kw["round"] = int(num)
+                field = {"x": "seconds", "r": "rounds", "n": "times"}.get(ch)
+                num = ""
+            faults.append(Fault(kind, int(worker_s), **kw))
+        return cls(tuple(faults))
+
+    @classmethod
+    def random(cls, seed: int, *, workers: int, rounds: int, n_faults: int = 2,
+               kinds=KINDS, straggle_s: float = 0.4,
+               max_flaky: int = 2) -> "FaultSchedule":
+        """Draw a schedule from a seeded stdlib RNG — a pure function of its
+        arguments (no global randomness), so the same seed reproduces the
+        same schedule on every host and every run."""
+        rng = random.Random(seed)
+        faults = []
+        for _ in range(n_faults):
+            kind = rng.choice(tuple(kinds))
+            worker = rng.randrange(max(workers, 1))
+            rnd = rng.randrange(1, max(rounds, 2))
+            if kind == "straggle":
+                faults.append(Fault(kind, worker, rnd, seconds=straggle_s,
+                                    rounds=rng.randint(1, 2)))
+            elif kind == "stall":
+                faults.append(Fault(kind, worker, rnd, rounds=rng.randint(1, 2)))
+            elif kind == "flaky":
+                faults.append(Fault(kind, worker, rnd,
+                                    times=rng.randint(1, max_flaky)))
+            else:
+                faults.append(Fault(kind, worker, rnd))
+        return cls(tuple(faults), seed=seed)
+
+    def spec(self) -> str:
+        """The `;`-joined parseable text form of the whole schedule."""
+        return ";".join(f.spec() for f in self.faults)
+
+    def __iter__(self):
+        return iter(self.faults)
+
+    def __len__(self):
+        return len(self.faults)
+
+
+class _ChaosHeartbeat:
+    """A Heartbeat whose beats the injector may suppress (stall faults).
+
+    Only `beat` is intercepted; reads delegate so the supervisor-side view
+    (which holds its own reader anyway) stays truthful.
+    """
+
+    def __init__(self, inner, injector: "ChaosInjector", worker: int):
+        self.inner = inner
+        self.injector = injector
+        self.worker = worker
+
+    def beat(self, step: int) -> None:
+        """Beat unless a stall fault covers (worker, step)."""
+        if self.injector._suppress_beat(self.worker, step):
+            return
+        self.inner.beat(step)
+
+    def __getattr__(self, name):
+        return getattr(self.inner, name)
+
+
+class ChaosInjector:
+    """Stateful executor of one `FaultSchedule`.
+
+    One injector supervises the whole fleet for the whole run — including
+    across worker restarts — so each scripted fault fires exactly as many
+    times as the schedule says (a kill consumed at round k does NOT re-fire
+    when the restored worker replays round k). Thread-safe: workers run
+    concurrently.
+
+    `trace` records every fired event as a plain tuple (kind, worker, round)
+    — (kind, worker, round, attempt) for flaky — and `times` holds the
+    matching `time.monotonic()` stamps (for latency benches; excluded from
+    determinism comparisons since wall clocks move).
+    """
+
+    def __init__(self, schedule: FaultSchedule):
+        self.schedule = schedule
+        self._lock = threading.Lock()
+        self._fired: set = set()  # (fault_idx, round) one-shot markers
+        self._flaky_left = {i: f.times for i, f in enumerate(schedule)
+                            if f.kind == "flaky"}
+        self.trace: list[tuple] = []
+        self.times: list[float] = []
+
+    def _record(self, event: tuple) -> None:
+        self.trace.append(event)
+        self.times.append(time.monotonic())
+
+    # ------------------------------------------------------------ step path
+    def before_step(self, worker: int, rnd: int) -> None:
+        """Consult the schedule at the top of (worker, round)'s compute:
+        sleep for straggles, then raise for a transient failure or a kill.
+        Runs INSIDE the scheduler's retry wrapper, so flaky faults are
+        retried exactly like real transient errors."""
+        delay = 0.0
+        raise_exc: Optional[BaseException] = None
+        with self._lock:
+            for i, f in enumerate(self.schedule):
+                if f.worker != worker:
+                    continue
+                if (f.kind == "straggle" and f.round <= rnd < f.round + f.rounds
+                        and (i, rnd) not in self._fired):
+                    self._fired.add((i, rnd))
+                    self._record(("straggle", worker, rnd))
+                    delay += f.seconds
+                elif (f.kind == "flaky" and f.round == rnd
+                        and self._flaky_left.get(i, 0) > 0
+                        and raise_exc is None):
+                    self._flaky_left[i] -= 1
+                    attempt = f.times - self._flaky_left[i]
+                    self._record(("flaky", worker, rnd, attempt))
+                    raise_exc = ChaosTransientError(
+                        f"injected transient failure (worker {worker}, "
+                        f"round {rnd}, attempt {attempt}/{f.times})")
+                elif (f.kind == "kill" and f.round == rnd
+                        and (i, -1) not in self._fired
+                        and raise_exc is None):
+                    # transient failures burn first; the kill stays armed
+                    # for a later attempt of the same round
+                    self._fired.add((i, -1))
+                    self._record(("kill", worker, rnd))
+                    raise_exc = WorkerKilled(
+                        f"injected kill (worker {worker}, round {rnd})")
+        if delay:
+            time.sleep(delay)
+        if raise_exc is not None:
+            raise raise_exc
+
+    def step_wrapper(self, worker: int, round_fn: Callable[[], int]):
+        """A `RoundScheduler(step_wrapper=...)` factory for one worker:
+        wraps the round-compute fn with `before_step` keyed on the session's
+        live round counter."""
+
+        def wrap(fn):
+            def wrapped(*args, **kwargs):
+                self.before_step(worker, int(round_fn()))
+                return fn(*args, **kwargs)
+
+            return wrapped
+
+        return wrap
+
+    # ------------------------------------------------------- heartbeat path
+    def _suppress_beat(self, worker: int, step: int) -> bool:
+        with self._lock:
+            for i, f in enumerate(self.schedule):
+                if (f.kind == "stall" and f.worker == worker
+                        and f.round <= step < f.round + f.rounds):
+                    if (i, step) not in self._fired:
+                        self._fired.add((i, step))
+                        self._record(("stall", worker, step))
+                    return True
+        return False
+
+    def wrap_heartbeat(self, heartbeat, worker: int):
+        """Wrap a `Heartbeat` so stall faults suppress this worker's beats
+        (the worker keeps computing; only its liveness signal goes dark)."""
+        return _ChaosHeartbeat(heartbeat, self, worker)

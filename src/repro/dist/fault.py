@@ -12,6 +12,7 @@ import json
 import os
 import statistics
 import time
+from collections import deque
 from pathlib import Path
 from typing import Callable, Optional
 
@@ -25,6 +26,7 @@ class Heartbeat:
         self.path.parent.mkdir(parents=True, exist_ok=True)
 
     def beat(self, step: int) -> None:
+        """Atomically rewrite the beacon with (step, now, host)."""
         tmp = self.path.with_name(self.path.name + f".tmp{os.getpid()}")
         tmp.write_text(json.dumps(
             {"step": int(step), "time": time.time(), "host": self.host_id}
@@ -32,6 +34,7 @@ class Heartbeat:
         tmp.replace(self.path)  # atomic on POSIX
 
     def read(self) -> Optional[dict]:
+        """The last beat record, or None when missing/corrupt/foreign."""
         try:
             rec = json.loads(self.path.read_text())
         except (FileNotFoundError, json.JSONDecodeError):
@@ -48,6 +51,7 @@ class Heartbeat:
         return float("inf") if rec is None else time.time() - rec["time"]
 
     def is_stale(self, timeout: float) -> bool:
+        """True when the last beat is older than `timeout` seconds."""
         return self.age() > timeout
 
 
@@ -63,7 +67,9 @@ class StragglerMonitor:
         self.threshold = threshold
         self.warmup = warmup
         self.window = window
-        self._times: list[float] = []
+        # deque(maxlen=window): appending past capacity drops the oldest
+        # sample in O(1), where a list's pop(0) shifted the whole window
+        self._times: deque[float] = deque(maxlen=window)
         self.flagged: list[tuple[int, float]] = []
 
     def record(self, step: int, duration_s: float) -> bool:
@@ -79,12 +85,11 @@ class StragglerMonitor:
         # ramp) shifts the median within ~window/2 steps so flagging stops
         # instead of locking in forever
         self._times.append(duration_s)
-        if len(self._times) > self.window:
-            self._times.pop(0)
         return is_straggler
 
     @property
     def median(self) -> float:
+        """Median step time over the current window (0.0 before any step)."""
         return statistics.median(self._times) if self._times else 0.0
 
 

@@ -1,0 +1,212 @@
+"""Direct unit tests for the `repro.dist.fault` primitives.
+
+These were previously exercised only indirectly (through the training driver
+and the cleaning scheduler); the supervisor now leans on their exact
+semantics — staleness on corrupt/foreign beacons, window-median straggler
+drift, retry pass-through — so each contract gets pinned here on its own.
+"""
+import json
+import statistics
+import time
+
+import pytest
+
+from repro.dist.chaos import Fault, FaultSchedule, WorkerKilled
+from repro.dist.fault import Heartbeat, StragglerMonitor, retry_step
+
+# ------------------------------------------------------------- Heartbeat
+
+
+def test_heartbeat_beat_read_roundtrip(tmp_path):
+    hb = Heartbeat(tmp_path / "hb.json", host_id=3)
+    hb.beat(17)
+    rec = hb.read()
+    assert rec["step"] == 17 and rec["host"] == 3
+    assert abs(rec["time"] - time.time()) < 5.0
+
+
+def test_heartbeat_staleness(tmp_path):
+    hb = Heartbeat(tmp_path / "hb.json")
+    assert hb.age() == float("inf")  # never beat
+    assert hb.is_stale(timeout=1e9)
+    hb.beat(1)
+    assert not hb.is_stale(timeout=60.0)
+    assert hb.is_stale(timeout=0.0)
+
+
+@pytest.mark.parametrize("content", [
+    "",                                # empty file
+    "{not json",                       # corrupt
+    json.dumps([1, 2, 3]),             # wrong container type
+    json.dumps({"step": 1}),           # foreign schema: no time
+    json.dumps({"step": 1, "time": "yesterday"}),  # wrong time type
+])
+def test_heartbeat_corrupt_or_foreign_degrades_to_no_beat(tmp_path, content):
+    """A corrupt or foreign beacon must read as 'no beat' (stale), never
+    crash the supervisor's liveness loop."""
+    path = tmp_path / "hb.json"
+    path.write_text(content)
+    hb = Heartbeat(path)
+    assert hb.read() is None
+    assert hb.age() == float("inf")
+    assert hb.is_stale(timeout=1e9)
+
+
+def test_heartbeat_missing_file_reads_none(tmp_path):
+    assert Heartbeat(tmp_path / "never_written.json").read() is None
+
+
+# ------------------------------------------------------- StragglerMonitor
+
+
+def _reference_record(times, window, threshold, warmup, duration):
+    """The pre-deque list semantics: median over the window BEFORE append."""
+    flagged = (len(times) >= warmup
+               and duration > threshold * statistics.median(times))
+    times.append(duration)
+    if len(times) > window:
+        times.pop(0)
+    return flagged
+
+
+def test_straggler_deque_matches_list_reference():
+    """The O(1) deque window must flag exactly the same steps as the old
+    O(window) list.pop(0) implementation, including across wrap-around."""
+    window, threshold, warmup = 8, 2.5, 3
+    mon = StragglerMonitor(threshold=threshold, warmup=warmup, window=window)
+    ref_times: list = []
+    durations = [0.1, 0.1, 0.12, 0.5, 0.1, 0.11, 0.09, 1.0, 0.1, 0.1,
+                 0.3, 0.1, 2.0, 0.1, 0.08, 0.1, 0.1, 0.9, 0.1, 0.1]
+    for step, d in enumerate(durations):
+        got = mon.record(step, d)
+        want = _reference_record(ref_times, window, threshold, warmup, d)
+        assert got == want, f"step {step}: deque={got} list={want}"
+        assert list(mon._times) == ref_times
+    assert [s for s, _ in mon.flagged] == [3, 7, 10, 12, 17]
+
+
+def test_straggler_window_is_bounded():
+    mon = StragglerMonitor(window=5)
+    for step in range(100):
+        mon.record(step, 0.1)
+    assert len(mon._times) == 5
+
+
+def test_straggler_warmup_never_flags():
+    mon = StragglerMonitor(threshold=1.1, warmup=5, window=10)
+    for step in range(5):
+        assert not mon.record(step, float(step + 1) * 100.0)
+
+
+def test_straggler_median_drift_stops_flagging_after_ramp():
+    """A PERMANENT step-time increase (batch ramp) must stop being flagged
+    once the window median catches up — within ~window/2 steps — instead of
+    locking in forever."""
+    window = 10
+    mon = StragglerMonitor(threshold=2.0, warmup=3, window=window)
+    for step in range(20):
+        assert not mon.record(step, 0.1)
+    flagged_steps = []
+    for step in range(20, 40):  # 4x ramp, permanently
+        if mon.record(step, 0.4):
+            flagged_steps.append(step)
+    assert flagged_steps, "the ramp's onset should flag"
+    # flagging must stop once half the window is post-ramp samples
+    assert max(flagged_steps) < 20 + window // 2 + 1
+    assert mon.median == pytest.approx(0.4)
+
+
+def test_straggler_median_property():
+    mon = StragglerMonitor(window=4)
+    assert mon.median == 0.0
+    mon.record(0, 0.2)
+    mon.record(1, 0.6)
+    assert mon.median == pytest.approx(0.4)
+
+
+# ------------------------------------------------------------ retry_step
+
+
+def test_retry_step_backoff_sequence(monkeypatch):
+    """Exponential backoff: backoff_s * 2**attempt between failures."""
+    sleeps = []
+    monkeypatch.setattr(time, "sleep", sleeps.append)
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] <= 3:
+            raise RuntimeError("transient")
+        return "ok"
+
+    assert retry_step(flaky, retries=3, backoff_s=0.5)() == "ok"
+    assert sleeps == [0.5, 1.0, 2.0]
+    assert calls["n"] == 4
+
+
+def test_retry_step_exhausts_then_raises():
+    def always_fails():
+        raise ValueError("permanent")
+
+    with pytest.raises(ValueError, match="permanent"):
+        retry_step(always_fails, retries=2)()
+
+
+def test_retry_step_on_retry_callback():
+    attempts = []
+
+    def flaky():
+        if len(attempts) < 2:
+            raise RuntimeError("transient")
+        return 42
+
+    fn = retry_step(flaky, retries=5, on_retry=attempts.append)
+    assert fn() == 42
+    assert attempts == [0, 1]
+
+
+@pytest.mark.parametrize("exc", [SystemExit, KeyboardInterrupt, WorkerKilled])
+def test_retry_step_shutdowns_pass_through(exc):
+    """Deliberate shutdowns — including the chaos layer's WorkerKilled —
+    must escape the retry wrapper untouched, first try."""
+    calls = {"n": 0}
+
+    def dies():
+        calls["n"] += 1
+        raise exc("going down")
+
+    with pytest.raises(exc):
+        retry_step(dies, retries=5)()
+    assert calls["n"] == 1
+
+
+# ----------------------------------------------------- chaos schedule DSL
+
+
+def test_fault_schedule_parse_spec_roundtrip():
+    text = "kill:0@1;straggle:1@2x0.5r3;stall:2@1r2;flaky:0@2n2"
+    sched = FaultSchedule.parse(text)
+    assert sched.spec() == text
+    assert len(sched) == 4
+    kill, strag, stall, flaky = sched
+    assert (kill.kind, kill.worker, kill.round) == ("kill", 0, 1)
+    assert (strag.seconds, strag.rounds) == (0.5, 3)
+    assert stall.rounds == 2
+    assert flaky.times == 2
+
+
+def test_fault_schedule_random_is_seed_deterministic():
+    a = FaultSchedule.random(123, workers=3, rounds=5, n_faults=4)
+    b = FaultSchedule.random(123, workers=3, rounds=5, n_faults=4)
+    c = FaultSchedule.random(124, workers=3, rounds=5, n_faults=4)
+    assert a.faults == b.faults and a.spec() == b.spec()
+    assert a.spec() != c.spec()  # different seed, different script
+    for f in a:
+        assert 0 <= f.worker < 3 and 1 <= f.round < 5
+    # random schedules survive the text round-trip too (seed isn't encoded)
+    assert FaultSchedule.parse(a.spec()).spec() == a.spec()
+
+
+def test_fault_unknown_kind_rejected():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        Fault("meteor", 0, 1)

@@ -1,0 +1,130 @@
+"""Property-based chaos fuzz (hypothesis): random seeded `FaultSchedule`s —
+kills, stragglers, stalled heartbeats, transient step failures, in any
+combination the generator draws — thrown at a supervised fleet, with the
+recovered results asserted BITWISE equal to a cached no-fault oracle on
+every selected backend. The fixed-schedule suite in tests/test_supervisor.py
+pins each fault kind's mechanics; this suite sweeps the combinations
+(kill + flaky on the same worker, two kills in one run, a straggle landing
+during another worker's restore window, ...) that enumerating by hand would
+miss.
+
+Also: schedule generation itself is pure in the seed, and a quiet schedule
+never triggers an eviction.
+
+Importorskip-guarded like the other hypothesis suites; `REPRO_TEST_BACKENDS`
+(comma-separated) restricts the swept backends for the CI backend-matrix
+job. Straggle faults here sleep 0.05s — enough to reorder timing, far below
+the 60s staleness threshold — so the only evictions fuzzed are kill-driven
+(deterministic); timing-threshold evictions get their own deterministic
+tests in test_supervisor.py."""
+import functools
+import os
+
+import jax
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.cleaning import FleetJob, FleetSupervisor, make_scheduler, prepare_session
+from repro.configs.chef_lr import ChefConfig
+from repro.core.backend import BACKENDS, get_backend
+from repro.data import make_dataset
+from repro.dist.chaos import FaultSchedule
+
+_SEL = [b.strip() for b in os.environ.get(
+    "REPRO_TEST_BACKENDS", ",".join(BACKENDS)).split(",") if b.strip()]
+
+CFG = ChefConfig(budget=30, round_size=10, n_epochs=6, batch_size=100,
+                 lr=0.05, l2=0.05)
+N_JOBS = 2
+ROUNDS = CFG.budget // CFG.round_size
+
+
+@functools.lru_cache(maxsize=None)
+def _fleet_ds():
+    return tuple(
+        make_dataset(jax.random.key(7 + i), n_train=300, n_val=64, n_test=64,
+                     feature_dim=24)
+        for i in range(N_JOBS)
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _oracle(backend):
+    """No-fault per-job results, computed once per backend per process."""
+    out = []
+    for ds in _fleet_ds():
+        session = prepare_session(
+            ds, CFG, backend=get_backend(backend, chunk_rows=CFG.score_chunk),
+            selector="increm_tight", constructor="deltagrad")
+        out.append(make_scheduler(session, method="infl",
+                                  selector="increm_tight",
+                                  constructor="deltagrad").run())
+    return out
+
+
+def _schedule(seed):
+    return FaultSchedule.random(seed, workers=N_JOBS, rounds=ROUNDS,
+                                n_faults=2, straggle_s=0.05)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@settings(deadline=None, max_examples=5)
+@given(seed=st.integers(0, 10_000))
+def test_random_schedule_recovery_bitwise(tmp_path_factory, backend, seed):
+    """Any seeded random schedule -> recovered fleet bitwise equal to the
+    no-fault oracle: labels, weights, F1 history, and budget spend."""
+    if backend not in _SEL:
+        pytest.skip(f"{backend} excluded by REPRO_TEST_BACKENDS")
+    chaos = _schedule(seed)
+    workdir = tmp_path_factory.mktemp(f"chaos-{backend}-{seed}")
+    sup = FleetSupervisor(workdir, backend=backend, chaos=chaos,
+                          stale_after_s=60.0, retries=2)
+    results = sup.run([FleetJob(f"job{i}", ds, CFG)
+                       for i, ds in enumerate(_fleet_ds())])
+    for i, want in enumerate(_oracle(backend)):
+        got = results[f"job{i}"]
+        np.testing.assert_array_equal(np.asarray(got.dataset.cleaned),
+                                      np.asarray(want.dataset.cleaned))
+        np.testing.assert_array_equal(np.asarray(got.dataset.y_prob),
+                                      np.asarray(want.dataset.y_prob))
+        np.testing.assert_array_equal(np.asarray(got.dataset.y_weight),
+                                      np.asarray(want.dataset.y_weight))
+        np.testing.assert_array_equal(np.asarray(got.w), np.asarray(want.w))
+        assert [r.f1_val for r in got.history] == \
+            [r.f1_val for r in want.history]
+        assert [r.n_cleaned_total for r in got.history] == \
+            [r.n_cleaned_total for r in want.history]
+    # every injected kill produced exactly one eviction (dead-thread path)
+    kills = [e for e in sup.injector.trace if e[0] == "kill"]
+    dead_evicts = [e for e in sup.trace if e[0] == "evict" and e[2] == "dead"]
+    assert len(dead_evicts) == len(kills)
+
+
+@settings(deadline=None, max_examples=20)
+@given(seed=st.integers(0, 10_000))
+def test_random_schedule_is_pure_in_seed(seed):
+    a, b = _schedule(seed), _schedule(seed)
+    assert a.faults == b.faults
+    for f in a:
+        assert 0 <= f.worker < N_JOBS and 1 <= f.round < ROUNDS
+
+
+@settings(deadline=None, max_examples=3)
+@given(seed=st.integers(0, 10_000))
+def test_quiet_schedule_never_evicts_healthy_workers(tmp_path_factory, seed):
+    """Empty schedule, randomized checkpoint workdir: no worker is ever
+    evicted and no restore happens — the supervisor's thresholds do not
+    false-positive on ordinary scheduling noise."""
+    workdir = tmp_path_factory.mktemp(f"quiet-{seed}")
+    sup = FleetSupervisor(workdir, backend="reference", chaos=FaultSchedule(),
+                          stale_after_s=60.0,
+                          straggler_threshold=5.0, straggler_patience=3)
+    results = sup.run([FleetJob(f"job{i}", ds, CFG)
+                       for i, ds in enumerate(_fleet_ds())])
+    assert sup.trace == []
+    for i, want in enumerate(_oracle("reference")):
+        np.testing.assert_array_equal(
+            np.asarray(results[f"job{i}"].w), np.asarray(want.w))

@@ -1,0 +1,279 @@
+"""Fleet supervisor + chaos contract tests.
+
+The load-bearing guarantee: a cleaning fleet that loses workers to injected
+kills, stragglers, stalled heartbeats, and transient step failures — with the
+mesh rebuilt and every session elastically restored mid-round — produces
+final labels, weights, F1 history, and budget ledger BITWISE identical to an
+unfailed run, on every backend. Faults move timing and control flow; results
+never move. Plus: same chaos seed -> same schedule -> same eviction/restore
+trace, no evictions under a quiet schedule, and the `--chaos` CLI.
+
+`REPRO_TEST_BACKENDS` (comma-separated) restricts which backends the
+parametrized parity tests run on (CI shards this way).
+"""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.cleaning import FleetJob, FleetSupervisor, make_scheduler, prepare_session
+from repro.configs.chef_lr import ChefConfig
+from repro.core.backend import BACKENDS, get_backend
+from repro.data import make_dataset
+from repro.dist.chaos import ChaosInjector, FaultSchedule
+
+_SEL = [b.strip() for b in os.environ.get(
+    "REPRO_TEST_BACKENDS", ",".join(BACKENDS)).split(",") if b.strip()]
+
+
+def _require_selected(backend):
+    if backend not in _SEL:
+        pytest.skip(f"{backend} excluded by REPRO_TEST_BACKENDS")
+
+
+CFG = ChefConfig(budget=30, round_size=10, n_epochs=6, batch_size=100,
+                 lr=0.05, l2=0.05)
+
+
+@pytest.fixture(scope="module")
+def fleet_ds():
+    return [
+        make_dataset(jax.random.key(7), n_train=300, n_val=64, n_test=64,
+                     feature_dim=24),
+        make_dataset(jax.random.key(8), n_train=300, n_val=64, n_test=64,
+                     feature_dim=24),
+    ]
+
+
+def _oracle(ds, cfg, backend):
+    """The unfailed, unsupervised run every recovery must match bitwise."""
+    session = prepare_session(ds, cfg, backend=get_backend(
+        backend, chunk_rows=cfg.score_chunk), selector="increm_tight",
+        constructor="deltagrad")
+    return make_scheduler(session, method="infl", selector="increm_tight",
+                          constructor="deltagrad").run()
+
+
+def _assert_bitwise(got, want):
+    np.testing.assert_array_equal(np.asarray(got.dataset.cleaned),
+                                  np.asarray(want.dataset.cleaned))
+    np.testing.assert_array_equal(np.asarray(got.dataset.y_prob),
+                                  np.asarray(want.dataset.y_prob))
+    np.testing.assert_array_equal(np.asarray(got.dataset.y_weight),
+                                  np.asarray(want.dataset.y_weight))
+    np.testing.assert_array_equal(np.asarray(got.w), np.asarray(want.w))
+    assert [r.f1_val for r in got.history] == [r.f1_val for r in want.history]
+    assert [r.n_cleaned_total for r in got.history] == \
+        [r.n_cleaned_total for r in want.history]
+
+
+def _run_fleet(tmp_path, fleet_ds, cfg, backend, chaos, **kw):
+    # Default straggler thresholds far above machine-load noise: tests that
+    # target OTHER fault kinds must not pick up organic straggler evictions
+    # on a loaded box (the straggler/quiet tests pass realistic thresholds
+    # explicitly).
+    sup = FleetSupervisor(tmp_path, backend=backend, chaos=chaos,
+                          stale_after_s=kw.pop("stale_after_s", 60.0),
+                          straggler_threshold=kw.pop("straggler_threshold",
+                                                     100.0),
+                          straggler_patience=kw.pop("straggler_patience", 10),
+                          **kw)
+    jobs = [FleetJob(f"job{i}", ds, cfg) for i, ds in enumerate(fleet_ds)]
+    return sup.run(jobs), sup
+
+
+# ----------------------------------------------------- bitwise recovery
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_kill_mid_round_recovery_bitwise(tmp_path, fleet_ds, backend):
+    """Kill worker 0 mid-run: the supervisor notices the dead thread,
+    shrinks the mesh, elastically restores every session from its last
+    committed round, and the recovered fleet matches the unfailed run
+    bitwise."""
+    _require_selected(backend)
+    oracle = [_oracle(ds, CFG, backend) for ds in fleet_ds]
+    results, sup = _run_fleet(tmp_path, fleet_ds, CFG, backend,
+                              FaultSchedule.parse("kill:0@1"))
+    assert ("kill", 0, 1) in sup.injector.trace
+    evicts = [e for e in sup.trace if e[0] == "evict"]
+    assert evicts == [("evict", 0, "dead", 1)]
+    assert ("restore", 0, 1) in sup.trace
+    assert any(e[0] == "resize" for e in sup.trace)
+    for i in range(len(fleet_ds)):
+        _assert_bitwise(results[f"job{i}"], oracle[i])
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_transient_step_failures_retried_in_place(tmp_path, fleet_ds, backend):
+    """Injected transient failures are absorbed by the scheduler's retry
+    wrapper exactly like real ones: no eviction, no restore, results
+    bitwise."""
+    _require_selected(backend)
+    oracle = [_oracle(ds, CFG, backend) for ds in fleet_ds]
+    results, sup = _run_fleet(tmp_path, fleet_ds, CFG, backend,
+                              FaultSchedule.parse("flaky:0@1n2;flaky:1@2"),
+                              retries=2)
+    flaky = [e for e in sup.injector.trace if e[0] == "flaky"]
+    assert sorted(flaky) == [("flaky", 0, 1, 1), ("flaky", 0, 1, 2),
+                             ("flaky", 1, 2, 1)]
+    assert sup.trace == []  # retried in place: the supervisor never acted
+    for i in range(len(fleet_ds)):
+        _assert_bitwise(results[f"job{i}"], oracle[i])
+
+
+def test_straggler_eviction_resize_bitwise(tmp_path, fleet_ds):
+    """A persistently slow worker is flagged by its own monitor, evicted,
+    and its job restored onto the shrunken mesh — results bitwise. (The
+    4s injected straggle dominates any baseline round-time noise; the
+    eviction ROUND is timing-dependent, so only occurrence is asserted.)"""
+    cfg = ChefConfig(budget=60, round_size=10, n_epochs=6, batch_size=100,
+                     lr=0.05, l2=0.05)
+    oracle = [_oracle(ds, cfg, "reference") for ds in fleet_ds]
+    results, sup = _run_fleet(
+        tmp_path, fleet_ds, cfg, "reference",
+        FaultSchedule.parse("straggle:0@3x4"),
+        straggler_threshold=1.8, straggler_warmup=2, straggler_patience=1)
+    assert any(e[0] == "straggle" for e in sup.injector.trace)
+    assert any(e[:3] == ("evict", 0, "straggler") for e in sup.trace)
+    assert any(e[0] == "resize" for e in sup.trace)
+    for i in range(len(fleet_ds)):
+        _assert_bitwise(results[f"job{i}"], oracle[i])
+
+
+def test_stalled_heartbeat_evicts_live_worker_bitwise(tmp_path, fleet_ds):
+    """A worker whose heartbeat goes dark (but whose thread keeps computing)
+    reads as stale and is evicted; recovery is still bitwise — the eviction
+    was spurious from the worker's point of view, which is exactly why
+    restore must be lossless."""
+    cfg = ChefConfig(budget=60, round_size=10, n_epochs=6, batch_size=100,
+                     lr=0.05, l2=0.05)
+    oracle = [_oracle(ds, cfg, "reference") for ds in fleet_ds]
+    results, sup = _run_fleet(tmp_path, fleet_ds, cfg, "reference",
+                              FaultSchedule.parse("stall:1@2r4"),
+                              stale_after_s=1.0, poll_interval_s=0.05)
+    assert any(e[0] == "stall" for e in sup.injector.trace)
+    assert any(e[0] == "evict" and e[2] == "stale" for e in sup.trace)
+    for i in range(len(fleet_ds)):
+        _assert_bitwise(results[f"job{i}"], oracle[i])
+
+
+# ------------------------------------------------------------ determinism
+
+
+def _pin_trace(trace):
+    """Project a supervisor trace onto its seed-deterministic core.
+
+    Eviction and resize events are pinned by the schedule (a kill at round
+    k dies at round k, every time). A restore's FROM-step is pinned only
+    for the evicted worker; a healthy co-resident caught by the resize
+    barrier restores from however many rounds it happened to commit before
+    the barrier — pure wall-clock interleaving — so restore steps are
+    dropped and only the (event, worker) identity is kept.
+    """
+    return [e[:2] if e[0] == "restore" else e for e in trace]
+
+
+def test_same_seed_same_schedule_same_trace(tmp_path, fleet_ds):
+    """The reproducibility contract: one seed pins the schedule, the
+    injected-event trace, the supervisor's eviction/resize/restore trace
+    (modulo timing-dependent restore steps of healthy co-workers), and
+    (bitwise) the results."""
+    sched_a = FaultSchedule.random(42, workers=2, rounds=3,
+                                   kinds=("kill", "flaky"))
+    sched_b = FaultSchedule.random(42, workers=2, rounds=3,
+                                   kinds=("kill", "flaky"))
+    assert sched_a.spec() == sched_b.spec()
+    res_a, sup_a = _run_fleet(tmp_path / "a", fleet_ds, CFG, "reference",
+                              sched_a)
+    res_b, sup_b = _run_fleet(tmp_path / "b", fleet_ds, CFG, "reference",
+                              sched_b)
+    # injector order across concurrent workers may interleave; per-worker
+    # order is deterministic, so compare sorted
+    assert sorted(sup_a.injector.trace) == sorted(sup_b.injector.trace)
+    assert _pin_trace(sup_a.trace) == _pin_trace(sup_b.trace)
+    for name in res_a:
+        _assert_bitwise(res_a[name], res_b[name])
+
+
+def test_quiet_schedule_never_evicts(tmp_path, fleet_ds):
+    """With no faults injected, healthy workers are never evicted — the
+    supervisor's liveness thresholds must not false-positive on ordinary
+    round-time noise."""
+    results, sup = _run_fleet(tmp_path, fleet_ds, CFG, "reference",
+                              FaultSchedule(),
+                              straggler_threshold=5.0, straggler_patience=3)
+    assert sup.trace == []
+    assert sup.injector.trace == []
+    oracle = [_oracle(ds, CFG, "reference") for ds in fleet_ds]
+    for i in range(len(fleet_ds)):
+        _assert_bitwise(results[f"job{i}"], oracle[i])
+
+
+def test_injector_fault_fires_once_across_restarts():
+    """A kill consumed at round k must NOT re-fire when the restored worker
+    replays round k (the one-shot marker is injector-global, not
+    per-incarnation)."""
+    inj = ChaosInjector(FaultSchedule.parse("kill:0@1"))
+    with pytest.raises(SystemExit):
+        inj.before_step(0, 1)
+    inj.before_step(0, 1)  # the restarted worker replays round 1: no fire
+    assert inj.trace == [("kill", 0, 1)]
+
+
+def test_injector_flaky_burns_before_kill():
+    """When a flaky and a kill target the same (worker, round), the
+    transient failures burn through the retry budget first; the kill stays
+    armed for a later attempt."""
+    from repro.dist.chaos import ChaosTransientError
+
+    inj = ChaosInjector(FaultSchedule.parse("flaky:0@1;kill:0@1"))
+    with pytest.raises(ChaosTransientError):
+        inj.before_step(0, 1)
+    with pytest.raises(SystemExit):
+        inj.before_step(0, 1)
+    assert [e[0] for e in inj.trace] == ["flaky", "kill"]
+
+
+def test_injector_stall_suppresses_beats(tmp_path):
+    from repro.dist.fault import Heartbeat
+
+    inj = ChaosInjector(FaultSchedule.parse("stall:0@2r2"))
+    hb = inj.wrap_heartbeat(Heartbeat(tmp_path / "hb.json"), worker=0)
+    hb.beat(1)
+    assert hb.read()["step"] == 1
+    hb.beat(2)
+    hb.beat(3)
+    assert hb.read()["step"] == 1  # stalled rounds 2-3 never landed
+    hb.beat(4)
+    assert hb.read()["step"] == 4
+    assert [e[0] for e in inj.trace] == ["stall", "stall"]
+
+
+# -------------------------------------------------------------------- CLI
+
+
+def test_clean_cli_smoke(tmp_path):
+    """`python -m repro.launch.clean --chaos ... --verify` end to end: the
+    CLI's own bitwise oracle check passes and the summary reports the
+    injected faults."""
+    from repro.launch.clean import main
+
+    out = main(["--jobs", "2", "--budget", "20", "--chaos", "kill:0@1",
+                "--workdir", str(tmp_path), "--verify"])
+    assert out["verified"] is True
+    assert out["chaos"] == "kill:0@1"
+    assert ("kill", 0, 1) in [tuple(e) for e in out["injected"]]
+    assert len(out["jobs"]) == 2
+    assert all(j["rounds"] == 2 for j in out["jobs"].values())
+
+
+def test_clean_cli_seeded_chaos(tmp_path):
+    from repro.launch.clean import parse_chaos
+
+    a = parse_chaos("seed:5", workers=2, rounds=3)
+    b = parse_chaos("seed:5", workers=2, rounds=3)
+    assert a.spec() == b.spec() and a.seed == 5
+    explicit = parse_chaos("kill:1@2", workers=2, rounds=3)
+    assert explicit.spec() == "kill:1@2"

@@ -1,0 +1,158 @@
+"""Unit tests for the CI gate scripts in tools/.
+
+Both scripts guard every PR (bench regression warnings, docstring
+coverage), but until now were themselves untested beyond smoke imports —
+a broken walker would silently pass CI. These tests pin the behaviours CI
+depends on: backends-keyed section discovery, warn-and-skip on baselines
+that predate a section, the >threshold warning and --strict exit, and the
+docstring checker's public-symbol rules.
+"""
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "tools"))
+
+import check_bench_regression as cbr  # noqa: E402
+import check_docstrings as cds  # noqa: E402
+
+# ------------------------------------------------- check_bench_regression
+
+
+def _record(rate=100.0, scenario_rate=50.0):
+    return {
+        "backends": {
+            "reference": {"score_rows_per_s": rate, "irrelevant": 1.0},
+            "pallas": {"score_rows_per_s": rate * 2},
+        },
+        "recovery": {
+            "backends": {"reference": {"cleaned_rows_per_s": scenario_rate,
+                                       "eviction_latency_s": 0.2}},
+        },
+        "meta": {"rounds": 3},  # no backends dict: not a section
+    }
+
+
+def test_sections_discovers_top_level_and_scenarios():
+    secs = cbr._sections(_record())
+    assert set(secs) == {"", "recovery/"}
+    assert "reference" in secs[""] and "reference" in secs["recovery/"]
+
+
+def test_sections_ignores_non_backend_values():
+    assert cbr._sections({"meta": {"rounds": 3}, "wall_s": 1.0}) == {}
+
+
+def test_is_rate_gates_metrics():
+    assert cbr._is_rate("score_rows_per_s")
+    assert cbr._is_rate("decode_tok_per_s")
+    assert cbr._is_rate("hit_rate")  # _EXTRA_METRICS
+    assert not cbr._is_rate("eviction_latency_s")  # informational, not gated
+    assert not cbr._is_rate("wall_s")
+
+
+def test_compare_flags_regression_beyond_threshold():
+    base, cur = _record(rate=100.0), _record(rate=70.0)
+    regs = cbr.compare(cur, base, warn_pct=20.0)
+    names = {(n, m) for n, m, *_ in regs}
+    assert ("reference", "score_rows_per_s") in names
+    assert ("pallas", "score_rows_per_s") in names
+    # the 30% drop is reported as a negative pct change
+    pct = next(p for n, m, c, b, p in regs if n == "reference")
+    assert pct == pytest.approx(-30.0)
+
+
+def test_compare_within_threshold_is_quiet():
+    assert cbr.compare(_record(rate=95.0), _record(rate=100.0),
+                       warn_pct=20.0) == []
+
+
+def test_compare_improvement_never_flags():
+    assert cbr.compare(_record(rate=500.0), _record(rate=100.0),
+                       warn_pct=20.0) == []
+
+
+def test_compare_missing_baseline_section_warns_and_skips(capsys):
+    """A baseline that predates a scenario section must warn-skip, never
+    KeyError — the first run after adding a scenario cannot break CI."""
+    baseline = {"backends": {"reference": {"score_rows_per_s": 100.0}}}
+    regs = cbr.compare(_record(rate=1.0), baseline, warn_pct=20.0)
+    out = capsys.readouterr().out
+    assert "::warning" in out and "recovery/" in out
+    # the shared top-level section still compared: the 99% drop flags
+    assert any(n == "reference" and m == "score_rows_per_s"
+               for n, m, *_ in regs)
+
+
+def test_compare_missing_backend_or_metric_notes_and_skips(capsys):
+    base = {"backends": {
+        "reference": {"score_rows_per_s": 100.0},
+        "pallas_sharded": {"score_rows_per_s": 100.0},  # not in current
+    }}
+    cur = {"backends": {"reference": {}}}  # metric missing from current
+    base2 = {"backends": {"reference": {"score_rows_per_s": 0.0}}}  # zero base
+    assert cbr.compare(cur, base, warn_pct=20.0) == []
+    assert cbr.compare(cur, base2, warn_pct=20.0) == []
+    out = capsys.readouterr().out
+    assert "note:" in out
+
+
+def test_main_default_warns_strict_fails(tmp_path, capsys):
+    cur, base = tmp_path / "cur.json", tmp_path / "base.json"
+    cur.write_text(json.dumps(_record(rate=10.0)))
+    base.write_text(json.dumps(_record(rate=100.0)))
+    assert cbr.main([str(cur), str(base)]) == 0  # default: warn only
+    assert "::warning" in capsys.readouterr().out
+    assert cbr.main([str(cur), str(base), "--strict"]) == 1
+    cur.write_text(json.dumps(_record(rate=100.0)))
+    assert cbr.main([str(cur), str(base), "--strict"]) == 0
+
+
+# ------------------------------------------------------- check_docstrings
+
+
+def _write(tmp_path, source):
+    p = tmp_path / "mod.py"
+    p.write_text(source)
+    return p
+
+
+def test_docstrings_clean_module_passes(tmp_path):
+    p = _write(tmp_path, '"""mod."""\n\ndef f():\n    """doc."""\n')
+    assert cds.check_file(p) == []
+
+
+def test_docstrings_missing_symbols_reported(tmp_path):
+    p = _write(tmp_path, (
+        "def f():\n    pass\n\n"
+        "class C:\n"
+        '    """doc."""\n'
+        "    def m(self):\n        pass\n"
+        "    def _private(self):\n        pass\n"
+    ))
+    assert cds.check_file(p) == ["<module>", "f", "C.m"]
+
+
+def test_docstrings_private_symbols_exempt(tmp_path):
+    p = _write(tmp_path, '"""mod."""\n\ndef _helper():\n    pass\n')
+    assert cds.check_file(p) == []
+
+
+def test_docstrings_main_exit_codes(tmp_path, capsys):
+    good = _write(tmp_path, '"""mod."""\n')
+    assert cds.main([str(good)]) == 0
+    bad = tmp_path / "bad.py"
+    bad.write_text("def f():\n    pass\n")
+    assert cds.main([str(bad)]) == 1
+    assert "undocumented" in capsys.readouterr().out
+
+
+def test_docstrings_covered_list_includes_fault_stack():
+    """The new fleet/fault modules are part of the enforced surface (the
+    COVERED list grows, never shrinks)."""
+    for mod in ("src/repro/dist/fault.py", "src/repro/dist/chaos.py",
+                "src/repro/cleaning/supervisor.py",
+                "src/repro/launch/clean.py"):
+        assert mod in cds.COVERED, mod
