@@ -25,6 +25,7 @@ import os
 import shutil
 import threading
 import time
+import uuid
 from pathlib import Path
 from typing import Any, Optional
 
@@ -44,9 +45,14 @@ def _flatten(tree):
 def save_checkpoint(ckpt_dir, step: int, tree: Any, *, host_id: int = 0) -> Path:
     ckpt_dir = Path(ckpt_dir)
     final = ckpt_dir / f"step_{step:08d}"
-    tmp = ckpt_dir / f".tmp_step_{step:08d}_{os.getpid()}"
-    if tmp.exists():
-        shutil.rmtree(tmp)
+    # tmp key must be unique per WRITER, not per process: two supervisor
+    # worker threads sharing one process and one ckpt_dir would otherwise
+    # collide on the same .tmp_* path and commit torn checkpoints. The uuid
+    # also means we never inherit (or delete) a tmp some other in-flight
+    # writer created — stale tmps from killed runs are swept only when their
+    # step commits (rename replaces) or by outside cleanup, never raced.
+    tmp = ckpt_dir / (f".tmp_step_{step:08d}_{os.getpid()}"
+                      f"_{threading.get_ident()}_{uuid.uuid4().hex}")
     tmp.mkdir(parents=True)
     leaves, paths, _ = _flatten(tree)
     arrays = {}
@@ -57,15 +63,29 @@ def save_checkpoint(ckpt_dir, step: int, tree: Any, *, host_id: int = 0) -> Path
         meta.append(
             {"path": path, "shape": list(np.shape(leaf)), "dtype": str(arr.dtype)}
         )
-    np.savez(tmp / f"shard_h{host_id}.npz", **arrays)
+    shard_name = f"shard_h{host_id}.npz"
+    np.savez(tmp / shard_name, **arrays)
     (tmp / "manifest.json").write_text(
-        json.dumps({"step": step, "leaves": meta, "n_hosts": 1})
+        json.dumps({"step": step, "leaves": meta, "n_hosts": 1,
+                    "shards": [shard_name]})
     )
     (tmp / "COMMIT").write_text(str(time.time()))
-    if final.exists():
-        shutil.rmtree(final)
-    tmp.rename(final)
-    return final
+    # commit: a plain "rmtree(final); rename" is not atomic between two
+    # writers of the same step — one writer's rename can land between the
+    # other's rmtree and rename, failing with ENOTEMPTY. Move any existing
+    # winner aside to a unique trash name first (rename is atomic), then
+    # retry; last committer wins and every writer returns a complete dir.
+    while True:
+        try:
+            tmp.rename(final)
+            return final
+        except OSError:
+            trash = ckpt_dir / f".trash_{final.name}_{uuid.uuid4().hex}"
+            try:
+                final.rename(trash)
+            except FileNotFoundError:
+                continue  # another writer moved it first; retry our rename
+            shutil.rmtree(trash, ignore_errors=True)
 
 
 def latest_step(ckpt_dir) -> Optional[int]:
@@ -97,7 +117,17 @@ def restore_checkpoint(ckpt_dir, tree_like: Any, step: Optional[int] = None,
     d = ckpt_dir / f"step_{step:08d}"
     if not (d / "COMMIT").exists():
         raise FileNotFoundError(f"checkpoint {d} has no COMMIT marker")
-    data = np.load(d / "shard_h0.npz")
+    # restore the manifest-declared shard(s): a checkpoint saved with
+    # host_id != 0 was previously committed but unrestorable because this
+    # path hardcoded shard_h0.npz. Manifests written before the "shards"
+    # field keep the old default.
+    manifest = json.loads((d / "manifest.json").read_text())
+    shards = manifest.get("shards", ["shard_h0.npz"])
+    if len(shards) != 1:
+        raise NotImplementedError(
+            f"multi-shard restore not supported yet (manifest declares "
+            f"{shards})")
+    data = np.load(d / shards[0])
     leaves_like, _, treedef = _flatten(tree_like)
     leaves = []
     sh_leaves = (

@@ -368,6 +368,36 @@ class Backend:
             pos.astype(jnp.int32))
         return ops.paged_decode_finish(m, l, acc, q)
 
+    def quant_paged_decode_attention(self, q, k_pages, v_pages, k_scale,
+                                     v_scale, pages, pos, spec) -> jax.Array:
+        """`paged_decode_attention` over the int8 page pool: k_pages /
+        v_pages are [N_pages, P, Hkv, D] int8 codes and k_scale / v_scale
+        [N_pages, Hkv] f32 per-(page, head) scales
+        (repro.models.attention.QuantPagedKVCache). The kernel streams each
+        page's codes plus its (1, 1) scale block and dequantizes in-VMEM
+        via the shared `_dequant_page` cell — KV crosses HBM at half the
+        bf16 byte count and no dense f32 copy ever exists.
+
+        Bit-identical across backends, same split structure as the bf16 op:
+        the shard_map (pools head-sharded by page_pool_spec, scales by
+        page_scale_spec — same divisibility rule, so the pair can never
+        shard inconsistently) covers only the per-page partials, and the
+        shared `combine_pages` merge runs here in the caller's context."""
+        from repro.kernels import ops
+
+        if self.name == "reference":
+            return ops.quant_paged_decode_attention_ref(
+                q, k_pages, v_pages, k_scale, v_scale, pages, pos, spec)
+        if self.name == "pallas" or not self._model_axis_divides(
+                k_pages.shape[2]):
+            return ops.quant_paged_decode_attention(
+                q, k_pages, v_pages, k_scale, v_scale, pages, pos, spec)
+        m, l, acc = _cached_sharded(self, "quant_paged_decode_attention",
+                                    spec)(
+            q, k_pages, v_pages, k_scale, v_scale, pages.astype(jnp.int32),
+            pos.astype(jnp.int32))
+        return ops.paged_decode_finish(m, l, acc, q)
+
     def chunked_prefill(self, q, k, v, qpos, kpos, spec,
                         chunk: int) -> jax.Array:
         """Chunked (memory-efficient) prefill attention: same signature and
@@ -457,6 +487,21 @@ class Backend:
         return NamedSharding(self.mesh,
                              page_pool_spec(self.mesh, shape, head_axis))
 
+    def page_scale_sharding(self, shape, head_axis: int):
+        """NamedSharding for one int8 page-pool SCALE leaf ([N_pages, Hkv]
+        f32; kv heads — the last axis — over the mesh `model` axis in
+        lockstep with the code pools; rule:
+        repro.dist.sharding.page_scale_spec), or None on unsharded
+        backends."""
+        if self.name != "pallas_sharded":
+            return None
+        from jax.sharding import NamedSharding
+
+        from repro.dist.sharding import page_scale_spec
+
+        return NamedSharding(self.mesh,
+                             page_scale_spec(self.mesh, shape, head_axis))
+
     def shard_kv_cache(self, cache):
         """Outside-jit committed placement of a serving cache pytree: every
         KVCache / QuantKVCache / PagedKVCache leaf goes head-sharded over
@@ -472,7 +517,7 @@ class Backend:
         if self.name != "pallas_sharded" or cache is None:
             return cache
         from repro.models.attention import (KVCache, PagedKVCache,
-                                            QuantKVCache)
+                                            QuantKVCache, QuantPagedKVCache)
 
         def put(x, head_axis):
             return jax.device_put(x, self.kv_cache_sharding(x.shape, head_axis))
@@ -481,7 +526,15 @@ class Backend:
             return jax.device_put(
                 x, self.page_pool_sharding(x.shape, x.ndim - 2))
 
+        def sput(x):
+            return jax.device_put(
+                x, self.page_scale_sharding(x.shape, x.ndim - 1))
+
         def walk(node):
+            if isinstance(node, QuantPagedKVCache):
+                return QuantPagedKVCache(
+                    pput(node.k), pput(node.v),
+                    sput(node.k_scale), sput(node.v_scale))
             if isinstance(node, QuantKVCache):
                 return QuantKVCache(
                     put(node.k, node.k.ndim - 2), put(node.v, node.v.ndim - 2),
@@ -656,8 +709,9 @@ class Backend:
         row1 = Pspec(lead)
 
         if op in ("flash_attention", "decode_attention",
-                  "paged_decode_attention", "chunked_prefill",
-                  "local_attention", "block_sparse_attention"):
+                  "paged_decode_attention", "quant_paged_decode_attention",
+                  "chunked_prefill", "local_attention",
+                  "block_sparse_attention"):
             # serving ops shard the HEAD axis over `model` (not the data
             # axes): each device runs the unsharded kernel on its own
             # Hkv/m kv heads — exact, attention is per-head independent.
@@ -722,6 +776,22 @@ class Backend:
                 return shard_map_compat(
                     local, self.mesh,
                     (heads4, heads4, heads4, Pspec(None, None), Pspec(None)),
+                    (part4, part4, part5))
+            if op == "quant_paged_decode_attention":
+                # same partials-only split as the bf16 paged op; the int8
+                # code pools shard like the bf16 pools (heads on axis 2) and
+                # the [N_pages, Hkv] scale arrays shard their LAST axis in
+                # lockstep (rule: repro.dist.sharding.page_scale_spec)
+                scale2 = Pspec(None, "model")
+
+                def local(qq, kk, vv, ks, vs, pt, ps):
+                    return ops.quant_paged_decode_partials(
+                        qq, kk, vv, ks, vs, pt, ps, static)
+
+                return shard_map_compat(
+                    local, self.mesh,
+                    (heads4, heads4, heads4, scale2, scale2,
+                     Pspec(None, None), Pspec(None)),
                     (part4, part4, part5))
 
             def local(qq, kk, vv, vm):

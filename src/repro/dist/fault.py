@@ -11,7 +11,9 @@ from __future__ import annotations
 import json
 import os
 import statistics
+import threading
 import time
+import uuid
 from collections import deque
 from pathlib import Path
 from typing import Callable, Optional
@@ -27,7 +29,13 @@ class Heartbeat:
 
     def beat(self, step: int) -> None:
         """Atomically rewrite the beacon with (step, now, host)."""
-        tmp = self.path.with_name(self.path.name + f".tmp{os.getpid()}")
+        # unique per WRITER, not per process: concurrent beacons from
+        # supervisor worker threads in one process raced on one .tmpPID
+        # file, so a replace could publish a half-written (or deleted)
+        # record. (pid, thread-id, uuid) can never collide.
+        tmp = self.path.with_name(
+            self.path.name + f".tmp{os.getpid()}_{threading.get_ident()}"
+            f"_{uuid.uuid4().hex}")
         tmp.write_text(json.dumps(
             {"step": int(step), "time": time.time(), "host": self.host_id}
         ))

@@ -131,6 +131,18 @@ def page_pool_spec(mesh, shape: Sequence[int], head_axis: int) -> P:
     return kv_cache_spec(mesh, shape, head_axis)
 
 
+def page_scale_spec(mesh, shape: Sequence[int], head_axis: int) -> P:
+    """Sharding rule for the int8 page pool's per-(page, head) scale arrays
+    ([N_pages, Hkv], possibly with a stacked leading layers dim): shard the
+    kv-head axis — here the LAST dimension — over the mesh `model` axis, in
+    lockstep with `page_pool_spec` on the code pools. Each device then holds
+    exactly the scale columns of the head slices it streams, and the quant
+    kernel's (1, 1) scale blocks stay local to the shard. Same divisibility
+    fallback as the rulebook (a head count that does not split resolves the
+    POOL to replicated too, so the pair can never shard inconsistently)."""
+    return kv_cache_spec(mesh, shape, head_axis)
+
+
 def attn_activation_spec() -> P:
     """shard_map spec for serving attention activations in MODEL layout
     ([B, S, H, D], heads on axis 2): heads split over the mesh `model` axis.

@@ -35,6 +35,8 @@ from repro.kernels.infl_scores import infl_scores_pallas
 from repro.kernels.paged_attention import (
     combine_pages,
     paged_attention_partials_pallas,
+    paged_attention_partials_quant_pallas,
+    paged_attention_partials_quant_reference,
     paged_attention_partials_reference,
 )
 from repro.kernels.lr_grad import lr_grad_pallas
@@ -473,4 +475,58 @@ def paged_decode_attention_ref(q, k_pages, v_pages, pages, pos, spec):
     m, l, acc = paged_attention_partials_reference(
         qg, k_pages, v_pages, pages.astype(jnp.int32), pos.astype(jnp.int32),
         window=spec.window, softcap=spec.logit_softcap)
+    return paged_decode_finish(m, l, acc, q)
+
+
+def quant_paged_decode_partials(q, k_pages, v_pages, k_scale, v_scale,
+                                pages, pos, spec):
+    """Kernel half of the int8 paged decode op: per-page partials from the
+    quantized page-streaming kernel (`paged_attention_partials_quant_pallas`
+    — one [P, D] int8 block + one (1, 1) scale block per grid step,
+    dequantized in-VMEM by the shared `_dequant_page` cell). Split from the
+    merge for the same caller-context reason as `paged_decode_partials`.
+    On TPU the code pools pad D to 128 lanes with ZERO codes — a zero code
+    dequantizes to exactly 0.0 under any scale, so padding stays a no-op —
+    while the scale arrays are never padded (the head axis is gridded, not
+    blocked)."""
+    B, _, Hq, D = q.shape
+    qg, G = _paged_layout(q, k_pages)
+    pages = pages.astype(jnp.int32)
+    pos = pos.astype(jnp.int32)
+    if _interpret():
+        return paged_attention_partials_quant_pallas(
+            qg, k_pages, v_pages, k_scale, v_scale, pages, pos,
+            window=spec.window, softcap=spec.logit_softcap, interpret=True)
+    assert k_pages.shape[1] % 8 == 0, "TPU paged cache needs page_size % 8 == 0"
+    scale = D**-0.5
+    qp = _pad_dim(_pad_dim(qg, 2, 8), 3, 128)
+    kp = _pad_dim(k_pages, 3, 128)
+    vp = _pad_dim(v_pages, 3, 128)
+    return paged_attention_partials_quant_pallas(
+        qp, kp, vp, k_scale, v_scale, pages, pos, window=spec.window,
+        softcap=spec.logit_softcap, scale=scale, interpret=False)
+
+
+def quant_paged_decode_attention(q, k_pages, v_pages, k_scale, v_scale,
+                                 pages, pos, spec):
+    """Fused int8 paged decode attention: `paged_decode_attention` with the
+    page pool held as int8 codes + per-(page, head) f32 scales
+    (`repro.models.attention.QuantPagedKVCache`). Same split structure —
+    quantized partials, then the SHARED `combine_pages` merge in the
+    caller's context — so the three-backend bitwise contract carries over
+    unchanged."""
+    m, l, acc = quant_paged_decode_partials(q, k_pages, v_pages, k_scale,
+                                            v_scale, pages, pos, spec)
+    return paged_decode_finish(m, l, acc, q)
+
+
+def quant_paged_decode_attention_ref(q, k_pages, v_pages, k_scale, v_scale,
+                                     pages, pos, spec):
+    """Reference-backend form of `quant_paged_decode_attention`: the mapped
+    quant mirror (same `_dequant_page` + `_page_partial` cells) plus the
+    SAME `combine_pages` merge (bit-identical to the kernel)."""
+    qg, _ = _paged_layout(q, k_pages)
+    m, l, acc = paged_attention_partials_quant_reference(
+        qg, k_pages, v_pages, k_scale, v_scale, pages.astype(jnp.int32),
+        pos.astype(jnp.int32), window=spec.window, softcap=spec.logit_softcap)
     return paged_decode_finish(m, l, acc, q)

@@ -94,6 +94,15 @@ def _page_partial(q, k, v, kpos, pos_b, *, scale: float, window: int,
     return m, l, acc
 
 
+def _dequant_page(codes, scale):
+    """Dequantize ONE page of one kv head: int8 codes [P, D] + scalar f32
+    page scale -> f32 [P, D]. Shared verbatim by the int8 kernel body and
+    the mapped reference (int8 -> f32 is exact and the scalar broadcast
+    multiply is elementwise, so the cell is bitwise in any context) — the
+    quantized op's half of kernel parity rule 1."""
+    return codes.astype(jnp.float32) * scale
+
+
 def combine_pages(m, l, acc):
     """Merge per-page partial softmaxes into the final attention output:
     m, l [..., n_pages, G]; acc [..., n_pages, G, D] -> [..., G, D].
@@ -200,6 +209,155 @@ def paged_attention_partials_pallas(
         ],
         interpret=interpret,
     )(page_table, pos, q, k_pages, v_pages)
+
+
+def _kernel_quant(pt_ref, pos_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
+                  m_ref, l_ref, acc_ref, *, scale: float, window: int,
+                  softcap: float, page_size: int):
+    """`_kernel` over int8 pages: identical structure, with the streamed
+    [P, D] code block dequantized in-VMEM by the shared `_dequant_page`
+    cell against the (1, 1) scale block the grid step prefetched alongside
+    it. Everything downstream of the dequant is `_page_partial` verbatim."""
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    G, D = q_ref.shape[2], q_ref.shape[3]
+
+    @pl.when(pt_ref[b, j] != 0)
+    def _compute():
+        kpos = j * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, (1, page_size), 1)[0]
+        m, l, acc = _page_partial(
+            q_ref[0, 0].astype(jnp.float32),
+            _dequant_page(k_ref[0, :, 0, :], ks_ref[0, 0]),
+            _dequant_page(v_ref[0, :, 0, :], vs_ref[0, 0]),
+            kpos, pos_ref[b],
+            scale=scale, window=window, softcap=softcap,
+        )
+        m_ref[0, 0, 0] = m
+        l_ref[0, 0, 0] = l
+        acc_ref[0, 0, 0] = acc
+
+    @pl.when(pt_ref[b, j] == 0)
+    def _neutral():
+        m_ref[0, 0, 0] = jnp.full((G,), NEG_INF, jnp.float32)
+        l_ref[0, 0, 0] = jnp.zeros((G,), jnp.float32)
+        acc_ref[0, 0, 0] = jnp.zeros((G, D), jnp.float32)
+
+
+def paged_attention_partials_quant_pallas(
+    q: jax.Array,           # [B, Hkv, G, D] grouped query (one token/slot)
+    k_pages: jax.Array,     # [N_pages, P, Hkv, D] int8 key code pool
+    v_pages: jax.Array,     # [N_pages, P, Hkv, D] int8 value code pool
+    k_scale: jax.Array,     # [N_pages, Hkv] f32 per-(page, head) key scales
+    v_scale: jax.Array,     # [N_pages, Hkv] f32 value scales
+    page_table: jax.Array,  # [B, n_pages] int32 physical page ids per slot
+    pos: jax.Array,         # [B] int32 per-slot decode position
+    *,
+    window: int = 0,
+    softcap: float = 0.0,
+    scale: float = None,
+    interpret: bool = False,
+):
+    """`paged_attention_partials_pallas` over the int8 page pool: the same
+    (B, Hkv, n_pages) grid streams each [P, D] int8 page PLUS its (1, 1)
+    per-(page, head) scale block through the same table-prefetched index
+    maps (pt[b, j] for the page axis, h for the head axis) and dequantizes
+    in-VMEM — the pool crosses HBM at half the bf16 byte count and is never
+    materialized densely in any precision. (TPU-ideal int8 tiling is
+    (32, 128); the serving page sizes trade that for page granularity,
+    which interpret-mode CI never notices.)"""
+    B, Hkv, G, D = q.shape
+    P = k_pages.shape[1]
+    n_pages = page_table.shape[1]
+    kernel = functools.partial(
+        _kernel_quant, scale=float(scale or D**-0.5), window=int(window),
+        softcap=float(softcap), page_size=P,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # page_table, pos feed the index maps
+        grid=(B, Hkv, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, j, pt, ps: (b, h, 0, 0)),
+            pl.BlockSpec((1, P, 1, D),
+                         lambda b, h, j, pt, ps: (pt[b, j], 0, h, 0)),
+            pl.BlockSpec((1, P, 1, D),
+                         lambda b, h, j, pt, ps: (pt[b, j], 0, h, 0)),
+            pl.BlockSpec((1, 1), lambda b, h, j, pt, ps: (pt[b, j], h)),
+            pl.BlockSpec((1, 1), lambda b, h, j, pt, ps: (pt[b, j], h)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, G), lambda b, h, j, pt, ps: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, 1, G), lambda b, h, j, pt, ps: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, 1, G, D),
+                         lambda b, h, j, pt, ps: (b, h, j, 0, 0)),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hkv, n_pages, G), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, n_pages, G), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, n_pages, G, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(page_table, pos, q, k_pages, v_pages, k_scale, v_scale)
+
+
+def paged_attention_partials_quant_reference(
+    q: jax.Array,           # [B, Hkv, G, D]
+    k_pages: jax.Array,     # [N_pages, P, Hkv, D] int8
+    v_pages: jax.Array,     # [N_pages, P, Hkv, D] int8
+    k_scale: jax.Array,     # [N_pages, Hkv] f32
+    v_scale: jax.Array,     # [N_pages, Hkv] f32
+    page_table: jax.Array,  # [B, n_pages] int32
+    pos: jax.Array,         # [B] int32
+    *,
+    window: int = 0,
+    softcap: float = 0.0,
+):
+    """Pure-jnp form of `paged_attention_partials_quant_pallas`: the same
+    lax.map cell structure as `paged_attention_partials_reference`, with the
+    per-page gather widened to (codes, scale) and dequantized by the SAME
+    `_dequant_page` cell the kernel runs — the only difference from the
+    bf16 reference is that the f32 conversion happens per streamed page
+    under its scale instead of once up front (which is also why the int8
+    pool is gathered as int8: no dense f32 copy ever exists)."""
+    B, Hkv, G, D = q.shape
+    P = k_pages.shape[1]
+    n_pages = page_table.shape[1]
+    part = functools.partial(_page_partial, scale=float(D**-0.5),
+                             window=int(window), softcap=float(softcap))
+    kT = k_pages.transpose(2, 0, 1, 3)  # [Hkv, NP, P, D] int8
+    vT = v_pages.transpose(2, 0, 1, 3)
+    ksT = k_scale.transpose(1, 0)  # [Hkv, NP]
+    vsT = v_scale.transpose(1, 0)
+
+    def slot_cell(t):
+        qb, ptb, pb = t  # [Hkv, G, D], [n_pages], scalar
+
+        def head_cell(th):
+            qh, kh, vh, ksh, vsh = th  # [G,D], [NP,P,D] int8, ..., [NP] f32
+
+            def page(j):
+                kj = _dequant_page(jnp.take(kh, ptb[j], axis=0),
+                                   jnp.take(ksh, ptb[j]))
+                vj = _dequant_page(jnp.take(vh, ptb[j], axis=0),
+                                   jnp.take(vsh, ptb[j]))
+                kpos = j * P + jnp.arange(P, dtype=jnp.int32)
+                m, l, acc = part(qh, kj, vj, kpos, pb)
+                trash = ptb[j] == 0
+                return (jnp.where(trash, NEG_INF, m),
+                        jnp.where(trash, 0.0, l),
+                        jnp.where(trash, jnp.zeros_like(acc), acc))
+
+            return jax.lax.map(page, jnp.arange(n_pages, dtype=jnp.int32))
+
+        return jax.lax.map(head_cell,
+                           (qb.astype(jnp.float32), kT, vT, ksT, vsT))
+
+    return jax.lax.map(
+        slot_cell, (q, page_table.astype(jnp.int32), pos.astype(jnp.int32)))
 
 
 def paged_attention_partials_reference(

@@ -29,6 +29,13 @@ bitwise-identical outputs), `--prefix_cap N` bounds the warm prefix index to
 N entries with LRU whole-prefix eviction, and `--attn window:<W>` overrides
 the arch's attention pattern with a W-token sliding window (`--attn full`
 removes one) — routing prefill through the banded local-attention kernel.
+
+Memory knobs: `--kv_dtype int8` holds the paged page pools as int8 codes
+plus one f32 scale per (page, kv head) (~1.9x KV bytes per slot over bf16;
+prefix sharing and spec decode are forced off — see the engine docstring),
+and `--retire_pages` / `--no-retire_pages` toggles sliding-window page
+retirement (on by default; bitwise-neutral, frees out-of-window pages so a
+shrunk pool admits more concurrent slots).
 """
 from __future__ import annotations
 
@@ -80,6 +87,14 @@ def main(argv=None) -> dict:
                     help="attention-pattern override: 'window:<W>' forces a "
                          "W-token sliding window, 'full' removes the arch's "
                          "window; empty keeps the arch pattern")
+    ap.add_argument("--kv_dtype", default="", choices=["", "int8", "bf16"],
+                    help="KV cache dtype override: int8 = quantized page "
+                         "pools with per-(page, head) scales; empty = the "
+                         "model's param dtype")
+    ap.add_argument("--retire_pages", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="free block-table pages that slid fully out of the "
+                         "attention window (paged + windowed archs only)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -94,6 +109,9 @@ def main(argv=None) -> dict:
             raise SystemExit(
                 f"unknown --attn {args.attn!r} (want 'window:<W>' or 'full')")
     model = Model(cfg)
+    import jax.numpy as jnp
+    model.kv_dtype = {"int8": jnp.int8, "bf16": jnp.bfloat16,
+                      "": None}[args.kv_dtype]
     params = model.init(jax.random.key(args.seed))
     engine = ServeEngine(
         model, params, backend=get_backend(args.backend),
@@ -103,7 +121,8 @@ def main(argv=None) -> dict:
                            share_prefix=args.share_prefix,
                            spec_k=args.spec_k,
                            prefill_chunk=args.prefill_chunk,
-                           prefix_cap=args.prefix_cap))
+                           prefix_cap=args.prefix_cap,
+                           retire_pages=args.retire_pages))
 
     rng = np.random.default_rng(args.seed)
     pl = min(args.prefix_len, args.prompt_len)

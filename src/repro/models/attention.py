@@ -443,11 +443,59 @@ class PagedKVCache(NamedTuple):
         return self.k.shape[0]
 
 
+class QuantPagedKVCache(NamedTuple):
+    """int8 paged KV cache: the page pool of `PagedKVCache` with int8 codes
+    plus one symmetric f32 scale per (page, kv head) — `optim/compression`'s
+    max|x|/127 idiom at page granularity. Scales live in their own
+    [N_pages, Hkv] arrays so the kernel streams one (1, 1) scale block per
+    (page, head) grid step next to the int8 page and dequantizes in-VMEM
+    (dist.sharding.page_scale_spec head-shards them in lockstep with the
+    pools).
+
+    Scale discipline (what keeps outputs batching-invariant):
+      * commit writes a whole page: scale = max over the committed tokens'
+        per-token scales == max|x| over the page, per head;
+      * decode writes one token: the page scale is a RUNNING MAX — when the
+        new token's max|x|/127 exceeds it, the existing codes are
+        requantized under the grown scale (ratio exactly 1.0 otherwise, so
+        untouched codes round-trip bit-exactly);
+      * the engine zeroes the scale rows of freshly ALLOCATED pages
+        (`paged_reset_scales`), so a page recycled through the free list
+        can never leak its previous tenant's scale into the running max.
+    All quantization happens in these commit/update paths — identical jnp
+    programs in every backend's caller context — while the kernels only
+    DEQUANTIZE (the shared `_dequant_page` cell), which is what keeps the
+    three-backend bitwise parity contract intact."""
+
+    k: jax.Array  # [N_pages, page_size, Hkv, D] int8
+    v: jax.Array  # [N_pages, page_size, Hkv, D] int8
+    k_scale: jax.Array  # [N_pages, Hkv] f32
+    v_scale: jax.Array  # [N_pages, Hkv] f32
+
+    @property
+    def page_size(self) -> int:
+        """Tokens per physical page (P)."""
+        return self.k.shape[-3]
+
+    @property
+    def num_pages(self) -> int:
+        """Physical pages in the pool (page 0 is the reserved trash page)."""
+        return self.k.shape[-4]
+
+
 def init_paged_kv_cache(cfg, num_pages: int, page_size: int,
-                        dtype=jnp.bfloat16) -> PagedKVCache:
-    """Zeroed page pool [num_pages, page_size, Hkv, D] (page 0 = trash)."""
+                        dtype=jnp.bfloat16):
+    """Zeroed page pool [num_pages, page_size, Hkv, D] (page 0 = trash);
+    int8 dtype selects the quantized variant with per-(page, head) scales."""
     hd = cfg.resolved_head_dim
     shape = (num_pages, page_size, cfg.n_kv_heads, hd)
+    if dtype == jnp.int8:
+        return QuantPagedKVCache(
+            jnp.zeros(shape, jnp.int8),
+            jnp.zeros(shape, jnp.int8),
+            jnp.zeros((num_pages, cfg.n_kv_heads), jnp.float32),
+            jnp.zeros((num_pages, cfg.n_kv_heads), jnp.float32),
+        )
     return PagedKVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
 
 
@@ -467,9 +515,38 @@ def paged_update_decode(cache: PagedKVCache, k_new, v_new, pos: jax.Array,
     pidx = jnp.clip(pos // P, 0, n_table - 1)
     page_of = jnp.take_along_axis(pages, pidx[:, None], axis=1)[:, 0]  # [B]
     off = pos % P
+    if isinstance(cache, QuantPagedKVCache):
+        k, ks = _quant_page_write(cache.k, cache.k_scale, k_new, page_of, off)
+        v, vs = _quant_page_write(cache.v, cache.v_scale, v_new, page_of, off)
+        return QuantPagedKVCache(k, v, ks, vs)
     k = cache.k.at[page_of, off].set(k_new[:, 0].astype(cache.k.dtype))
     v = cache.v.at[page_of, off].set(v_new[:, 0].astype(cache.v.dtype))
     return PagedKVCache(k, v)
+
+
+def _quant_page_write(pool_q, pool_s, x_new, page_of, off):
+    """One-token int8 page write under the running-max page scale.
+
+    The new token's per-head max|x|/127 is folded into the page's scale; a
+    GROWN scale requantizes the page's existing codes (ratio < 1), while an
+    unchanged scale leaves them bit-exact (round(code * 1.0) == code for
+    |code| <= 127). The token itself is quantized directly against the
+    final scale from full precision — never code-of-code — so the pool's
+    contents are a pure function of the write sequence, which is what makes
+    joined-batch and solo runs bitwise identical. Inactive slots scatter
+    codes AND scale onto trash page 0, which no valid attention reads."""
+    x = x_new[:, 0].astype(jnp.float32)                    # [B, Hkv, D]
+    s_tok = jnp.max(jnp.abs(x), axis=-1) / 127.0           # [B, Hkv]
+    s_old = pool_s[page_of]                                # [B, Hkv]
+    s_new = jnp.maximum(s_old, s_tok)
+    row = pool_q[page_of].astype(jnp.float32)              # [B, P, Hkv, D]
+    ratio = s_old / jnp.maximum(s_new, 1e-9)               # [B, Hkv]
+    row_q = jnp.clip(jnp.round(row * ratio[:, None, :, None]),
+                     -127, 127).astype(jnp.int8)
+    tok_q = jnp.clip(jnp.round(x / jnp.maximum(s_new, 1e-9)[..., None]),
+                     -127, 127).astype(jnp.int8)           # [B, Hkv, D]
+    q2 = pool_q.at[page_of].set(row_q).at[page_of, off].set(tok_q)
+    return q2, pool_s.at[page_of].set(s_new)
 
 
 def paged_commit(pool: PagedKVCache, dense, page_row: jax.Array,
@@ -509,6 +586,76 @@ def paged_commit(pool: PagedKVCache, dense, page_row: jax.Array,
         return dst.at[page_of, off].set(src[0].astype(dst.dtype))
 
     return PagedKVCache(scatter(pool.k, dense.k), scatter(pool.v, dense.v))
+
+
+def quant_paged_commit(pool: QuantPagedKVCache, dense, page_row: jax.Array,
+                       length: jax.Array, seq_len: int) -> QuantPagedKVCache:
+    """`paged_commit` for the int8 pool: scatter a batch-1 per-TOKEN
+    quantized prefill cache (`QuantKVCache`, capacity == seq_len) into the
+    slot's pages under per-PAGE scales.
+
+    The page scale is the max over the page's committed tokens' per-token
+    scales — exactly max|x|/127 over the page per head, since a max of
+    per-token maxima is the page maximum — and each token's codes are
+    requantized from per-token to per-page scale (ratio == 1.0 for the
+    token that set the page max, so it round-trips bit-exactly). Pad
+    positions (t >= length) are masked out of the page max and their
+    (garbage-ratio) codes routed to the trash page; a page whose entire
+    span is pad scatters its scale to the trash page too. Handles the
+    stacked leading layers dim like `paged_commit`."""
+    W = dense.k.shape[-3]
+    assert W == seq_len, (
+        "quant_paged_commit needs a full-capacity prefill cache "
+        f"(Model.prefill(full_cache=True)); got capacity {W} != {seq_len}")
+    P = pool.k.shape[-3]
+    assert W % P == 0, (W, P)
+    n_table = page_row.shape[0]
+    n_rows = W // P
+    t = jnp.arange(W)
+    ok = t < length
+    pidx = jnp.clip(t // P, 0, n_table - 1)
+    page_of = jnp.where(ok, jnp.take(page_row, pidx), 0)  # junk -> trash page
+    off = t % P
+    # destination per TABLE ROW for the scale scatter: rows whose first
+    # position is already pad have no committed tokens -> trash page
+    ridx = jnp.arange(n_rows)
+    row_dst = jnp.where(ridx * P < length,
+                        jnp.take(page_row, jnp.clip(ridx, 0, n_table - 1)), 0)
+    stacked = pool.k.ndim == 5  # [n_super, N_pages, P, Hkv, D]
+
+    def fold(pool_q, pool_s, dq, ds):
+        # ds: per-token scales [(n,) 1, W, Hkv]; dq: codes [(n,) 1, W, Hkv, D]
+        s_tok = jnp.where(ok[:, None], ds[..., 0, :, :], 0.0)
+        s_page = s_tok.reshape(s_tok.shape[:-2] + (n_rows, P, -1)).max(axis=-2)
+        s_tgt = jnp.repeat(s_page, P, axis=-2)             # [(n,) W, Hkv]
+        ratio = ds[..., 0, :, :] / jnp.maximum(s_tgt, 1e-9)
+        codes = jnp.clip(
+            jnp.round(dq[..., 0, :, :, :].astype(jnp.float32)
+                      * ratio[..., None]),
+            -127, 127).astype(jnp.int8)
+        if stacked:
+            return (pool_q.at[:, page_of, off].set(codes),
+                    pool_s.at[:, row_dst].set(s_page))
+        return pool_q.at[page_of, off].set(codes), pool_s.at[row_dst].set(s_page)
+
+    k, ks = fold(pool.k, pool.k_scale, dense.k, dense.k_scale)
+    v, vs = fold(pool.v, pool.v_scale, dense.v, dense.v_scale)
+    return QuantPagedKVCache(k, v, ks, vs)
+
+
+def paged_reset_scales(pool: QuantPagedKVCache,
+                       page_ids: jax.Array) -> QuantPagedKVCache:
+    """Zero the scale rows of `page_ids` — the engine calls this on every
+    page it ALLOCATES to a slot, before the prefill commit, so a page
+    recycled through the free list cannot leak its previous tenant's scale
+    into the decode path's running max (which would make outputs depend on
+    pool history, breaking batching invariance). Trash-page ids (0) in the
+    list are harmless: page 0's scale is never read."""
+    if pool.k.ndim == 5:  # stacked [n_super, N_pages, P, Hkv, D]
+        return pool._replace(k_scale=pool.k_scale.at[:, page_ids].set(0.0),
+                             v_scale=pool.v_scale.at[:, page_ids].set(0.0))
+    return pool._replace(k_scale=pool.k_scale.at[page_ids].set(0.0),
+                         v_scale=pool.v_scale.at[page_ids].set(0.0))
 
 
 def paged_commit_tail(pool: PagedKVCache, dense, page_row: jax.Array,
@@ -595,10 +742,26 @@ def paged_copy_page(pool: PagedKVCache, src: jax.Array,
     device half of the engine's copy-on-write: a write aimed at a page with
     refcount > 1 first duplicates it onto a fresh free-list page and
     redirects the slot's table row, so sharers keep the original bytes.
-    Handles the stacked leading layers dim like `paged_commit`."""
+    Handles the stacked leading layers dim like `paged_commit`. Quant pools
+    copy the scale rows alongside the codes — codes are only meaningful
+    under their page's scale, so the pair moves as one."""
     if pool.k.ndim == 5:  # [n_super, N_pages, P, Hkv, D]
+        if isinstance(pool, QuantPagedKVCache):
+            return QuantPagedKVCache(
+                pool.k.at[:, dst].set(pool.k[:, src]),
+                pool.v.at[:, dst].set(pool.v[:, src]),
+                pool.k_scale.at[:, dst].set(pool.k_scale[:, src]),
+                pool.v_scale.at[:, dst].set(pool.v_scale[:, src]),
+            )
         return PagedKVCache(pool.k.at[:, dst].set(pool.k[:, src]),
                             pool.v.at[:, dst].set(pool.v[:, src]))
+    if isinstance(pool, QuantPagedKVCache):
+        return QuantPagedKVCache(
+            pool.k.at[dst].set(pool.k[src]),
+            pool.v.at[dst].set(pool.v[src]),
+            pool.k_scale.at[dst].set(pool.k_scale[src]),
+            pool.v_scale.at[dst].set(pool.v_scale[src]),
+        )
     return PagedKVCache(pool.k.at[dst].set(pool.k[src]),
                         pool.v.at[dst].set(pool.v[src]))
 
@@ -614,7 +777,18 @@ def paged_decode_attend(cfg, cache: PagedKVCache, q, pos: jax.Array,
     without one, the reference form runs directly. Per-slot validity is
     derived from the page-table position arithmetic inside the shared cell
     program (kernels/paged_attention._page_step), so it can never drift
-    between backends."""
+    between backends. Quant pools route to the int8 form, which streams the
+    per-(page, head) scales next to the codes and dequantizes in-kernel."""
+    if isinstance(cache, QuantPagedKVCache):
+        if backend is not None:
+            return backend.quant_paged_decode_attention(
+                q, cache.k, cache.v, cache.k_scale, cache.v_scale, pages,
+                pos, spec)
+        from repro.kernels import ops
+
+        return ops.quant_paged_decode_attention_ref(
+            q, cache.k, cache.v, cache.k_scale, cache.v_scale, pages, pos,
+            spec)
     if backend is not None:
         return backend.paged_decode_attention(q, cache.k, cache.v, pages,
                                               pos, spec)

@@ -117,10 +117,13 @@ class Model:
         """Paged serving cache (page pools + per-slot `pos`/`pages` state;
         see transformer.init_paged_cache). Defaults to the model's param
         dtype so committed prefill K/V round-trip bitwise — the paged
-        engine's joined==solo parity contract depends on that. The int8
-        quantized cache has no paged variant yet (ring covers it)."""
+        engine's joined==solo parity contract depends on that. With
+        kv_dtype == int8 the pools are QuantPagedKVCache (int8 codes +
+        per-(page, head) f32 scales) and the parity contract holds through
+        the deterministic quantize-on-commit path instead (see
+        attention.QuantPagedKVCache)."""
         if self.kv_dtype == jnp.int8:
-            raise ValueError("paged KV cache has no int8 variant; use ring")
+            dtype = jnp.int8
         return T.init_paged_cache(self.cfg, batch, num_pages, page_size,
                                   table_pages, dtype or self.param_dtype)
 

@@ -284,7 +284,9 @@ def apply_block(
             # the pool is read-only here; returning only the dense tail
             # cache keeps the scan from restacking the whole page pool
             new_cache = {"kv": kv}
-        elif mode == "decode" and isinstance(cache["kv"], attn_lib.PagedKVCache):
+        elif mode == "decode" and isinstance(
+                cache["kv"], (attn_lib.PagedKVCache,
+                              attn_lib.QuantPagedKVCache)):
             # paged decode: PER-SLOT positions ([B]) rotate each slot at its
             # own absolute position and index its own pages — no shared
             # counter, so slots at divergent positions coexist in one batch

@@ -37,8 +37,35 @@ Two cache disciplines, selected by `ServeConfig.cache`:
   inherent to the shared counter and is likewise fixed only by `paged`.
 
 ``cache="auto"`` resolves to `paged` when the arch supports it (attention
--only decoder, no int8 KV quantization) and `ring` otherwise (SSM / RG-LRU
-recurrent state, enc-dec, quantized caches).
+-only decoder — int8-quantized KV included) and `ring` otherwise (SSM /
+RG-LRU recurrent state, enc-dec).
+
+With ``Model.kv_dtype = jnp.int8`` the paged pools hold int8 codes plus one
+symmetric f32 scale per (page, kv head) (`attention.QuantPagedKVCache`):
+prefill commits quantize per page (scale = max|x|/127 over the page's
+committed tokens), decode writes fold each token into a RUNNING-MAX page
+scale (requantize-on-growth; bit-exact when the scale is unchanged), and
+the engine zeroes the scale rows of every page it allocates so a recycled
+page cannot leak its previous tenant's scale into the running max. The
+int8 path keeps the paged discipline's batching invariance bitwise on all
+three backends, but prefix sharing and speculative decode are forced OFF:
+a shared tail prefill would attend over dequantized prefix K/V where the
+solo run saw full precision, and a rejected draft's write can GROW a page
+scale that position truncation cannot shrink back. Ring-int8 stays the
+differential oracle at the token level (per-page vs per-token scales make
+logits close, not bitwise — the documented deviation; see
+serving/README.md).
+
+For sliding-window archs the paged engine also RETIRES pages
+(``ServeConfig.retire_pages``, default on): after each decode round, any
+block-table entry whose whole page span has slid out of the attention
+window is redirected to the trash page and un-pinned — freed for
+re-allocation once no other table row or prefix-index entry references it
+(an aliased prefix page is only un-pinned, never freed under a sharer).
+Out-of-window pages contribute exactly the neutral partial to paged
+attention, which is also what the trash-page skip contributes, so
+retirement is bitwise invisible in the output while lifting slot
+concurrency under long prompts on a shrunk pool.
 
 On top of the paged discipline, two production optimizations (both OFF the
 parity hook — outputs stay bitwise identical to the plain paged run):
@@ -145,6 +172,7 @@ class ServeConfig:
     spec_k: int = 0             # speculative rows per decode step (<=1 = off)
     prefill_chunk: int = 0      # chunked-prefill KV span; 0 = full flash
     prefix_cap: int = 0         # max warm prefix-index entries; 0 = unbounded
+    retire_pages: bool = True   # free fully-out-of-window pages per round
 
 
 @dataclass
@@ -214,18 +242,40 @@ class ServeEngine:
         self.B = cfg.batch_size
         self.max_len = cfg.max_len
         self.backend = get_backend(backend) if backend is not None else None
-        paged_ok = (T.paged_supported(model.cfg)
-                    and model.kv_dtype != jnp.int8)
+        paged_ok = T.paged_supported(model.cfg)
         if cfg.cache == "auto":
             self.cache_mode = "paged" if paged_ok else "ring"
         elif cfg.cache == "paged" and not paged_ok:
             raise ValueError(
                 f"cache='paged' unsupported for {model.cfg.name} "
-                "(recurrent blocks / enc-dec / int8 KV) — use 'ring' or 'auto'")
+                "(recurrent blocks / enc-dec) — use 'ring' or 'auto'")
         elif cfg.cache not in ("paged", "ring"):
             raise ValueError(f"unknown cache mode {cfg.cache!r}")
         else:
             self.cache_mode = cfg.cache
+        self._quant = (self.cache_mode == "paged"
+                       and model.kv_dtype == jnp.int8)
+        if self._quant:
+            if cfg.spec_k > 1:
+                # a rejected draft row's write can GROW a page's running-max
+                # scale; position truncation cannot shrink it back, so spec
+                # output would differ bitwise from plain decode
+                raise ValueError(
+                    "spec_k > 1 is unsupported with int8 KV pools "
+                    "(draft rollback cannot undo a grown page scale)")
+            # a shared-prefix tail prefill attends over DEQUANTIZED prefix
+            # K/V where the solo run saw full precision — not bitwise the
+            # solo logits, so the aliasing optimization is forced off
+            cfg = replace(cfg, share_prefix=False)
+            self.config = cfg
+        # sliding-window page retirement is legal only when EVERY block
+        # masks beyond the window — one full-attention layer still reads
+        # every page. attn_kind is arch-global, so the window is uniform.
+        w = model.cfg.sliding_window
+        windowed = w > 0 and all(
+            k == "local" or model.cfg.attn_kind == "sliding"
+            for k in model.cfg.block_pattern)
+        self._retire_window = w if (cfg.retire_pages and windowed) else 0
         self.prefill_widths: set = set()  # distinct traced prefill widths
         self._decode = jax.jit(make_decode_step(model, self.backend),
                                donate_argnums=(1,))
@@ -251,6 +301,7 @@ class ServeEngine:
             self._tail_prefill: dict = {}   # (tail_w, n_share, kv_len) -> jit
             self._tail_commit: dict = {}    # tail bucket width -> jitted
             self._copy_page = None          # jitted CoW page duplication
+            self._reset_scales = None       # jitted int8 scale-row zeroing
             # per-run allocator state, (re)built by _paged_init:
             self.page_refs = np.zeros(self.num_pages, np.int32)
             self._prefix_index: "OrderedDict" = OrderedDict()
@@ -324,6 +375,9 @@ class ServeEngine:
                     if isinstance(pool, attn_lib.PagedKVCache):
                         return attn_lib.paged_commit(pool, dn, page_row,
                                                      length, width)
+                    if isinstance(pool, attn_lib.QuantPagedKVCache):
+                        return attn_lib.quant_paged_commit(pool, dn, page_row,
+                                                           length, width)
                     if isinstance(pool, dict):
                         return {k: walk(pool[k], dn[k]) for k in pool}
                     if type(pool) is tuple:
@@ -371,6 +425,11 @@ class ServeEngine:
                     if isinstance(pool, attn_lib.PagedKVCache):
                         return attn_lib.paged_commit_tail(
                             pool, dn, page_row, start, length, tail_w)
+                    if isinstance(pool, attn_lib.QuantPagedKVCache):
+                        # unreachable: __init__ forces share_prefix off for
+                        # int8 pools, so no tail prefill is ever committed
+                        raise TypeError(
+                            "tail commit is unsupported for int8 KV pools")
                     if isinstance(pool, dict):
                         return {k: walk(pool[k], dn[k]) for k in pool}
                     if type(pool) is tuple:
@@ -393,7 +452,8 @@ class ServeEngine:
 
             def copy(cache, src, dst):
                 def walk(pool):
-                    if isinstance(pool, attn_lib.PagedKVCache):
+                    if isinstance(pool, (attn_lib.PagedKVCache,
+                                         attn_lib.QuantPagedKVCache)):
                         return attn_lib.paged_copy_page(pool, src, dst)
                     if isinstance(pool, dict):
                         return {k: walk(v) for k, v in pool.items()}
@@ -408,6 +468,87 @@ class ServeEngine:
 
             self._copy_page = jax.jit(copy)
         return self._copy_page
+
+    def _get_reset_scales(self):
+        """Jitted zeroing of the int8 pools' per-(page, head) scale rows for
+        a fixed-size page-id vector — called on every page allocation so a
+        page recycled through the free list cannot leak its previous
+        tenant's running-max scale into the new tenant's decode writes
+        (outputs must be a pure function of the request, not pool
+        history). The id vector is padded to `table_pages` entries with the
+        trash page 0 (whose scale row is never read), keeping the traced
+        shape unique."""
+        if self._reset_scales is None:
+            from repro.models import attention as attn_lib
+
+            def reset(cache, page_ids):
+                def walk(pool):
+                    if isinstance(pool, attn_lib.QuantPagedKVCache):
+                        return attn_lib.paged_reset_scales(pool, page_ids)
+                    if isinstance(pool, dict):
+                        return {k: walk(v) for k, v in pool.items()}
+                    if type(pool) is tuple:
+                        return tuple(walk(x) for x in pool)
+                    return pool
+
+                new = dict(cache)
+                new["blocks"] = walk(cache["blocks"])
+                new["tail"] = walk(cache["tail"])
+                return new
+
+            self._reset_scales = jax.jit(reset)
+        return self._reset_scales
+
+    def _reset_page_scales(self, cache, pages: list):
+        """Zero the scale rows of freshly allocated `pages` (int8 pools
+        only; a bf16 pool has no scales and skips the device call)."""
+        if not self._quant or not pages:
+            return cache
+        ids = np.zeros(self.table_pages, np.int32)  # pad with trash page 0
+        ids[:len(pages)] = pages
+        return self._get_reset_scales()(cache, jnp.asarray(ids))
+
+    # ------------------------------------------------- sliding-window retirement
+    def _retire_window_pages(self, cache, free: list, slot_pages: list,
+                             active: list):
+        """Release every block-table page whose WHOLE span has slid out of
+        the attention window. Page j (tokens [j*P, (j+1)*P)) is dead for
+        the next decode at position p+1 once (j+1)*P - 1 <= p - window —
+        exactly the pages whose every key fails the kernel's
+        `kpos > pos - window` validity test, so their partials are already
+        the neutral element and redirecting the table entry to the trash
+        page is bitwise invisible. Refcount-aware: an aliased prefix page
+        is only un-pinned here and returns to the free list at refcount
+        zero, never under a sharer or a prefix-index pin. Returns
+        (cache, freed_any)."""
+        w = self._retire_window
+        if not w:
+            return cache, False
+        P = self.config.page_size
+        freed = False
+        for i, r in enumerate(active):
+            if r is None:
+                continue
+            p = len(r.prompt) + len(r.out) - 1  # last written position
+            n_dead = (p - w + 1) // P
+            if n_dead <= 0:
+                continue
+            row = self._slot_rows[i]
+            for j in range(n_dead):
+                pg = int(row[j])
+                if pg == 0:
+                    continue
+                row[j] = 0
+                cache["pages"] = cache["pages"].at[i, j].set(0)
+                slot_pages[i].remove(pg)
+                self.page_refs[pg] -= 1
+                if self.page_refs[pg] == 0:
+                    free.append(pg)
+                self.stats["pages_retired"] += 1
+                freed = True
+        if freed:
+            cache = self._sync_refcount(cache)
+        return cache, freed
 
     # ----------------------------------------------- prefix index + refcounts
     def _class_bit(self, bucket: int) -> bool:
@@ -586,7 +727,8 @@ class ServeEngine:
         self.stats = {"prompt_tokens": 0, "prefill_tokens": 0,
                       "prefix_hit_tokens": 0, "prefix_hits": 0,
                       "spec_proposed": 0, "spec_accepted": 0,
-                      "cow_copies": 0,
+                      "cow_copies": 0, "pages_retired": 0,
+                      "decode_rounds": 0, "slot_rounds": 0,
                       "prefix_evictions": self._prefix_evictions}
         nxt = jnp.zeros((self.B, 1), jnp.int32)
         cache, nxt = self._admit_idle_slots(pending, done, cache, nxt,
@@ -617,6 +759,8 @@ class ServeEngine:
                     cache = self._cow_guard(
                         cache, free, slot_pages, i,
                         len(r.prompt) + len(r.out) - 1)
+            self.stats["decode_rounds"] += 1
+            self.stats["slot_rounds"] += sum(r is not None for r in active)
             logits, cache = self._decode(self.params, cache, {"tokens": nxt})
             nxt = greedy(logits)
             nxt_np = np.asarray(nxt)
@@ -636,7 +780,9 @@ class ServeEngine:
                     active[i] = None
                     cache = self._release_slot(cache, free, slot_pages, i)
                     freed = True
-            if freed:
+            cache, retired = self._retire_window_pages(cache, free,
+                                                       slot_pages, active)
+            if freed or retired:
                 cache, nxt = self._admit_idle_slots(pending, done, cache, nxt,
                                                     active, remaining, free,
                                                     slot_pages)
@@ -708,6 +854,8 @@ class ServeEngine:
                 pages_k = np.zeros((k, self.table_pages), np.int32)
                 pages_k[:k_eff] = self._slot_rows[i]
                 cache = self._cow_guard(cache, free, slot_pages, i, p, k_eff)
+                self.stats["decode_rounds"] += 1
+                self.stats["slot_rounds"] += 1
                 sub = {"blocks": cache["blocks"], "tail": cache["tail"],
                        "pos": jnp.asarray(pos_k),
                        "pages": jnp.asarray(pages_k),
@@ -735,11 +883,15 @@ class ServeEngine:
                 # rollback IS this: rows past `a` stay masked behind pos and
                 # are overwritten by the next step's writes
                 cache["pos"] = cache["pos"].at[i].set(p + a + 1)
+                cache, retired = self._retire_window_pages(
+                    cache, free, slot_pages, active)
                 if remaining[i] == 0:
                     r.done = True
                     done.append(r)
                     active[i] = None
                     cache = self._release_slot(cache, free, slot_pages, i)
+                    retired = True
+                if retired:
                     cache, nxt = self._admit_idle_slots(
                         pending, done, cache, nxt, active, remaining, free,
                         slot_pages)
@@ -811,6 +963,10 @@ class ServeEngine:
             row = np.zeros(self.table_pages, np.int32)
             row[:need] = pages
             self._slot_rows[slot] = row
+            # int8 pools: zero the FRESH pages' scale rows before any write
+            # so the recycled pages' stale running-max scales never alter
+            # this request's quantization (aliased prefix pages keep theirs)
+            cache = self._reset_page_scales(cache, pages[n_share:])
             width = self._bucket(L)
             j.entry_width = width
             self.stats["prompt_tokens"] += L

@@ -1,6 +1,7 @@
 """Checkpointing: roundtrip, atomicity, gc, elastic resharding restore."""
 import json
 import shutil
+import threading
 from pathlib import Path
 
 import jax
@@ -51,6 +52,98 @@ def test_manager_keeps_last_k_and_async(tmp_path, tree):
     assert steps == [3, 4]
     out, step = mgr.restore_latest(tree)
     assert step == 4
+
+
+def test_concurrent_writer_threads_share_one_dir(tmp_path):
+    """Regression: the tmp dir was keyed by os.getpid() only and a
+    pre-existing tmp was rmtree'd, so two supervisor worker THREADS saving
+    the same step into one ckpt_dir deleted each other's in-flight writes
+    and committed torn checkpoints. With per-writer (pid, thread, uuid)
+    keys every save must succeed and the committed step must be EXACTLY one
+    writer's tree — never a mix."""
+    n = 6
+    trees = [{"w": jnp.full((16, 16), float(i)), "tag": jnp.int32(i)}
+             for i in range(n)]
+    start = threading.Barrier(n)
+    errors = []
+
+    def writer(i):
+        try:
+            start.wait()
+            for _ in range(5):  # repeat to widen the race window
+                save_checkpoint(tmp_path, 11, trees[i])
+        except Exception as e:  # noqa: BLE001 — the race manifested as
+            errors.append(e)    # FileNotFoundError/NotADirectoryError here
+
+    threads = [threading.Thread(target=writer, args=(i,)) for i in range(n)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors
+    out, step = restore_checkpoint(tmp_path, trees[0])
+    assert step == 11
+    # atomicity: the winner is some single writer, bit-for-bit
+    winner = int(np.asarray(out["tag"]))
+    np.testing.assert_array_equal(np.asarray(out["w"]),
+                                  np.asarray(trees[winner]["w"]))
+    # no tmp litter survives the concurrent saves' renames
+    stale = [p for p in tmp_path.iterdir() if p.name.startswith(".tmp_")]
+    assert stale == [], stale
+
+
+def test_concurrent_distinct_steps_all_commit(tmp_path, tree):
+    """Different workers checkpointing DIFFERENT steps into one directory
+    (the ROADMAP shared-ckpt_dir scenario) must all commit restorable
+    checkpoints."""
+    steps = list(range(1, 7))
+    start = threading.Barrier(len(steps))
+    errors = []
+
+    def writer(s):
+        try:
+            start.wait()
+            save_checkpoint(tmp_path, s, {"s": jnp.int32(s)})
+        except Exception as e:  # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=writer, args=(s,)) for s in steps]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors
+    assert latest_step(tmp_path) == 6
+    for s in steps:
+        out, got = restore_checkpoint(tmp_path, {"s": jnp.int32(0)}, step=s)
+        assert got == s and int(np.asarray(out["s"])) == s
+
+
+def test_save_nonzero_host_id_restores(tmp_path, tree):
+    """A checkpoint saved with host_id != 0 must restore: restore follows
+    the manifest-declared shard file instead of hardcoding shard_h0.npz."""
+    save_checkpoint(tmp_path, 5, tree, host_id=3)
+    d = tmp_path / "step_00000005"
+    assert (d / "shard_h3.npz").exists()
+    assert not (d / "shard_h0.npz").exists()
+    out, step = restore_checkpoint(tmp_path, tree)
+    assert step == 5
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_restore_pre_shards_manifest_falls_back(tmp_path, tree):
+    """Manifests written before the "shards" field (no such key) still
+    restore via the old shard_h0.npz default."""
+    save_checkpoint(tmp_path, 2, tree)
+    d = tmp_path / "step_00000002"
+    manifest = json.loads((d / "manifest.json").read_text())
+    manifest.pop("shards")
+    (d / "manifest.json").write_text(json.dumps(manifest))
+    out, step = restore_checkpoint(tmp_path, tree)
+    assert step == 2
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
 
 
 def test_elastic_restore_onto_new_mesh(tmp_path, tree):

@@ -7,6 +7,7 @@ drift, retry pass-through — so each contract gets pinned here on its own.
 """
 import json
 import statistics
+import threading
 import time
 
 import pytest
@@ -54,6 +55,44 @@ def test_heartbeat_corrupt_or_foreign_degrades_to_no_beat(tmp_path, content):
 
 def test_heartbeat_missing_file_reads_none(tmp_path):
     assert Heartbeat(tmp_path / "never_written.json").read() is None
+
+
+def test_heartbeat_concurrent_thread_beats_never_race(tmp_path):
+    """Regression: beat()'s tmp file was keyed by os.getpid() only, so
+    concurrent beacons from threads in ONE process (the supervisor's
+    worker model) raced on the same .tmpPID file — a replace() could throw
+    FileNotFoundError on a tmp another thread had already consumed, or
+    publish a half-written record. Per-writer unique tmp names make every
+    beat succeed and every read see a complete record."""
+    hb = Heartbeat(tmp_path / "hb.json", host_id=1)
+    n = 6
+    start = threading.Barrier(n)
+    errors = []
+
+    def beater(i):
+        try:
+            start.wait()
+            for step in range(25):
+                hb.beat(i * 100 + step)
+        except Exception as e:  # noqa: BLE001 — the race surfaced here
+            errors.append(e)
+
+    threads = [threading.Thread(target=beater, args=(i,)) for i in range(n)]
+    for t in threads:
+        t.start()
+    # concurrent reads must always see a full record or (never) None —
+    # replace() is atomic, so no partial JSON is ever visible
+    for _ in range(50):
+        rec = hb.read()
+        assert rec is None or ("step" in rec and "time" in rec)
+    for t in threads:
+        t.join()
+    assert not errors, errors
+    rec = hb.read()
+    assert rec is not None and rec["host"] == 1
+    # no tmp litter: every beat's tmp was consumed by its own replace()
+    stale = [p for p in tmp_path.iterdir() if ".tmp" in p.name]
+    assert stale == [], stale
 
 
 # ------------------------------------------------------- StragglerMonitor

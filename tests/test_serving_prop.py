@@ -15,7 +15,12 @@ refcount equals its block-table occurrences plus prefix-index pins, and the
 free list is exactly the zero-refcount pages — pages never leak and never
 double-free) and exclusive-write safety (after the copy-on-write guard, a
 slot's write-target page always has refcount 1, so a shared page is never
-written in place).
+written in place). A sliding-window variant interleaves page RETIREMENT
+with sharing and asserts no in-window page is ever dropped while the same
+ledger keeps balancing, and an int8 differential suite replays randomized
+schedules through the paged-int8 engine against the ring-int8 oracle
+(token streams equal; logits deliberately NOT compared bitwise — per-page
+vs per-token scales).
 
 Importorskip-guarded like the other hypothesis suites; `REPRO_TEST_BACKENDS`
 (comma-separated) restricts the swept backends for the CI backend-matrix
@@ -425,6 +430,204 @@ def test_block_sparse_parity_bitwise(seed, hkv, g, s, window, mask_p):
         got = np.asarray(get_backend(name).block_sparse_attention(
             q, k, v, pos, pos, rmask, spec))
         np.testing.assert_array_equal(got, want, err_msg=f"{name} {spec}")
+
+
+@settings(deadline=None, max_examples=100)
+@given(
+    seed=st.integers(0, 10_000),
+    hkv=st.sampled_from([1, 2, 3]),
+    g=st.sampled_from([1, 2]),
+    d=st.sampled_from([4, 8]),
+    page=st.sampled_from([2, 4, 8]),
+    n_table=st.integers(1, 4),
+    window=st.sampled_from([0, 3, 9]),
+    softcap=st.sampled_from([0.0, 15.0]),
+)
+def test_quant_paged_decode_parity_bitwise(seed, hkv, g, d, page, n_table,
+                                           window, softcap):
+    """Backend.quant_paged_decode_attention: reference == pallas ==
+    pallas_sharded to the BIT over randomized int8 code pools, per-(page,
+    head) scales (zero-scale rows included — a freshly reset page must
+    dequantize to exact zeros, the trash-page neutral), block tables with
+    repeated and trash pages, per-slot positions, windows, and softcap."""
+    spec = AttnSpec(True, window, softcap)
+    n_pool = 2 * n_table + 2
+    ks = jax.random.split(jax.random.key(seed), 6)
+    q = jax.random.normal(ks[0], (2, 1, hkv * g, d))
+    kp = jax.random.randint(ks[1], (n_pool, page, hkv, d), -127, 128
+                            ).astype(jnp.int8)
+    vp = jax.random.randint(ks[2], (n_pool, page, hkv, d), -127, 128
+                            ).astype(jnp.int8)
+    # scales in (0, 0.1], with some rows zeroed like freshly reset pages
+    sc = jax.random.split(ks[3], 2)
+    kscale = jax.random.uniform(sc[0], (n_pool, hkv)) * 0.1
+    vscale = jax.random.uniform(sc[1], (n_pool, hkv)) * 0.1
+    kscale = kscale.at[1].set(0.0)
+    pt = jax.random.randint(ks[4], (2, n_table), 0, n_pool).astype(jnp.int32)
+    pos = jax.random.randint(ks[5], (2,), 0, n_table * page).astype(jnp.int32)
+    want = np.asarray(get_backend("reference").quant_paged_decode_attention(
+        q, kp, vp, kscale, vscale, pt, pos, spec))
+    assert np.all(np.isfinite(want))
+    for name in NONREF:
+        got = np.asarray(get_backend(name).quant_paged_decode_attention(
+            q, kp, vp, kscale, vscale, pt, pos, spec))
+        np.testing.assert_array_equal(got, want, err_msg=f"{name} {spec}")
+
+
+@functools.lru_cache(maxsize=1)
+def _int8_models():
+    """One reduced attention-only model + params, wrapped twice (paged-int8
+    engine under test, ring-int8 oracle) for the engine differential fuzz."""
+    from repro.configs import get_config, reduced
+    from repro.models import Model
+
+    cfg = reduced(get_config("olmo-1b"))
+    paged = Model(cfg)
+    paged.kv_dtype = jnp.int8
+    params = paged.init(jax.random.key(0))
+    ring = Model(cfg)
+    ring.kv_dtype = jnp.int8
+    return cfg, paged, ring, params
+
+
+@settings(deadline=None, max_examples=5)
+@given(seed=st.integers(0, 10_000))
+def test_int8_paged_matches_ring_engine_differential(seed):
+    """Differential engine fuzz: random admit/decode/finish schedules
+    (staggered prompt lengths and budgets, mid-stream joins) through the
+    paged-int8 engine emit the SAME token streams as each request run solo
+    through the ring-int8 oracle, on every selected backend. Tokens only —
+    per-PAGE scales (paged) vs per-TOKEN scales (ring) quantize the same
+    K/V differently, so logits agree closely but not bitwise (the
+    documented deviation; serving/README.md)."""
+    from repro.serving.engine import Request, ServeConfig, ServeEngine
+
+    cfg, paged_model, ring_model, params = _int8_models()
+    rng = np.random.default_rng(seed)
+    reqs = [(rng.integers(0, cfg.vocab_size,
+                          int(rng.integers(1, 14))).astype(np.int32),
+             int(rng.integers(1, 7)))
+            for _ in range(int(rng.integers(3, 7)))]
+    for name in _SEL:
+        bk = get_backend(name)
+        eng = ServeEngine(paged_model, params, backend=bk,
+                          config=ServeConfig(batch_size=2, max_len=24,
+                                             cache="paged", page_size=4))
+        done = eng.run([Request(i, p.copy(), b)
+                        for i, (p, b) in enumerate(reqs)])
+        assert len(done) == len(reqs)
+        oracle = ServeEngine(ring_model, params, backend=bk,
+                             config=ServeConfig(batch_size=1, max_len=24,
+                                                cache="ring"))
+        for r in sorted(done, key=lambda r: r.uid):
+            p, b = reqs[r.uid]
+            solo = oracle.run([Request(99, p.copy(), b)])[0]
+            assert r.out == solo.out, (name, r.uid, r.out, solo.out)
+
+
+def _windowed_alloc_engine():
+    """Allocator-only paged engine over a SLIDING-WINDOW arch (window 8 —
+    small enough that pages retire inside max_len) with every jitted model
+    stage stubbed out: what remains is the free list, refcounts, prefix
+    index, block-table rows, and the window-retirement walk."""
+    import dataclasses
+
+    from repro.configs import get_config, reduced
+    from repro.models import Model
+    from repro.serving.engine import ServeConfig, ServeEngine
+
+    cfg = dataclasses.replace(reduced(get_config("starcoder2-3b")),
+                              sliding_window=8)
+    assert cfg.attn_kind == "sliding"
+    eng = ServeEngine(Model(cfg), None, backend=None,
+                      config=ServeConfig(batch_size=2, max_len=32,
+                                         cache="paged", page_size=4))
+    assert eng._retire_window == 8
+    logits = jnp.zeros((1, 1, cfg.vocab_size))
+    eng._get_paged_prefill = lambda w: (lambda p, t, lp: (logits, None))
+    eng._get_paged_commit = lambda w: (lambda c, d, row, L: c)
+    eng._get_tail_prefill = lambda tw, ns, kv: (
+        lambda p, t, c, row, lp: (logits, None))
+    eng._get_tail_commit = lambda tw: (lambda c, d, row, s, L: c)
+    eng._get_copy_page = lambda: (lambda c, s, d: c)
+    return cfg, eng
+
+
+@settings(deadline=None, max_examples=20)
+@given(seed=st.integers(0, 10_000))
+def test_window_retirement_invariants(seed):
+    """Sliding-window retirement fuzz, interleaved with prefix sharing:
+    after every retirement pass (a) NO in-window page was dropped — every
+    block-table entry covering any position a future decode can still
+    attend stays mapped; (b) exactly the dead span is unmapped — entries
+    whose whole page fell out of the window are back on the trash page; and
+    (c) the ownership ledger still balances (refcount == table occurrences
+    + index pins, free list == the zero-refcount pages) — a retired page
+    aliased by a sharer or pinned by the prefix index is un-pinned, never
+    freed."""
+    from repro.serving.engine import Request
+
+    rng = np.random.default_rng(seed)
+    cfg, eng = _windowed_alloc_engine()
+    P = eng.config.page_size
+    w = eng._retire_window
+    base = rng.integers(1, 50, 3 * P).astype(np.int32)
+    reqs = []
+    for u in range(int(rng.integers(3, 7))):
+        npfx = int(rng.integers(0, 4)) * P
+        tail = rng.integers(1, 50, int(rng.integers(1, 10))).astype(np.int32)
+        prompt = np.concatenate([base[:npfx], tail])
+        budget = int(rng.integers(1, eng.max_len - len(prompt) + 1))
+        reqs.append(Request(u, prompt, budget))
+    pending, done = list(reqs), []
+    cache, nxt, free, slot_pages, active, remaining = eng._paged_init(
+        pending, done)
+    _check_conservation(eng, free, slot_pages)
+    steps = 0
+    while any(r is not None for r in active):
+        steps += 1
+        assert steps < 500, "schedule failed to drain"
+        for i, r in enumerate(active):
+            if r is None:
+                continue
+            wpos = len(r.prompt) + len(r.out) - 1
+            cache = eng._cow_guard(cache, free, slot_pages, i, wpos)
+            r.out.append(int(rng.integers(1, 50)))
+            remaining[i] -= 1
+        freed = False
+        for i, r in enumerate(active):
+            if r is not None and remaining[i] == 0:
+                r.done = True
+                done.append(r)
+                active[i] = None
+                cache = eng._release_slot(cache, free, slot_pages, i)
+                freed = True
+        cache, retired = eng._retire_window_pages(cache, free, slot_pages,
+                                                  active)
+        _check_conservation(eng, free, slot_pages)
+        for i, r in enumerate(active):
+            if r is None:
+                continue
+            p = len(r.prompt) + len(r.out) - 1
+            n_dead = max(0, (p - w + 1) // P)
+            row = eng._slot_rows[i]
+            # (a) in-window pages stay mapped; (b) the dead span is trash
+            assert all(int(row[j]) == 0 for j in range(n_dead))
+            need = -(-(len(r.prompt) + r.max_new) // P)
+            assert all(int(row[j]) != 0 for j in range(n_dead, need))
+        if freed or retired:
+            cache, nxt = eng._admit_idle_slots(
+                pending, done, cache, nxt, active, remaining, free,
+                slot_pages)
+            _check_conservation(eng, free, slot_pages)
+    assert not pending and len(done) == len(reqs)
+    # retirement must actually fire unless no request was ever ACTIVE at a
+    # position deep enough to kill a whole page (a request is last seen by
+    # the retirement pass at position len(prompt) + max_new - 2; budget-1
+    # requests drain on their own prefill and are never active at all)
+    assert eng.stats["pages_retired"] > 0 or all(
+        r.max_new < 2 or len(r.prompt) + r.max_new - 2 < w + P - 1
+        for r in reqs)
 
 
 @functools.lru_cache(maxsize=1)

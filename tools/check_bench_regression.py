@@ -28,8 +28,10 @@ import sys
 
 # higher-is-better metrics beyond the rate-suffix rule: deterministic
 # engine/session-counted ratios (prefix-share work counters, the streaming
-# warm-vs-retrain constructor speedup)
-_EXTRA_METRICS = ("hit_rate", "work_ratio", "warm_constructor_speedup")
+# warm-vs-retrain constructor speedup, the int8 pool-bytes reduction, and
+# the window-retirement slot-concurrency lift)
+_EXTRA_METRICS = ("hit_rate", "work_ratio", "warm_constructor_speedup",
+                  "kv_bytes_ratio", "retire_conc_lift")
 
 
 def _is_rate(metric: str) -> bool:
